@@ -1,0 +1,52 @@
+"""Paper Figure 1 analog: component-size distribution of the thresholded
+covariance graph across lambda, for three microarray-like examples.
+
+Emits CSV rows (example, lambda, size, count) — the exact data behind the
+paper's heatmap — plus summary stats (n_components, max_comp per lambda).
+The lambda range per example is chosen exactly as in the paper: from the
+sorted |S_ij| values down to the smallest lambda whose maximal component
+stays under a cap.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def run(cap: int = 300, n_lambdas: int = 12, log=print) -> list[dict]:
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import component_size_distribution, lambda_for_max_component
+    from repro.covariance import microarray_like, sample_correlation
+
+    examples = {
+        "A-like": (62, 800),
+        "B-like": (100, 1500),
+        "C-like": (80, 2500),
+    }
+    out = []
+    for name, (n, p) in examples.items():
+        X = microarray_like(n, p, seed=hash(name) % 2**31)
+        R = np.asarray(sample_correlation(jnp.asarray(X)))
+        lam_min = lambda_for_max_component(R, cap)
+        lam_hi = 1.0  # correlation input: all isolated at lambda >= 1
+        lams = np.linspace(lam_min * 1.0005, lam_hi * 0.999, n_lambdas)
+        dist = component_size_distribution(R, lams)
+        for d in dist:
+            out.append(
+                {
+                    "example": name, "lambda": d["lambda"],
+                    "n_components": d["n_components"], "max_comp": d["max_comp"],
+                    "sizes": d["sizes"].tolist(), "counts": d["counts"].tolist(),
+                }
+            )
+        log(f"{name}: lambda in [{lam_min:.3f}, 1.0), max_comp at lam_min+ = "
+            f"{dist[0]['max_comp']} (cap {cap}), components {dist[0]['n_components']} "
+            f"-> {dist[-1]['n_components']} (isolated at lambda->1)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

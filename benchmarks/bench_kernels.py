@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — correctness-path
+timing only) vs the pure-jnp oracle vs, where meaningful, the XLA-native
+composition.  On-TPU numbers come from the same harness with interpret=False.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(log=print) -> list[dict]:
+    from repro.kernels.covgram.ops import covgram
+    from repro.kernels.covgram.ref import covgram_ref
+    from repro.kernels.prox_l1.ops import prox_step
+    from repro.kernels.prox_l1.ref import prox_step_ref
+    from repro.kernels.threshold_cc.ops import labelprop_step
+    from repro.kernels.threshold_cc.ref import labelprop_step_ref
+
+    rng = np.random.default_rng(0)
+    out = []
+
+    x = jnp.asarray(rng.standard_normal((2048, 512)), jnp.float32)
+    for name, fn in (("covgram_pallas_interp", covgram), ("covgram_ref", covgram_ref)):
+        us = _time(fn, x) * 1e6
+        out.append({"bench": name, "us_per_call": round(us, 1)})
+        log(f"{name:26s} {us:12.1f} us")
+
+    S = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+    labels = jnp.arange(1024, dtype=jnp.int32)
+    for name, fn in (
+        ("labelprop_pallas_interp", lambda: labelprop_step(S, labels, 0.5)),
+        ("labelprop_ref", lambda: labelprop_step_ref(S, labels, 0.5)),
+    ):
+        us = _time(fn) * 1e6
+        out.append({"bench": name, "us_per_call": round(us, 1)})
+        log(f"{name:26s} {us:12.1f} us")
+
+    theta = jnp.asarray(rng.standard_normal((8, 256, 256)), jnp.float32)
+    grad = jnp.asarray(rng.standard_normal((8, 256, 256)), jnp.float32)
+    for name, fn in (
+        ("prox_pallas_interp", lambda: prox_step(theta, grad, 0.1, 0.3)),
+        ("prox_ref", lambda: prox_step_ref(theta, grad, 0.1, 0.3)),
+    ):
+        us = _time(fn) * 1e6
+        out.append({"bench": name, "us_per_call": round(us, 1)})
+        log(f"{name:26s} {us:12.1f} us")
+    return out
+
+
+if __name__ == "__main__":
+    run()

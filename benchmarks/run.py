@@ -1,0 +1,87 @@
+"""Benchmark harness — one module per paper table/figure + the kernel
+microbench + the LM dry-run roofline summary.  Prints ``name,us_per_call,
+derived`` CSV rows at the end for machine consumption.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller Table-1 grid")
+    args = ap.parse_args()
+
+    rows = []
+
+    print("=" * 72)
+    print("Table 1 analog: screen vs no-screen, synthetic blocks (Section 4.1)")
+    print("=" * 72)
+    from benchmarks import bench_table1
+
+    grid = [(2, 40), (5, 30)] if args.quick else None
+    for r in bench_table1.run(rows=grid):
+        rows.append((f"table1/K{r['K']}p{r['p1']}/{r['lambda']}/{r['solver']}",
+                     r["with_screen_s"] * 1e6, f"speedup={r['speedup']}"))
+
+    print("=" * 72)
+    print("Tables 2-3 analog: microarray-like lambda grids (Section 4.2)")
+    print("=" * 72)
+    from benchmarks import bench_table23
+
+    for r in bench_table23.run():
+        key = f"table{r['table']}/" + (r.get("regime") or r.get("example", ""))
+        rows.append((key, (r.get("with_screen_s") or r.get("avg_solve_s", 0)) * 1e6,
+                     f"max_comp={r['avg_max_component']:.0f}"))
+
+    print("=" * 72)
+    print("Figure 1 analog: component-size profile across lambda")
+    print("=" * 72)
+    from benchmarks import bench_fig1
+
+    fig_rows = bench_fig1.run(cap=200, n_lambdas=8)
+    for name in ("A-like", "B-like", "C-like"):
+        sub = [r for r in fig_rows if r["example"] == name]
+        rows.append((f"fig1/{name}", 0.0,
+                     f"ncomp_range={sub[0]['n_components']}..{sub[-1]['n_components']}"))
+
+    print("=" * 72)
+    print("Kernel microbenchmarks (interpret-mode on CPU)")
+    print("=" * 72)
+    from benchmarks import bench_kernels
+
+    for r in bench_kernels.run():
+        rows.append((f"kernels/{r['bench']}", r["us_per_call"], ""))
+
+    print("=" * 72)
+    print("LM pillar: dry-run roofline summary (see EXPERIMENTS.md for full table)")
+    print("=" * 72)
+    dry = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    if dry.exists():
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+        from repro.launch.roofline import load_records, roofline_row
+
+        recs = [roofline_row(r) for r in load_records()]
+        ok = [r for r in recs if r["status"] == "ok"]
+        print(f"cells ok={len(ok)} skipped={sum(1 for r in recs if r['status']=='skipped')}")
+        for r in ok:
+            if r["mesh"] == "single" and r["shape"] == "train_4k":
+                print(f"  {r['arch']:24s} dominant={r['dominant']:10s} "
+                      f"useful={r['useful_ratio']:.2f} frac={r['roofline_frac']:.3f}")
+                rows.append((f"roofline/{r['arch']}/train_4k",
+                             r["compute_s"] * 1e6, f"dominant={r['dominant']}"))
+
+    print()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

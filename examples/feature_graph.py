@@ -1,0 +1,60 @@
+"""Bridging example: the paper's technique applied to an LM analysis task.
+
+Estimates a sparse dependency graph over a trained (here: randomly
+initialized, reduced) LM's residual-stream features: collect activations
+over a token stream, form the feature correlation matrix, and run the exact
+screening + blockwise graphical lasso.  This is the workload where the two
+pillars of this framework meet (DESIGN.md Section 4): d_model-sized
+covariance graphs are exactly the p ~ thousands regime the paper unlocks.
+
+    PYTHONPATH=src python examples/feature_graph.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.core import glasso, lambda_for_max_component
+from repro.covariance import sample_correlation
+from repro.data.specs import make_batch
+from repro.models import transformer as tfm
+from repro.models.zoo import build_model
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("granite_3_8b").reduced(), dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+
+    # collect residual-stream activations over a few batches
+    shape = ShapeConfig("probe", seq_len=64, global_batch=4, kind="prefill")
+    acts = []
+    for seed in range(4):
+        batch = make_batch(cfg, shape, seed=seed)
+        x, _, _ = tfm.backbone_apply(params, cfg, batch, mode="causal")
+        acts.append(np.asarray(x, np.float64).reshape(-1, cfg.d_model))
+    A = np.concatenate(acts)        # (tokens, d_model)
+    print(f"activation matrix: {A.shape}")
+
+    R = np.asarray(sample_correlation(jnp.asarray(A)))
+    lam = lambda_for_max_component(R, 24) * 1.0005
+    res = glasso(R, lam, solver="admm", tol=1e-7)
+    print(f"lambda={lam:.3f}: {res.screen.n_components} feature modules, "
+          f"max size {res.screen.max_comp}, solve {res.solve_seconds:.2f}s")
+    nnz = int((np.abs(res.Theta) > 1e-8).sum() - cfg.d_model)
+    print(f"precision-graph edges: {nnz // 2} "
+          f"({nnz / (cfg.d_model * (cfg.d_model - 1)):.2%} dense)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""END-TO-END DRIVER (the paper's kind: large-scale optimization).
+
+Full production pipeline on one box:
+  raw samples -> streaming covariance (Pallas covgram twin) -> exact
+  screening (Theorem 1) -> LPT scheduling of components onto the device
+  mesh -> zero-communication distributed block solves (shard_map) ->
+  assembled precision matrix -> KKT verification.
+
+On a pod, the same code runs with make_production_mesh(); here the mesh is
+the container's single device — the shard_map paths are identical.
+
+    PYTHONPATH=src python examples/large_scale_glasso.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kkt_residual, lambda_for_max_component
+from repro.core.blocks import build_plan
+from repro.core.components import component_lists, partitions_equal
+from repro.core.distributed import distributed_bucket_solve, distributed_components
+from repro.core.schedule import lpt_assign
+from repro.core.solvers import glasso_bcd
+from repro.covariance import microarray_like
+from repro.kernels.covgram.ops import covgram
+
+
+def main():
+    n, p = 80, 1200
+    print(f"generating expression matrix: n={n}, p={p}")
+    X = microarray_like(n, p, seed=7)
+
+    t0 = time.perf_counter()
+    S = np.asarray(covgram(jnp.asarray(X, jnp.float32)))  # Pallas kernel path
+    d = np.sqrt(np.clip(np.diag(S), 1e-12, None))
+    R = (S / np.outer(d, d)).astype(np.float64)
+    np.fill_diagonal(R, 1.0)
+    print(f"covariance via Pallas covgram: {time.perf_counter()-t0:.2f}s")
+
+    p_max = 64  # per-worker capacity
+    lam = lambda_for_max_component(R, p_max) * 1.0005
+    print(f"capacity-bounded lambda (p_max={p_max}): {lam:.4f}")
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    # distributed CC (label-prop, row-sharded) cross-checked against host
+    t0 = time.perf_counter()
+    labels_dist = np.asarray(distributed_components(jnp.asarray(R), lam, mesh))
+    t_cc = time.perf_counter() - t0
+    from repro.core.components import components_from_covariance_host
+
+    assert partitions_equal(labels_dist, components_from_covariance_host(R, lam))
+    comps = component_lists(labels_dist)
+    sizes = [len(c) for c in comps if len(c) > 1]
+    print(f"distributed CC: {t_cc:.2f}s; {len(comps)} components, "
+          f"{len(sizes)} non-trivial, max {max(sizes)}")
+
+    # LPT schedule across (simulated) workers
+    a = lpt_assign(sizes, n_workers=8)
+    print(f"LPT over 8 workers: makespan/mean = {a.balance:.3f}")
+
+    # zero-communication distributed bucket solves
+    plan = build_plan(R, lam, labels_dist)
+    t0 = time.perf_counter()
+    Theta = np.zeros_like(R)
+    Theta[plan.isolated, plan.isolated] = 1.0 / (R[plan.isolated, plan.isolated] + lam)
+    for bucket in plan.buckets:
+        sols = np.asarray(
+            distributed_bucket_solve(bucket.blocks, lam, glasso_bcd, mesh, tol=1e-7)
+        )
+        for comp, sol in zip(bucket.comps, sols):
+            b = len(comp)
+            Theta[np.ix_(comp, comp)] = sol[:b, :b]
+    print(f"distributed block solves: {time.perf_counter()-t0:.2f}s")
+
+    # verify blockwise KKT on the largest few components
+    worst = 0.0
+    for comp in comps[:5]:
+        if len(comp) < 2:
+            continue
+        res = float(kkt_residual(jnp.asarray(R[np.ix_(comp, comp)]),
+                                 jnp.asarray(Theta[np.ix_(comp, comp)]), lam))
+        worst = max(worst, res)
+    print(f"worst blockwise KKT residual (top-5 components): {worst:.2e}")
+    print("OK" if worst < 1e-4 else "FAILED")
+
+
+if __name__ == "__main__":
+    main()

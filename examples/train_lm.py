@@ -1,0 +1,86 @@
+"""LM-pillar end-to-end: train a small decoder LM with the full substrate —
+data pipeline, microbatched+remat train step, AdamW, checkpoints, resume.
+
+Defaults are CPU-feasible (a ~20M-param model, a few hundred steps); pass
+--d-model 768 --layers 12 --vocab 32000 on real hardware for the ~100M
+configuration (same code path).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 150
+"""
+
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs.base import ArchConfig, ShapeConfig
+    from repro.data.synthetic_lm import SyntheticLM
+    from repro.models.zoo import build_model, count_params
+    from repro.optim import adamw, cosine_with_warmup
+    from repro.train.state import init_state
+    from repro.train.step import make_train_step
+    import time
+
+    cfg = ArchConfig(
+        name=f"lm-{args.d_model}d{args.layers}L",
+        family="dense",
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=max(4, args.d_model // 64),
+        n_kv_heads=max(2, args.d_model // 128),
+        d_ff=4 * args.d_model,
+        vocab=args.vocab,
+        dtype="float32",
+    )
+    shape = ShapeConfig("train", seq_len=args.seq, global_batch=args.batch, kind="train")
+    model = build_model(cfg)
+    optimizer = adamw(cosine_with_warmup(3e-4, warmup=20, total=args.steps))
+    state, _ = init_state(model, optimizer, jax.random.key(0))
+    print(f"model {cfg.name}: {count_params(state.params):,} params")
+
+    mgr = CheckpointManager(args.ckpt_dir, every=50)
+    start = 0
+    if args.resume:
+        try:
+            state, start = mgr.restore_latest(state)
+            print(f"resumed at step {start}")
+        except FileNotFoundError:
+            pass
+
+    step_fn = jax.jit(make_train_step(model, optimizer, microbatches=2, remat="none"))
+    data = SyntheticLM(cfg, shape, seed=0)
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        state, metrics = step_fn(state, data.batch_at(step))
+        losses.append(float(metrics["loss"]))
+        if step % 10 == 0:
+            rate = (step - start + 1) * args.batch * args.seq / (time.perf_counter() - t0)
+            print(f"step {step:4d}  loss {losses[-1]:.4f}  ({rate:,.0f} tok/s)")
+        if mgr.should_save(step):
+            mgr.save(int(state.step), state)
+    mgr.save(int(state.step), state, blocking=True)
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"loss {first:.3f} -> {last:.3f} ({'LEARNING' if last < first - 0.1 else 'flat'})")
+
+
+if __name__ == "__main__":
+    main()

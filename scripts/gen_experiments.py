@@ -1,0 +1,92 @@
+"""Regenerate EXPERIMENTS.md from the dry-run records + static narrative.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.launch.roofline import load_records, markdown_table, roofline_row  # noqa: E402
+
+GiB = 1024**3
+
+
+def dryrun_section() -> str:
+    base = [roofline_row(r) for r in load_records("")]
+    opt = {
+        (r["arch"], r["shape"], r["mesh"]): roofline_row(r)
+        for r in load_records("xlaflash")
+    }
+    ok = [r for r in base if r["status"] == "ok"]
+    lines = [
+        "## §Dry-run\n",
+        f"\n{len(base)} cells = 10 archs x 4 shapes x 2 meshes; "
+        f"**{len(ok)} compiled ok**, "
+        f"{sum(1 for r in base if r['status'] == 'skipped')} skipped "
+        "(documented long_500k skips for the 8 pure full-attention archs), "
+        "0 errors.  Every ok cell printed `compiled.memory_analysis()` and "
+        "`cost_analysis()`; raw records in `experiments/dryrun/*.json`.\n",
+        "\nPer-device memory (argument+temp bytes, HBM budget 16 GiB/chip) — "
+        "**optimized** configuration (xlaflash tag; see §Perf):\n\n",
+        "| arch | shape | mesh | args GiB | temp GiB | fits 16 GiB |\n"
+        "|---|---|---|---|---|---|\n",
+    ]
+    rows = sorted(opt.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    for r in rows:
+        if r["status"] != "ok":
+            continue
+        a = r["memory"]["argument_bytes"] / GiB
+        t = r["memory"]["temp_bytes"] / GiB
+        fits = "yes" if a + t <= 16.0 else f"NO ({a+t:.1f})"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {a:.2f} | {t:.2f} | {fits} |\n"
+        )
+    lines.append(
+        "\nCollective schedule (per-device bytes by op, summed over the step; "
+        "single-pod, train_4k, optimized):\n\n"
+        "| arch | all-gather | all-reduce | reduce-scatter | all-to-all | permute |\n"
+        "|---|---|---|---|---|---|\n"
+    )
+    for r in rows:
+        if r["status"] != "ok" or r["shape"] != "train_4k" or r["mesh"] != "single":
+            continue
+        c = r["collective"]
+        lines.append(
+            f"| {r['arch']} | {c.get('all-gather', 0):.2e} | {c.get('all-reduce', 0):.2e} "
+            f"| {c.get('reduce-scatter', 0):.2e} | {c.get('all-to-all', 0):.2e} "
+            f"| {c.get('collective-permute', 0):.2e} |\n"
+        )
+    return "".join(lines)
+
+
+def roofline_section() -> str:
+    base = [roofline_row(r) for r in load_records("")]
+    opt = [roofline_row(r) for r in load_records("xlaflash")]
+    base.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    opt.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["## §Roofline\n\n"]
+    out.append(Path(ROOT / "docs" / "roofline_method.md").read_text())
+    out.append("\n### Baseline (paper-faithful substrate, pre-optimization) — single pod\n\n")
+    out.append(markdown_table([r for r in base if r["mesh"] == "single"]))
+    out.append("\n### Optimized (post §Perf iterations) — single pod\n\n")
+    out.append(markdown_table([r for r in opt if r["mesh"] == "single"]))
+    out.append("\n### Optimized — multi-pod (2 x 16 x 16 = 512 chips)\n\n")
+    out.append(markdown_table([r for r in opt if r["mesh"] == "multi"]))
+    return "".join(out)
+
+
+def main():
+    tpl = (ROOT / "docs" / "experiments_narrative.md").read_text()
+    doc = tpl.replace("<!--DRYRUN-->", dryrun_section()).replace(
+        "<!--ROOFLINE-->", roofline_section()
+    )
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Sharding-aware checkpointing with atomic manifests and elastic restore.
+
+Layout per step:
+    <dir>/step_000123/
+        manifest.json        tree structure, leaf shapes/dtypes, mesh shape,
+                             save timestamp, framework version
+        shard_00000.npz      flat leaf arrays (this host's shards)
+    <dir>/LATEST             atomic pointer file (rename-swapped)
+
+Fault-tolerance contract (DESIGN.md Section 5):
+  * atomicity — a checkpoint becomes visible only when the LATEST pointer is
+    renamed over, after every shard file is fsync'd; a process killed
+    mid-save can never leave a half-readable "latest" checkpoint;
+  * elasticity — restore() takes the *current* device layout and re-shards:
+    leaves are saved unsharded per-host here (single-host container); on a
+    real pod each host writes its local shards and restore re-stitches via
+    jax.make_array_from_single_device_arrays — the manifest records the
+    saved mesh so any new mesh can reshard;
+  * determinism — combined with the counter-based data pipeline, a restore
+    reproduces the exact training trajectory (tested bit-exact in
+    tests/test_fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory, step: int, tree, *, mesh_shape=None) -> Path:
+    directory = Path(directory)
+    tag = f"step_{step:09d}"
+    tmp = directory / f".tmp_{tag}_{os.getpid()}"
+    final = directory / tag
+    tmp.mkdir(parents=True, exist_ok=True)
+
+    names, leaves, _ = _flatten_with_paths(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    with open(tmp / "shard_00000.npz", "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {
+        "step": step,
+        "names": names,
+        "shapes": [list(np.shape(l)) for l in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "mesh_shape": list(mesh_shape) if mesh_shape else None,
+        "time": time.time(),
+    }
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+
+    # atomic LATEST pointer
+    ptr_tmp = directory / f".LATEST_{os.getpid()}"
+    ptr_tmp.write_text(tag)
+    os.replace(ptr_tmp, directory / "LATEST")
+    return final
+
+
+def latest_step(directory) -> int | None:
+    ptr = Path(directory) / "LATEST"
+    if not ptr.exists():
+        return None
+    tag = ptr.read_text().strip()
+    if not (Path(directory) / tag / "manifest.json").exists():
+        return None
+    return int(tag.split("_")[1])
+
+
+def restore_checkpoint(directory, tree_like, *, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``.  ``shardings``, if given,
+    is a matching tree of NamedShardings for the *current* mesh — this is the
+    elastic path: the saved arrays are device_put with the new layout
+    regardless of the mesh they were saved under."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    tag = f"step_{step:09d}"
+    data = np.load(directory / tag / "shard_00000.npz")
+    names, leaves, treedef = _flatten_with_paths(tree_like)
+    restored = []
+    for i, (name, like) in enumerate(zip(names, leaves)):
+        arr = data[f"leaf_{i}"]
+        arr = arr.astype(like.dtype) if hasattr(like, "dtype") else arr
+        restored.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step
+
+
+class CheckpointManager:
+    """Periodic + preemption-triggered saves with a bounded retention set
+    and async (thread-offloaded) writes."""
+
+    def __init__(self, directory, *, every: int = 100, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = Path(directory)
+        self.every = every
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+        self.directory.mkdir(parents=True, exist_ok=True)
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.every == 0
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def _do():
+            save_checkpoint(self.directory, step, host_tree)
+            self._gc()
+
+        self.wait()
+        if self.async_save and not blocking:
+            self._pending = threading.Thread(target=_do, daemon=True)
+            self._pending.start()
+        else:
+            _do()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, tree_like, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.directory, tree_like, shardings=shardings)
+
+    def _gc(self):
+        tags = sorted(
+            (p for p in self.directory.glob("step_*") if p.is_dir()),
+            key=lambda p: p.name,
+        )
+        for p in tags[: -self.keep]:
+            shutil.rmtree(p, ignore_errors=True)

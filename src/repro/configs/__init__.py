@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned arch) + shape registry."""
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig, get_arch, list_archs
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "get_arch", "list_archs"]

@@ -1,0 +1,43 @@
+"""Paper core: exact covariance thresholding into connected components
+(Mazumder & Hastie 2011) wrapped around batched JAX graphical-lasso solvers.
+"""
+
+from repro.core.components import (
+    canonicalize_labels,
+    components_from_covariance_host,
+    connected_components_host,
+    connected_components_labelprop,
+    is_refinement,
+    partitions_equal,
+    threshold_adjacency,
+)
+from repro.core.glasso import GlassoResult, glasso, glasso_path
+from repro.core.partition import (
+    component_size_distribution,
+    lambda_for_max_component,
+    merge_profile,
+)
+from repro.core.screening import thresholded_components
+from repro.core.solvers import SOLVERS, glasso_admm, glasso_bcd, glasso_pg, kkt_residual
+
+__all__ = [
+    "glasso",
+    "glasso_path",
+    "GlassoResult",
+    "thresholded_components",
+    "threshold_adjacency",
+    "connected_components_host",
+    "connected_components_labelprop",
+    "components_from_covariance_host",
+    "canonicalize_labels",
+    "partitions_equal",
+    "is_refinement",
+    "merge_profile",
+    "lambda_for_max_component",
+    "component_size_distribution",
+    "SOLVERS",
+    "glasso_bcd",
+    "glasso_pg",
+    "glasso_admm",
+    "kkt_residual",
+]

@@ -1,0 +1,154 @@
+"""Connected components of the thresholded sample covariance graph.
+
+Three implementations with one contract (labels[i] = component id, canonical =
+smallest vertex index in the component):
+
+``connected_components_host``       numpy union-find with path compression —
+                                    the orchestration-time path (plays the role
+                                    of MATLAB ``graphconncomp`` in the paper).
+``connected_components_labelprop``  pure-JAX min-label propagation + pointer
+                                    jumping, O(log p) rounds of masked min
+                                    reduces — the TPU-native adaptation of
+                                    Tarjan/Gazit (DESIGN.md Section 3).  Works
+                                    directly from S and lambda so the p x p
+                                    adjacency never needs to be materialized by
+                                    the caller.
+``connected_components_distributed``  shard_map row-sharded variant of the
+                                    label-prop iteration for pod-scale p
+                                    (see repro/core/distributed.py).
+
+Plus partition utilities used by the Theorem-1/2 tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Host union-find
+# ---------------------------------------------------------------------------
+
+
+def _find(parent: np.ndarray, i: int) -> int:
+    root = i
+    while parent[root] != root:
+        root = parent[root]
+    while parent[i] != root:  # path compression
+        parent[i], i = root, parent[i]
+    return root
+
+
+def connected_components_host(adj: np.ndarray) -> np.ndarray:
+    """Union-find over a boolean adjacency matrix. Returns canonical labels."""
+    adj = np.asarray(adj)
+    p = adj.shape[0]
+    parent = np.arange(p)
+    ii, jj = np.nonzero(np.triu(adj, 1))
+    for a, b in zip(ii.tolist(), jj.tolist()):
+        ra, rb = _find(parent, a), _find(parent, b)
+        if ra != rb:
+            # union by smaller root index keeps labels canonical-ish; final
+            # pass below canonicalizes regardless.
+            if ra < rb:
+                parent[rb] = ra
+            else:
+                parent[ra] = rb
+    return np.array([_find(parent, i) for i in range(p)])
+
+
+def threshold_adjacency(S: np.ndarray, lam: float) -> np.ndarray:
+    """E_ij = 1[|S_ij| > lambda, i != j]  (paper eq. (4), strict inequality)."""
+    A = np.abs(np.asarray(S)) > lam
+    np.fill_diagonal(A, False)
+    return A
+
+
+def components_from_covariance_host(S: np.ndarray, lam: float) -> np.ndarray:
+    return connected_components_host(threshold_adjacency(S, lam))
+
+
+# ---------------------------------------------------------------------------
+# JAX label propagation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("max_rounds",))
+def connected_components_labelprop(
+    S: jax.Array, lam: jax.Array, *, max_rounds: int | None = None
+) -> jax.Array:
+    """Min-label propagation with pointer jumping, fused with thresholding.
+
+    Each round:
+      1. hook:  l_i <- min(l_i, min_{j : |S_ij|>lam} l_j)   (masked min-reduce)
+      2. jump:  l <- l[l]                                    (pointer doubling)
+    Labels are always vertex indices of a member of one's own component, so the
+    jump step is well-defined.  Converges in O(log p) rounds; the while_loop
+    exits at the first fixed point.  The hook step is the op the
+    ``threshold_cc`` Pallas kernel tiles on TPU.
+    """
+    p = S.shape[0]
+    mask = (jnp.abs(S) > lam) & ~jnp.eye(p, dtype=bool)
+    init = jnp.arange(p, dtype=jnp.int32)
+    big = jnp.int32(p)
+
+    def round_(labels):
+        neigh = jnp.where(mask, labels[None, :], big)
+        labels = jnp.minimum(labels, jnp.min(neigh, axis=1))
+        labels = labels[labels]
+        labels = labels[labels]
+        return labels
+
+    def cond(carry):
+        labels, prev, it = carry
+        limit = max_rounds if max_rounds is not None else p + 2
+        return jnp.logical_and(jnp.any(labels != prev), it < limit)
+
+    def body(carry):
+        labels, _, it = carry
+        return round_(labels), labels, it + 1
+
+    labels, _, _ = jax.lax.while_loop(cond, body, (round_(init), init, jnp.int32(0)))
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Partition utilities
+# ---------------------------------------------------------------------------
+
+
+def canonicalize_labels(labels: np.ndarray) -> np.ndarray:
+    """Relabel so each component's id is its smallest vertex index."""
+    labels = np.asarray(labels)
+    out = np.empty_like(labels)
+    for lab in np.unique(labels):
+        members = np.nonzero(labels == lab)[0]
+        out[members] = members.min()
+    return out
+
+def partitions_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    """Theorem-1 equality: same vertex partition up to label permutation."""
+    return bool(np.array_equal(canonicalize_labels(a), canonicalize_labels(b)))
+
+
+def is_refinement(fine: np.ndarray, coarse: np.ndarray) -> bool:
+    """Theorem-2 nestedness: every class of ``fine`` lies inside one class of
+    ``coarse`` (fine = larger lambda, coarse = smaller lambda)."""
+    fine = canonicalize_labels(fine)
+    coarse = np.asarray(coarse)
+    for lab in np.unique(fine):
+        members = coarse[fine == lab]
+        if not np.all(members == members[0]):
+            return False
+    return True
+
+
+def component_lists(labels: np.ndarray) -> list[np.ndarray]:
+    """Members per component, largest first (scheduling order)."""
+    labels = canonicalize_labels(labels)
+    comps = [np.nonzero(labels == lab)[0] for lab in np.unique(labels)]
+    return sorted(comps, key=lambda c: -len(c))

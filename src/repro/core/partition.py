@@ -1,0 +1,122 @@
+"""Edge-sorted merge profile of the thresholded covariance graph.
+
+The components change *only* at the distinct values of |S_ij| (paper
+Section 4.2), so one pass of incremental union-find over edges sorted by
+decreasing |S_ij| yields, for every threshold, the number of components and the
+maximal component size.  This powers:
+
+  * Figure-1 style component-size profiles across lambda,
+  * ``lambda_for_max_component`` — consequence 5 of Theorem 1: the smallest
+    lambda whose maximal component fits a per-machine capacity p_max,
+  * the lambda_I / lambda_II calibration of the synthetic experiments.
+
+Cost: O(p^2 log p) for the sort + O(p^2 alpha(p)) for the unions — negligible
+next to one glasso solve (paper Section 3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def merge_profile(S: np.ndarray, *, max_edges: int | None = None) -> dict:
+    """Incremental-union merge profile.
+
+    Returns dict of arrays, one row per *distinct* edge value v (descending):
+      value          v
+      n_components   #components of the graph with edges {|S_ij| > lambda}
+      max_comp       maximal component size
+    valid for lambda in [next smaller v, v).  Row 0 is the fictitious
+    lambda >= max|S_ij| regime (all isolated): value=+inf boundary handled by
+    callers via lambda >= value[1].
+    """
+    S = np.asarray(S)
+    p = S.shape[0]
+    iu, ju = np.triu_indices(p, 1)
+    w = np.abs(S[iu, ju])
+    order = np.argsort(-w, kind="stable")
+    if max_edges is not None:
+        order = order[:max_edges]
+    iu, ju, w = iu[order], ju[order], w[order]
+
+    parent = np.arange(p)
+    size = np.ones(p, dtype=np.int64)
+
+    def find(i):
+        root = i
+        while parent[root] != root:
+            root = parent[root]
+        while parent[i] != root:
+            parent[i], i = root, parent[i]
+        return root
+
+    values = [np.inf]
+    n_components = [p]
+    max_comp = [1]
+    ncomp, mx = p, 1
+    k = 0
+    m = w.size
+    while k < m:
+        v = w[k]
+        # insert every edge with this exact value
+        while k < m and w[k] == v:
+            ra, rb = find(iu[k]), find(ju[k])
+            if ra != rb:
+                if size[ra] < size[rb]:
+                    ra, rb = rb, ra
+                parent[rb] = ra
+                size[ra] += size[rb]
+                ncomp -= 1
+                mx = max(mx, int(size[ra]))
+            k += 1
+        values.append(float(v))
+        n_components.append(ncomp)
+        max_comp.append(mx)
+    return {
+        "value": np.asarray(values),
+        "n_components": np.asarray(n_components),
+        "max_comp": np.asarray(max_comp),
+    }
+
+
+def lambda_for_max_component(S: np.ndarray, p_max: int) -> float:
+    """Smallest lambda such that the maximal thresholded component has size
+    <= p_max (paper consequence 5; also the Figure-1 x-axis lower bound).
+
+    The graph at lambda = value[k] *excludes* edges of weight value[k] (strict
+    inequality in eq. (4)), i.e. it has the profile of row k-1... rows are
+    arranged so row k describes lambda in [value[k+1], value[k]).  We return
+    the infimum feasible lambda: the largest edge value v whose insertion
+    pushes max_comp beyond p_max (at lambda = v that edge is excluded, so the
+    constraint still holds).
+    """
+    prof = merge_profile(S)
+    vals, mx = prof["value"], prof["max_comp"]
+    bad = np.nonzero(mx > p_max)[0]
+    if bad.size == 0:
+        return 0.0
+    return float(vals[bad[0]])
+
+
+def component_size_distribution(S: np.ndarray, lambdas: np.ndarray) -> list[dict]:
+    """Figure-1 data: for each lambda, the histogram of component sizes.
+
+    Re-runs union-find once over the sorted edges, snapshotting at each
+    requested lambda (descending order internally)."""
+    from repro.core.components import components_from_covariance_host
+
+    out = []
+    for lam in np.asarray(lambdas):
+        labels = components_from_covariance_host(S, float(lam))
+        _, counts = np.unique(labels, return_counts=True)
+        sizes, freq = np.unique(counts, return_counts=True)
+        out.append(
+            {
+                "lambda": float(lam),
+                "sizes": sizes,
+                "counts": freq,
+                "n_components": int(counts.size),
+                "max_comp": int(counts.max()),
+            }
+        )
+    return out

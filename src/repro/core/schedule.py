@@ -1,0 +1,77 @@
+"""Scheduling components across workers (devices / hosts / pods).
+
+The paper's footnote 4: "Distributing these operations depend upon the number
+of processors available, their capacities ... it is often desirable to club
+smaller components into a single machine."  We make that concrete:
+
+  * cost model: solving a size-b block costs ~ b^3 (Section 3: O(p^J), J=3),
+  * LPT (longest-processing-time) greedy bin packing — 4/3-approximate
+    makespan, ideal for the heavy-tailed component-size distributions Figure 1
+    shows,
+  * capacity check against a per-worker p_max (consequence 5 of Theorem 1):
+    if any component exceeds p_max the scheduler reports the smallest feasible
+    lambda instead of an assignment,
+  * elastic rebalance = re-run on the surviving worker set; assignments are
+    pure functions of (sizes, n_workers) so recovery is deterministic.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def default_cost(b: int) -> float:
+    return float(b) ** 3
+
+
+@dataclass
+class Assignment:
+    worker_of: np.ndarray          # component index -> worker id
+    loads: np.ndarray              # per-worker total cost
+    makespan: float
+    balance: float                 # makespan / mean load (1.0 = perfect)
+
+
+def lpt_assign(sizes, n_workers: int, *, cost=default_cost) -> Assignment:
+    sizes = np.asarray(sizes)
+    order = np.argsort(-sizes, kind="stable")
+    loads = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(loads)
+    worker_of = np.zeros(sizes.size, dtype=np.int64)
+    for idx in order:
+        load, w = heapq.heappop(loads)
+        worker_of[idx] = w
+        heapq.heappush(loads, (load + cost(int(sizes[idx])), w))
+    per = np.zeros(n_workers)
+    for idx, w in enumerate(worker_of):
+        per[w] += cost(int(sizes[idx]))
+    makespan = float(per.max()) if n_workers else 0.0
+    mean = float(per.mean()) if n_workers else 0.0
+    return Assignment(
+        worker_of=worker_of,
+        loads=per,
+        makespan=makespan,
+        balance=makespan / mean if mean > 0 else 1.0,
+    )
+
+
+def feasible_lambda(S: np.ndarray, p_max: int) -> float:
+    """Smallest lambda at which every component fits a p_max-capacity worker
+    (consequence 5). Thin wrapper so schedulers can self-serve."""
+    from repro.core.partition import lambda_for_max_component
+
+    return lambda_for_max_component(S, p_max)
+
+
+def check_capacity(sizes, p_max: int | None) -> None:
+    if p_max is None:
+        return
+    sizes = np.asarray(sizes)
+    if sizes.size and sizes.max() > p_max:
+        raise ValueError(
+            f"component of size {int(sizes.max())} exceeds worker capacity "
+            f"p_max={p_max}; increase lambda (see schedule.feasible_lambda)"
+        )

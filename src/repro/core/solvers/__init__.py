@@ -1,0 +1,30 @@
+"""Graphical-lasso block solvers.
+
+The paper is solver-agnostic (its contribution wraps *any* solver); we ship
+three with one contract — ``solve(S, lam, **opts) -> Theta`` on a (b, b)
+block, jit- and vmap-friendly so same-size component buckets batch onto the
+MXU:
+
+``bcd``   GLASSO block coordinate descent [Friedman et al. 2007] — the
+          paper-faithful baseline.  Row/column sweeps with an inner cyclic
+          coordinate-descent lasso; includes the eq.-(10) node-screening check
+          the paper points out GLASSO 1.4 was missing.
+``pg``    G-ISTA-style proximal gradient — the first-order stand-in for SMACS
+          [Lu 2010] (same O(p^3)-per-iteration complexity class; DESIGN.md
+          Section 3 records the adaptation).
+``admm``  ADMM [Boyd et al. 2011] — eigh-based, the most robust on
+          ill-conditioned blocks; used as the cross-check oracle in tests.
+"""
+
+from repro.core.solvers.admm import glasso_admm
+from repro.core.solvers.bcd import glasso_bcd
+from repro.core.solvers.kkt import kkt_residual
+from repro.core.solvers.pg import glasso_pg
+
+SOLVERS = {
+    "bcd": glasso_bcd,
+    "pg": glasso_pg,
+    "admm": glasso_admm,
+}
+
+__all__ = ["glasso_bcd", "glasso_pg", "glasso_admm", "kkt_residual", "SOLVERS"]

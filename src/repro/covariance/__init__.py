@@ -1,0 +1,28 @@
+"""Covariance substrate: estimators, missing-data handling, synthetic generators.
+
+This is the O(n·p^2) front-end of the paper's pipeline (Section 3: "the cost for
+creating the sample covariance matrix S is O(n p^2)").  The hot Gram computation
+has a Pallas kernel twin in ``repro.kernels.covgram``.
+"""
+
+from repro.covariance.estimators import (
+    impute_missing,
+    sample_correlation,
+    sample_covariance,
+    streaming_covariance,
+)
+from repro.covariance.synthetic import (
+    lambda_interval_for_k,
+    microarray_like,
+    paper_synthetic,
+)
+
+__all__ = [
+    "sample_covariance",
+    "sample_correlation",
+    "streaming_covariance",
+    "impute_missing",
+    "paper_synthetic",
+    "microarray_like",
+    "lambda_interval_for_k",
+]

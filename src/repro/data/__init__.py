@@ -1,0 +1,7 @@
+"""Data substrate: synthetic LM pipeline + batch/spec builders shared by the
+smoke tests, the training driver, and the multi-pod dry-run."""
+
+from repro.data.specs import input_specs, make_batch
+from repro.data.synthetic_lm import SyntheticLM
+
+__all__ = ["input_specs", "make_batch", "SyntheticLM"]

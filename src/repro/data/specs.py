@@ -1,0 +1,91 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and concrete batch builders for
+every (arch x shape) cell.
+
+The dry-run contract: ``input_specs(cfg, shape)`` returns exactly the pytree
+the lowered step function consumes — weak-type-correct, shardable, zero
+allocation.  Decode cells derive their cache specs by eval_shape-ing the
+prefill path at the cell's seq_len, which guarantees the cache structure can
+never drift from what the model actually produces.
+
+Modality stubs: [vlm]/[audio] archs receive precomputed patch/frame
+embeddings here (the assignment treats the frontend as a stub).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tfm
+
+
+def _token_batch_shapes(cfg: ArchConfig, shape: ShapeConfig, *, with_targets: bool):
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    batch = {}
+    if cfg.encoder_decoder:
+        enc_len = min(cfg.enc_len, S)
+        batch["frames"] = ((B, enc_len, cfg.d_model), dtype)
+        batch["tokens"] = ((B, S), jnp.int32)
+        if with_targets:
+            batch["targets"] = ((B, S), jnp.int32)
+    elif cfg.frontend:
+        F = cfg.frontend_len
+        batch["frontend"] = ((B, F, cfg.d_model), dtype)
+        batch["tokens"] = ((B, S - F), jnp.int32)
+        if with_targets:
+            batch["targets"] = ((B, S - F), jnp.int32)
+    else:
+        batch["tokens"] = ((B, S), jnp.int32)
+        if with_targets:
+            batch["targets"] = ((B, S), jnp.int32)
+    return batch
+
+
+def _to_sds(shapes: dict) -> dict:
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: tfm.init_params(k, cfg)[0], jax.random.key(0))
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Cache pytree specs for a decode cell: eval_shape the prefill at this
+    cell's seq_len (KV cache of seq_len, per the assignment)."""
+    params = abstract_params(cfg)
+    prefill_batch = _to_sds(_token_batch_shapes(cfg, shape, with_targets=False))
+    _, caches = jax.eval_shape(
+        lambda p, b: tfm.prefill(p, cfg, b), params, prefill_batch
+    )
+    return caches
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn."""
+    if shape.kind == "train":
+        return _to_sds(_token_batch_shapes(cfg, shape, with_targets=True))
+    if shape.kind == "prefill":
+        return _to_sds(_token_batch_shapes(cfg, shape, with_targets=False))
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "caches": cache_specs(cfg, shape),
+        }
+    raise ValueError(shape.kind)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, *, seed: int = 0) -> dict:
+    """Concrete random batch matching input_specs (smoke tests, examples)."""
+    rng = np.random.default_rng(seed)
+    shapes = _token_batch_shapes(cfg, shape, with_targets=(shape.kind == "train"))
+    out = {}
+    for k, (s, d) in shapes.items():
+        if d == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, size=s), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s), d)
+    return out

@@ -1,0 +1,1 @@
+"""Distribution layer: logical-axis sharding resolver, fault tolerance."""

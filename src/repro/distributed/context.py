@@ -1,0 +1,50 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher activates a ShardingPolicy and the
+model pins its activations through ``constrain(x, names)`` at a few strategic
+points (embedding output, residual stream at layer boundaries, logits).
+
+Why this is load-bearing: with FSDP-sharded weights, XLA's sharding
+propagation is free to push a *weight* axis into the *activation* layout —
+e.g. embed table (vocab->tensor, embed->fsdp) makes the embedding output
+inherit fsdp on d_model, which replicates the batch axis on every device and
+blows per-device activation memory by the dp degree (observed: 22.6 GB/dev
+on a 3B model).  Pinning the residual stream to (batch->dp, seq->sp, embed->
+None) makes XLA all-gather the weights at use instead — i.e. actual FSDP
+semantics.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_ACTIVE = None
+
+
+@contextlib.contextmanager
+def activate(policy):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = policy
+    try:
+        yield policy
+    finally:
+        _ACTIVE = prev
+
+
+def active_policy():
+    return _ACTIVE
+
+
+def constrain(x, names: tuple):
+    """Pin activation x to the active policy's layout for logical dim names
+    ("batch", "seq", "embed", "vocab", "heads", ...).  Identity when no
+    policy is active (tests, single-device examples)."""
+    if _ACTIVE is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    spec = _ACTIVE.act_pspec(names, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE.mesh, spec))

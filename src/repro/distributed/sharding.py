@@ -1,0 +1,191 @@
+"""Logical-axis -> mesh-axis resolution with divisibility fallbacks.
+
+Params carry logical axis names (see models/layers.py); this module turns
+them into PartitionSpecs for a concrete mesh:
+
+  "vocab" / "heads" / "kv" / "mlp" / "expert"  -> the tensor axis ("model")
+  "embed"                                      -> the FSDP axes ("pod","data")
+  "lora" / "layers" / "conv" / "ssm" / ...     -> replicated
+
+A dim is only sharded if its size divides the product of the target axes and
+no axis is consumed twice within one spec — otherwise it silently falls back
+to replication (e.g. kv=8 heads on a 16-way tensor axis).  The same policy
+object also resolves activation batches and per-family KV-cache layouts
+(where the fallback chain is what makes long_500k's batch=1 cells shardable:
+batch unshardable -> the sequence dim absorbs the idle axes).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+TENSOR = "model"
+FSDP = ("pod", "data")   # whichever are present in the mesh, in this order
+
+
+def _present(mesh, axes):
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _axes_size(mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+@dataclass
+class ShardingPolicy:
+    mesh: object
+    # logical name -> candidate mesh-axis groups, tried in order
+    rules: dict = field(default_factory=dict)
+    # replicate weights instead of FSDP-sharding them (hillclimb lever)
+    fsdp: bool = True
+    # decode-time contraction-dim parallelism: replicate the batch axis and
+    # let the FSDP-sharded weight contraction psum activation partials
+    # instead of all-gathering weights (hillclimb lever for decode cells —
+    # activations are tiny per token, weights are not)
+    batch_replicated: bool = False
+
+    def __post_init__(self):
+        if not self.rules:
+            fsdp_axes = _present(self.mesh, FSDP) if self.fsdp else ()
+            self.rules = {
+                "vocab": [(TENSOR,)],
+                "embed": [fsdp_axes] if fsdp_axes else [],
+                "embed_out": [],
+                "heads": [(TENSOR,)],
+                "kv": [(TENSOR,)],
+                "mlp": [(TENSOR,)],
+                "expert": [(TENSOR,)],
+                "lora": [],
+                "layers": [],
+                "conv": [],
+                "ssm": [],
+            }
+
+    # ------------------------------------------------------------- params
+    def param_pspec(self, axes: tuple, shape: tuple) -> P:
+        used: set = set()
+        parts = []
+        for dim, name in zip(shape, axes):
+            pick = None
+            for cand in self.rules.get(name, []):
+                group = tuple(a for a in _present(self.mesh, cand) if a not in used)
+                if group and dim % _axes_size(self.mesh, group) == 0:
+                    pick = group if len(group) > 1 else group[0]
+                    used.update(group)
+                    break
+            parts.append(pick)
+        return P(*parts)
+
+    def param_shardings(self, specs_tree, shapes_tree):
+        is_spec = lambda x: isinstance(x, tuple) and all(
+            isinstance(t, (str, type(None))) for t in x
+        )
+        return jax.tree.map(
+            lambda ax, shp: NamedSharding(self.mesh, self.param_pspec(ax, shp.shape)),
+            specs_tree,
+            shapes_tree,
+            is_leaf=is_spec,
+        )
+
+    # -------------------------------------------------------- activations
+    def dp_axes(self) -> tuple:
+        return _present(self.mesh, FSDP)
+
+    def batch_pspec(self, shape: tuple) -> P:
+        """Leading dim = global batch over the dp axes (with divisibility)."""
+        if self.batch_replicated:
+            return P(*([None] * len(shape)))
+        dp = self.dp_axes()
+        if shape and shape[0] % _axes_size(self.mesh, dp) == 0:
+            lead = dp if len(dp) > 1 else dp[0]
+        else:
+            lead = None
+        return P(lead, *([None] * (len(shape) - 1)))
+
+    def batch_shardings(self, batch_tree):
+        return jax.tree.map(
+            lambda l: NamedSharding(self.mesh, self.batch_pspec(l.shape)), batch_tree
+        )
+
+    # ------------------------------------------------------------- caches
+    def _greedy(self, shape, priorities):
+        """priorities: list of (dim_index, [axis groups to try]) — assign
+        greedily without reusing axes; everything else replicated."""
+        parts = [None] * len(shape)
+        used: set = set()
+        for dim_idx, groups in priorities:
+            for cand in groups:
+                group = tuple(a for a in _present(self.mesh, cand) if a not in used)
+                if group and shape[dim_idx] % _axes_size(self.mesh, group) == 0:
+                    parts[dim_idx] = group if len(group) > 1 else group[0]
+                    used.update(group)
+                    break
+        return P(*parts)
+
+    def cache_pspec(self, path_name: str, shape: tuple) -> P:
+        dp = [self.dp_axes()]
+        if path_name in ("k", "v") and len(shape) == 5:
+            # (L, B, Hkv, S, hd): batch -> dp; heads -> tensor; seq soaks up
+            # whatever is left (the long_500k batch=1 fallback).
+            return self._greedy(
+                shape, [(1, dp), (2, [(TENSOR,)]), (3, dp + [(TENSOR,)])]
+            )
+        if path_name in ("c", "kr") and len(shape) == 4:
+            # (L, B, S, d): MLA latents — shard seq on tensor axis
+            return self._greedy(shape, [(1, dp), (2, [(TENSOR,)] + dp)])
+        if path_name == "ssm" and len(shape) == 5:
+            return self._greedy(shape, [(1, dp), (2, [(TENSOR,)])])
+        if path_name == "wkv" and len(shape) == 5:
+            return self._greedy(shape, [(1, dp), (2, [(TENSOR,)])])
+        if path_name == "conv" and len(shape) == 4:
+            return self._greedy(shape, [(1, dp), (3, [(TENSOR,)])])
+        if path_name in ("shift_tm", "shift_cm") and len(shape) == 4:
+            return self._greedy(shape, [(1, dp), (3, [(TENSOR,)])])
+        if len(shape) >= 2:
+            return self._greedy(shape, [(1, dp)])
+        return P(*([None] * len(shape)))
+
+    def cache_shardings(self, caches_tree):
+        def leaf(path, l):
+            name = None
+            for entry in reversed(path):
+                if hasattr(entry, "key"):
+                    name = entry.key
+                    break
+            return NamedSharding(self.mesh, self.cache_pspec(name, l.shape))
+
+        return jax.tree_util.tree_map_with_path(leaf, caches_tree)
+
+    # -------------------------------------------------- activation layout
+    # logical activation dim -> candidate mesh axes (with divisibility)
+    seq_shard: bool = False   # sequence parallelism for the residual stream
+
+    def act_pspec(self, names: tuple, shape: tuple) -> P:
+        used: set = set()
+        parts = []
+        for dim, name in zip(shape, names):
+            groups: list = []
+            if name == "batch":
+                groups = [self.dp_axes()]
+            elif name == "seq" and self.seq_shard:
+                groups = [(TENSOR,)]
+            elif name in ("vocab", "heads", "mlp", "expert"):
+                groups = [(TENSOR,)]
+            pick = None
+            for cand in groups:
+                group = tuple(a for a in _present(self.mesh, cand) if a not in used)
+                if group and dim % _axes_size(self.mesh, group) == 0:
+                    pick = group if len(group) > 1 else group[0]
+                    used.update(group)
+                    break
+            parts.append(pick)
+        return P(*parts)
+
+    # ------------------------------------------------------------ scalars
+    def replicated(self):
+        return NamedSharding(self.mesh, P())

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Layout per kernel: <name>/<name>.py (pl.pallas_call + BlockSpec tiling),
+<name>/ops.py (jit'd public wrapper, interpret=True on CPU), <name>/ref.py
+(pure-jnp oracle used by the allclose test sweeps).
+
+Kernels:
+  covgram          tiled centered Gram matrix  S = (X-mu)'(X-mu)/n — the
+                   O(n p^2) covariance front-end (paper Section 3)
+  threshold_cc     fused |S|>lambda masking + one min-label-propagation hook
+                   step — the TPU adaptation of the paper's graph-partition
+                   stage (the p x p adjacency never materializes in HBM)
+  prox_l1          fused proximal-gradient step soft(Theta - t*G, t*lam) for
+                   the batched first-order glasso solvers
+  flash_attention  blockwise online-softmax attention (causal + GQA) for the
+                   LM pillar's train/prefill steps
+"""

@@ -1,0 +1,3 @@
+from repro.kernels.covgram.ops import covgram
+
+__all__ = ["covgram"]

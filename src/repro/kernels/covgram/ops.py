@@ -1,0 +1,45 @@
+"""Public wrapper for the covgram kernel: padding + mean handling + backend
+dispatch (interpret=True off-TPU so the kernel body is validated on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.covgram.covgram import covgram_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_p"))
+def covgram(
+    x: jax.Array, *, block_n: int = 512, block_p: int = 256
+) -> jax.Array:
+    """Centered Gram matrix S = (X - mu)'(X - mu)/n for (n, p) X, f32 out.
+
+    Rows are padded to a block_n multiple with copies of mu (centered
+    contribution exactly zero) and columns to a block_p multiple with zeros;
+    the divisor stays the true n.
+    """
+    n, p = x.shape
+    bn = min(block_n, max(8, n))
+    bp = min(block_p, max(8, p))
+    mu = jnp.mean(x.astype(jnp.float32), axis=0)
+    pad_n = (-n) % bn
+    pad_p = (-p) % bp
+    xp = x.astype(jnp.float32)
+    if pad_n:
+        xp = jnp.concatenate([xp, jnp.broadcast_to(mu, (pad_n, p))], axis=0)
+    if pad_p:
+        xp = jnp.pad(xp, ((0, 0), (0, pad_p)))
+    mup = jnp.pad(mu, (0, pad_p))
+    out = covgram_pallas(
+        xp, mup, block_n=bn, block_p=bp, interpret=not _is_tpu()
+    )
+    # kernel divides by padded row count; rescale to the true n
+    out = out * ((n + pad_n) / n)
+    return out[:p, :p]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the covgram kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def covgram_ref(x: jax.Array) -> jax.Array:
+    """S = (X - mu)'(X - mu) / n in f32, matching ops.covgram's contract."""
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    return (xc.T @ xc) / n

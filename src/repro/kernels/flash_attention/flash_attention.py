@@ -1,0 +1,123 @@
+"""Blockwise online-softmax attention (FlashAttention) for TPU, with causal
+masking and GQA head grouping.
+
+Grid (BH, nq, nk): q-row blocks revisit their output tile across the
+innermost k axis; running (m, l, acc) statistics live in VMEM scratch that
+persists across k iterations (TPU sequential-grid semantics).  The (Sq, Skv)
+score matrix never exists — per step only a (bq, bk) f32 tile does, so the
+working set is O(bq*(bk + d)) VMEM instead of O(S^2) HBM: the standard
+IO-aware reformulation, which on TPU also keeps the MXU fed with
+(bq, d) @ (d, bk) and (bq, bk) @ (bk, d) contractions.
+
+GQA is folded into the BlockSpec index maps: the kv BlockSpecs map q-head
+bh -> kv-head bh // group, so no head replication ever materializes.
+
+Causal blocks strictly above the diagonal are skipped wholesale with
+@pl.when (the mask only nibbles the diagonal blocks) — ~2x fewer grid steps
+at long context.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, nk: int, bq: int, bk: int, scale: float, causal: bool, kv_len: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = mask & (kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    if causal:
+        # Skip blocks entirely above the diagonal (the mask only nibbles the
+        # diagonal blocks) — ~2x fewer grid steps at long context.
+        pl.when(ik * bk <= iq * bq + bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret", "kv_len"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, d)
+    k: jax.Array,  # (BHkv, Skv_padded, d)
+    v: jax.Array,
+    *,
+    kv_len: int,
+    causal: bool,
+    scale: float,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, d = q.shape
+    BHkv, Skv, _ = k.shape
+    group = BH // BHkv
+    nq, nk = Sq // block_q, Skv // block_k
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, nk=nk, bq=block_q, bk=block_k,
+            scale=scale, causal=causal, kv_len=kv_len,
+        ),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh // group, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, iq, ik: (bh // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Public flash-attention wrapper: (B, H, S, d) layout, padding, GQA checks,
+backend dispatch (interpret kernel body on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, d)
+    k: jax.Array,  # (B, Hkv, Skv, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq to be a multiple of Hkv"
+    scale = float(scale if scale is not None else 1.0 / (d**0.5))
+
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+
+    qf = q.reshape(B * Hq, Sq, d)
+    kf = k.reshape(B * Hkv, Skv, d)
+    vf = v.reshape(B * Hkv, Skv, d)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+
+    out = flash_attention_pallas(
+        qf, kf, vf,
+        kv_len=Skv, causal=causal, scale=scale,
+        block_q=bq, block_k=bk, interpret=not _is_tpu(),
+    )
+    return out[:, :Sq, :].reshape(B, Hq, Sq, d)

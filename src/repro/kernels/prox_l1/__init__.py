@@ -1,0 +1,3 @@
+from repro.kernels.prox_l1.ops import prox_step
+
+__all__ = ["prox_step"]

@@ -1,0 +1,33 @@
+"""Public wrapper for the fused prox step (padding + backend dispatch)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prox_l1.prox_l1 import prox_step_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def prox_step(theta: jax.Array, grad: jax.Array, t, lam, *, block: int = 256):
+    """soft(theta - t*grad, t*lam) over a (B, b, b) stack (or a single (b, b)
+    block, auto-promoted)."""
+    single = theta.ndim == 2
+    if single:
+        theta, grad = theta[None], grad[None]
+    B, b, _ = theta.shape
+    blk = min(block, max(8, b))
+    pad = (-b) % blk
+    tp = jnp.pad(theta, ((0, 0), (0, pad), (0, pad)))
+    gp = jnp.pad(grad, ((0, 0), (0, pad), (0, pad)))
+    t_arr = jnp.asarray(t, theta.dtype).reshape(1, 1)
+    lam_arr = jnp.asarray(lam, theta.dtype).reshape(1, 1)
+    out = prox_step_pallas(tp, gp, t_arr, lam_arr, block=blk, interpret=not _is_tpu())
+    out = out[:, :b, :b]
+    return out[0] if single else out

@@ -1,0 +1,59 @@
+"""Fused proximal-gradient step for batched first-order glasso solvers:
+
+    out = soft_threshold(Theta - t * G,  t * lam)
+
+where G = S - Theta^{-1} is the smooth gradient (computed outside — the
+inverse wants a Cholesky, not a Pallas kernel).  Fusing the AXPY with the
+shrinkage halves HBM traffic versus materializing the gradient step: the
+step is memory-bound (arithmetic intensity < 1 flop/byte), so on TPU this is
+a straight 2x on the dominant roofline term of the inner loop.
+
+Grid (nb, ni, nj) tiles a (B, b, b) stack of blocks — the bucket layout
+repro.core.blocks produces — so one launch advances every same-size
+component in the bucket.  t and lam arrive as (1, 1) blocks: no recompile
+along a lambda path or a backtracking line search.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(theta_ref, grad_ref, t_ref, lam_ref, o_ref):
+    t = t_ref[0, 0]
+    lam = lam_ref[0, 0]
+    z = theta_ref[...] - t * grad_ref[...]
+    thr = t * lam
+    o_ref[...] = jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def prox_step_pallas(
+    theta: jax.Array,
+    grad: jax.Array,
+    t: jax.Array,
+    lam: jax.Array,
+    *,
+    block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """theta, grad: (B, b, b) with b a block multiple; t, lam: (1, 1)."""
+    B, b, _ = theta.shape
+    nt = b // block
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, nt, nt),
+        in_specs=[
+            pl.BlockSpec((1, block, block), lambda n, i, j: (n, i, j)),
+            pl.BlockSpec((1, block, block), lambda n, i, j: (n, i, j)),
+            pl.BlockSpec((1, 1), lambda n, i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda n, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, block), lambda n, i, j: (n, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, b, b), theta.dtype),
+        interpret=interpret,
+    )(theta, grad, t, lam)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused prox step."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def prox_step_ref(theta: jax.Array, grad: jax.Array, t, lam) -> jax.Array:
+    z = theta - t * grad
+    thr = t * lam
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thr, 0.0)

@@ -1,0 +1,3 @@
+from repro.kernels.threshold_cc.ops import labelprop_step
+
+__all__ = ["labelprop_step"]

@@ -1,0 +1,60 @@
+"""Public wrapper: padding + backend dispatch + a full CC driver that loops
+the Pallas hook step with pointer jumping to a fixed point."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.threshold_cc.threshold_cc import labelprop_step_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def labelprop_step(
+    S: jax.Array, labels: jax.Array, lam, *, block: int = 256
+) -> jax.Array:
+    """One fused threshold+hook step: new_l_i = min(l_i, min over thresholded
+    neighbours j of l_j).  Pads to a block multiple; padded vertices isolate."""
+    p = S.shape[0]
+    b = min(block, max(8, p))
+    pad = (-p) % b
+    Sp = jnp.pad(S.astype(jnp.float32), ((0, pad), (0, pad)))
+    lp = jnp.pad(labels.astype(jnp.int32), (0, pad), constant_values=2**30 - 1)
+    lam_arr = jnp.asarray(lam, jnp.float32).reshape(1, 1)
+    out = labelprop_step_pallas(
+        Sp, lp, lam_arr, true_p=p, block=b, interpret=not _is_tpu()
+    )
+    return out[:p]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def connected_components_kernel(
+    S: jax.Array, lam, *, block: int = 256
+) -> jax.Array:
+    """Full CC labels via the Pallas hook step + host-free pointer jumping.
+    Same contract as repro.core.components.connected_components_labelprop."""
+    p = S.shape[0]
+    init = jnp.arange(p, dtype=jnp.int32)
+
+    def round_(labels):
+        labels = labelprop_step(S, labels, lam, block=block)
+        labels = labels[labels]
+        labels = labels[labels]
+        return labels
+
+    def cond(c):
+        labels, prev, it = c
+        return jnp.logical_and(jnp.any(labels != prev), it < p + 2)
+
+    def body(c):
+        labels, _, it = c
+        return round_(labels), labels, it + 1
+
+    labels, _, _ = jax.lax.while_loop(cond, body, (round_(init), init, jnp.int32(0)))
+    return labels

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for one threshold + min-label hook step."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def labelprop_step_ref(S: jax.Array, labels: jax.Array, lam) -> jax.Array:
+    p = S.shape[0]
+    mask = (jnp.abs(S) > lam) & ~jnp.eye(p, dtype=bool)
+    big = jnp.int32(2**30)
+    neigh = jnp.where(mask, labels[None, :].astype(jnp.int32), big)
+    return jnp.minimum(labels.astype(jnp.int32), jnp.min(neigh, axis=1))

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 faked host devices, proving the distribution config is coherent, and
+capture the roofline inputs (memory analysis, cost analysis, collective
+bytes) to a JSON per cell.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init, before ANY other import.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--jobs 1]       # spawn one subprocess per cell
+  python -m repro.launch.dryrun --report               # summarize existing JSONs
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, microbatches: int = 8,
+             remat: str = "full", fsdp: bool = True, extra_tag: str = "",
+             overrides: dict | None = None, batch_replicated: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import SHAPES, cell_supported, get_arch
+    from repro.data.specs import input_specs
+    from repro.distributed import context as dist_ctx
+    from repro.distributed.sharding import ShardingPolicy
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.zoo import active_params, build_model, count_params_abstract
+    from repro.optim import adamw
+    from repro.train.state import init_state
+    from repro.train.step import make_train_step
+
+    cfg = get_arch(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {
+        "arch": cfg.name, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "microbatches": microbatches, "remat": remat,
+        "fsdp": fsdp, "tag": extra_tag, "overrides": overrides or {},
+        "batch_replicated": batch_replicated,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    policy = ShardingPolicy(mesh, fsdp=fsdp, batch_replicated=batch_replicated)
+    model = build_model(cfg)
+    optimizer = adamw()
+    key = jax.random.key(0)
+
+    # -- abstract state + specs (box trick: specs are static python)
+    box = {}
+
+    def _state_fn(k):
+        st, specs = init_state(model, optimizer, k)
+        box["specs"] = specs
+        return st
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(_state_fn, key)
+        specs = box["specs"]
+        pspec = policy.param_shardings(specs, state_sds.params)
+        state_sh = type(state_sds)(
+            step=policy.replicated(),
+            params=pspec,
+            opt_state={"m": pspec, "v": pspec},
+        )
+        batch_sds = input_specs(cfg, shape)
+        batch_sh = policy.batch_shardings(batch_sds)
+        step_fn = make_train_step(
+            model, optimizer, microbatches=microbatches, remat=remat,
+            sharding_policy=policy,
+        )
+        with mesh, dist_ctx.activate(policy):
+            lowered = jax.jit(
+                step_fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)
+            ).lower(state_sds, batch_sds)
+    else:
+        def _params_fn(k):
+            p, s = model.init(k)
+            box["specs"] = s
+            return p
+
+        params_sds = jax.eval_shape(_params_fn, key)
+        specs = box["specs"]
+        params_sh = policy.param_shardings(specs, params_sds)
+        if shape.kind == "prefill":
+            batch_sds = input_specs(cfg, shape)
+            batch_sh = policy.batch_shardings(batch_sds)
+            with mesh, dist_ctx.activate(policy):
+                lowered = jax.jit(
+                    lambda p, b: model.prefill(p, b),
+                    in_shardings=(params_sh, batch_sh),
+                ).lower(params_sds, batch_sds)
+        else:  # decode
+            ins = input_specs(cfg, shape)
+            token_sh = policy.batch_shardings(ins["token"])
+            caches_sh = policy.cache_shardings(ins["caches"])
+            with mesh, dist_ctx.activate(policy):
+                lowered = jax.jit(
+                    lambda p, t, c, pos: model.decode_step(p, t, c, pos),
+                    in_shardings=(params_sh, token_sh, caches_sh, policy.replicated()),
+                    donate_argnums=(2,),
+                ).lower(params_sds, ins["token"], ins["caches"], ins["pos"])
+
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # trip-count-weighted analysis (module-level cost_analysis counts scan
+    # bodies once — see hlo_analysis docstring)
+    weighted = analyze_hlo(hlo)
+    coll = weighted["collective"]
+
+    n_chips = 512 if mesh_kind == "multi" else 256
+    rec.update(
+        status="ok",
+        seconds_lower=round(t_lower, 2),
+        seconds_compile=round(t_compile, 2),
+        chips=n_chips,
+        params_total=count_params_abstract(cfg),
+        params_active=active_params(cfg),
+        flops_per_device=float(weighted["flops"]),
+        bytes_per_device=float(weighted["bytes"]),
+        flops_by_op=weighted["flops_by_op"],
+        xla_cost_analysis={
+            "flops_unweighted": float(ca.get("flops", -1.0)),
+            "bytes_unweighted": float(ca.get("bytes accessed", -1.0)),
+        },
+        collective=coll,
+        memory={
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        },
+        tokens_global=shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len),
+    )
+    # proof-of-fit line, as the assignment asks
+    print(f"[{cfg.name} x {shape_name} x {mesh_kind}] memory_analysis:", ma)
+    print(f"[{cfg.name} x {shape_name} x {mesh_kind}] cost_analysis: "
+          f"flops={rec['flops_per_device']:.3e} bytes={rec['bytes_per_device']:.3e} "
+          f"collective={coll.get('total', 0):.3e}")
+    return rec
+
+
+def cell_path(arch, shape, mesh_kind, tag="") -> Path:
+    suffix = f"_{tag}" if tag else ""
+    return OUT_DIR / f"{arch.replace('.', '_')}__{shape}__{mesh_kind}{suffix}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--serve-batch-replicated", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/float/bool parsed)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.report:
+        for f in sorted(OUT_DIR.glob("*.json")):
+            rec = json.loads(f.read_text())
+            print(f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} {rec['status']}")
+        return
+
+    if args.all:
+        from repro.configs.base import ARCH_IDS, SHAPES
+
+        cells = [
+            (a, s, m)
+            for a in ARCH_IDS
+            for s in SHAPES
+            for m in ("single", "multi")
+        ]
+        for a, s, m in cells:
+            out = cell_path(a, s, m, args.tag)
+            if out.exists() and not args.force:
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m,
+                   "--microbatches", str(args.microbatches),
+                   "--remat", args.remat, "--tag", args.tag]
+            if args.no_fsdp:
+                cmd.append("--no-fsdp")
+            if args.force:
+                cmd.append("--force")
+            print(">>>", " ".join(cmd), flush=True)
+            subprocess.run(cmd, check=False)
+        return
+
+    out = cell_path(args.arch, args.shape, args.mesh, args.tag)
+    if out.exists() and not args.force:
+        print(f"exists: {out}")
+        return
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                v = {"true": True, "false": False}.get(v.lower(), v)
+        overrides[k] = v
+    try:
+        rec = run_cell(
+            args.arch, args.shape, args.mesh,
+            microbatches=args.microbatches, remat=args.remat,
+            fsdp=not args.no_fsdp, extra_tag=args.tag,
+            overrides=overrides or None,
+            batch_replicated=args.serve_batch_replicated,
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+        }
+        out.write_text(json.dumps(rec, indent=2))
+        raise
+    out.write_text(json.dumps(rec, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

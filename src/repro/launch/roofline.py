@@ -1,0 +1,118 @@
+"""Roofline analysis over the dry-run records.
+
+Terms (per device == per chip; the dry-run records are post-SPMD):
+
+    compute_s    = flops_per_device / PEAK_FLOPS      (197 TFLOP/s bf16)
+    memory_s     = bytes_per_device / HBM_BW          (819 GB/s)
+    collective_s = collective_bytes_per_device / ICI  (50 GB/s/link)
+
+Dominant term = bottleneck.  MODEL_FLOPS = 6*N*D (train) or 2*N_active*D
+(serve) per device; MODEL_FLOPS/HLO_FLOPS measures how much compiled compute
+is "useful" (remat recompute, dispatch overhead, masked attention waste all
+push it down).
+
+Usage:
+    python -m repro.launch.roofline               # markdown table
+    python -m repro.launch.roofline --csv out.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load_records(tag: str = "") -> list[dict]:
+    recs = []
+    for f in sorted(OUT_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_row(r: dict) -> dict:
+    if r["status"] != "ok":
+        return {**r, "dominant": "-"}
+    chips = r["chips"]
+    compute_s = r["flops_per_device"] / PEAK_FLOPS
+    memory_s = r["bytes_per_device"] / HBM_BW
+    collective_s = r["collective"].get("total", 0.0) / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    n = r["params_active"]  # MODEL_FLOPS uses 6*N_active*D for MoE (== total for dense)
+    mult = 2 if r["kind"] == "decode" else (6 if r["kind"] == "train" else 2)
+    model_flops_dev = mult * n * r["tokens_global"] / chips
+    useful = model_flops_dev / max(r["flops_per_device"], 1.0)
+    bound_s = max(terms.values())
+    # roofline fraction: useful model flops per device-second at the peak,
+    # achieved vs ideal (ideal = everything at the compute roof)
+    ideal_s = model_flops_dev / PEAK_FLOPS
+    frac = ideal_s / bound_s if bound_s > 0 else 0.0
+    return {
+        **r,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_dev": model_flops_dev,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | status | compute_s | memory_s | collective_s "
+           "| dominant | MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']}: "
+                f"{r.get('reason','')[:48]} | - | - | - | - | - | - |\n"
+            )
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    args = ap.parse_args()
+    rows = [roofline_row(r) for r in load_records(args.tag)]
+    if args.mesh != "both":
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(markdown_table(rows))
+    if args.csv:
+        import csv
+
+        keys = ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+                "collective_s", "dominant", "useful_ratio", "roofline_frac",
+                "flops_per_device", "bytes_per_device"]
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys, extrasaction="ignore")
+            w.writeheader()
+            for r in rows:
+                w.writerow(r)
+        print(f"wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

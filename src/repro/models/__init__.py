@@ -1,0 +1,12 @@
+"""LM substrate for the assigned architectures.
+
+Functional style: every module is an (init, apply) pair over plain nested
+dicts.  ``init`` returns (params, specs) where ``specs`` mirrors the params
+tree with tuples of *logical* axis names ("embed", "heads", "mlp", "vocab",
+"expert", ...); repro.distributed.sharding maps logical axes onto mesh axes
+with divisibility fallbacks.  Models are built from configs by zoo.build.
+"""
+
+from repro.models.zoo import build_model
+
+__all__ = ["build_model"]

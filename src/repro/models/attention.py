@@ -1,0 +1,243 @@
+"""Attention modules: GQA (with QKV-bias variant) and MLA (DeepSeek-V2-style
+latent KV compression), each with prefill/decode KV-cache paths.
+
+Cache contract (decode): caches are preallocated at full seq_len; a decode
+step writes the new token's KV at position ``pos`` in place
+(dynamic_update_slice — donation-friendly) and attends over kpos <= pos.
+"Decode with a KV cache of seq_len" therefore costs O(S) reads and zero
+reallocation, which is what the decode_32k / long_500k dry-run cells lower.
+
+MLA decode uses the absorbed formulation: q is projected into the latent
+space (q @ W_uk per head) so attention runs directly against the cached
+c_kv latents — the cache stays (S, kv_lora + rope_dim) per token instead of
+(S, 2 * H * hd): a 10-20x cache shrink, which is the whole point of MLA.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, rope_apply
+
+
+def _sdpa(q, k, v, *, scale, mask) -> jax.Array:
+    """q: (B,H,Sq,d), k/v: (B,Hkv,Skv,d) with GQA broadcast; mask: (Sq,Skv)
+    or (B,1,Sq,Skv) boolean (True = attend).
+
+    f32 accumulation comes from preferred_element_type on the dots — NOT
+    from casting k/v: materializing an f32 copy of a 32k-token KV cache costs
+    more HBM traffic than the attention math itself (seen in the decode
+    dry-run as a whole-cache convert per layer)."""
+    B, H, Sq, d = q.shape
+    Hkv = k.shape[1]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    if mask is not None:
+        m = mask if mask.ndim == 4 else mask[None, None]
+        s = jnp.where(m[:, :, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqk,bhkd->bhgqd", p, v, preferred_element_type=jnp.float32
+    )
+    return o.reshape(B, H, Sq, v.shape[-1]).astype(q.dtype)  # v dim may differ (MLA)
+
+
+def _dus_seq(cache_arr, new_vals, pos, axis: int):
+    """dynamic_update_slice along one axis at traced index pos (int32)."""
+    idx = [jnp.zeros((), jnp.int32)] * cache_arr.ndim
+    idx[axis] = jnp.asarray(pos, jnp.int32)
+    return jax.lax.dynamic_update_slice(
+        cache_arr, new_vals.astype(cache_arr.dtype), tuple(idx)
+    )
+
+
+def causal_mask(Sq: int, Skv: int, offset: int = 0) -> jax.Array:
+    """True where query may attend: kpos <= qpos + offset."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Skv)[None, :]
+    return kpos <= qpos
+
+
+# q-chunking threshold: above this query length the S^2 score matrix stops
+# fitting HBM (34 GB/layer for a 72B at 32k), so attention runs as a scan
+# over q blocks — the XLA-native flash formulation.  The Pallas kernel
+# (kernels/flash_attention) replaces this on real TPU via use_flash.
+ATTN_CHUNK_THRESHOLD = 4096
+ATTN_Q_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, *, scale, causal, q_chunk=ATTN_Q_CHUNK) -> jax.Array:
+    """Same contract as _sdpa but scanned over q chunks: transient score
+    buffers are (B, H, q_chunk, Skv) instead of (B, H, Sq, Skv)."""
+    B, H, Sq, d = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    pad = (-Sq) % q_chunk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else q
+    nq = qp.shape[2] // q_chunk
+    qg = qp.reshape(B, Hkv, group, nq, q_chunk, d).transpose(3, 0, 1, 2, 4, 5)
+
+    kpos = jnp.arange(Skv)
+
+    def body(_, inp):
+        idx, qc = inp                                   # qc: (B,Hkv,g,qc,d)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qc, k, preferred_element_type=jnp.float32)
+        s = s * scale
+        if causal:
+            qpos = idx * q_chunk + jnp.arange(q_chunk)
+            s = jnp.where(kpos[None, None, None, None, :] <= qpos[None, None, None, :, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v, preferred_element_type=jnp.float32)
+        return None, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qg))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, H, nq * q_chunk, v.shape[-1])
+    return out[:, :, :Sq]
+
+
+# =========================================================== GQA attention
+def gqa_init(key, d_model, n_heads, n_kv_heads, head_dim, dtype, *, bias=False):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(kq, d_model, n_heads * head_dim, "embed", "heads", dtype, bias=bias)
+    p["wk"], s["wk"] = dense_init(kk, d_model, n_kv_heads * head_dim, "embed", "kv", dtype, bias=bias)
+    p["wv"], s["wv"] = dense_init(kv, d_model, n_kv_heads * head_dim, "embed", "kv", dtype, bias=bias)
+    p["wo"], s["wo"] = dense_init(ko, n_heads * head_dim, d_model, "heads", "embed", dtype)
+    return p, s
+
+
+def _split_heads(x, n, d):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, d).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    B, H, S, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, H * d)
+
+
+def gqa_apply(
+    p, x, *, n_heads, n_kv_heads, head_dim,
+    cos=None, sin=None, mode="causal",
+    x_kv=None, cache=None, pos=None, use_flash=False,
+):
+    """mode: 'causal' | 'full' | 'cross' | 'decode'.
+
+    decode: x is (B, 1, D); cache = {'k','v'} preallocated (B,Hkv,S,hd);
+    pos is the write index (scalar int32).  Returns (out, new_cache)."""
+    B, Sq, _ = x.shape
+    scale = head_dim**-0.5
+    q = _split_heads(dense_apply(p["wq"], x), n_heads, head_dim)
+    src = x if x_kv is None else x_kv
+    k = _split_heads(dense_apply(p["wk"], src), n_kv_heads, head_dim)
+    v = _split_heads(dense_apply(p["wv"], src), n_kv_heads, head_dim)
+
+    if cos is not None and mode != "cross":
+        q = rope_apply(q, cos, sin)
+        k = rope_apply(k, cos, sin)
+
+    new_cache = None
+    if mode == "decode":
+        ck = _dus_seq(cache["k"], k, pos, 2)
+        cv = _dus_seq(cache["v"], v, pos, 2)
+        new_cache = {"k": ck, "v": cv}
+        Skv = ck.shape[2]
+        mask = (jnp.arange(Skv)[None, :] <= pos)[None, None, :, :]  # (1,1,1,Skv)
+        o = _sdpa(q, ck, cv, scale=scale, mask=jnp.broadcast_to(mask, (B, 1, 1, Skv)))
+    elif mode == "cross_decode":
+        # decoder cross-attention during decode: static encoder memory cache
+        o = _sdpa(q, cache["k"], cache["v"], scale=scale, mask=None)
+        new_cache = cache
+    else:
+        if use_flash:
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            o = flash_attention(q, k, v, causal=(mode == "causal"), scale=scale)
+        elif Sq > ATTN_CHUNK_THRESHOLD:
+            # strict: at S=4096 the dense score tile is ~0.5 GB transient and
+            # cheaper in traffic than the chunk scan (+16% bytes measured);
+            # the capacity blocker only appears at longer context.
+            o = _sdpa_chunked(q, k, v, scale=scale, causal=(mode == "causal"))
+        else:
+            mask = causal_mask(Sq, k.shape[2]) if mode == "causal" else None
+            o = _sdpa(q, k, v, scale=scale, mask=mask)
+        if mode != "cross":
+            new_cache = {"k": k, "v": v}  # prefill cache
+    return dense_apply(p["wo"], _merge_heads(o)), new_cache
+
+
+# =========================================================== MLA attention
+def mla_init(
+    key, d_model, n_heads, dtype, *,
+    kv_lora, qk_nope_dim=128, qk_rope_dim=64, v_dim=128,
+):
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    qk_dim = qk_nope_dim + qk_rope_dim
+    p["wq"], s["wq"] = dense_init(ks[0], d_model, n_heads * qk_dim, "embed", "heads", dtype)
+    p["wdkv"], s["wdkv"] = dense_init(ks[1], d_model, kv_lora, "embed", "lora", dtype)
+    p["wkrope"], s["wkrope"] = dense_init(ks[2], d_model, qk_rope_dim, "embed", "lora", dtype)
+    p["wuk"], s["wuk"] = dense_init(ks[3], kv_lora, n_heads * qk_nope_dim, "lora", "heads", dtype)
+    p["wuv"], s["wuv"] = dense_init(ks[4], kv_lora, n_heads * v_dim, "lora", "heads", dtype)
+    p["wo"], s["wo"] = dense_init(ks[5], n_heads * v_dim, d_model, "heads", "embed", dtype)
+    return p, s
+
+
+def mla_apply(
+    p, x, *, n_heads, kv_lora, qk_nope_dim=128, qk_rope_dim=64, v_dim=128,
+    cos=None, sin=None, mode="causal", cache=None, pos=None,
+):
+    """MLA with latent cache {c: (B,S,kv_lora), kr: (B,S,rope_dim)}."""
+    B, Sq, _ = x.shape
+    qk_dim = qk_nope_dim + qk_rope_dim
+    scale = qk_dim**-0.5
+
+    q = dense_apply(p["wq"], x).reshape(B, Sq, n_heads, qk_dim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+    q_rope = rope_apply(q_rope, cos, sin)
+
+    c_new = dense_apply(p["wdkv"], x)                       # (B,Sq,lora)
+    kr_new = dense_apply(p["wkrope"], x)                    # (B,Sq,rope)
+    kr_new = rope_apply(kr_new[:, None], cos, sin)[:, 0]    # single shared rope head
+
+    wuk = p["wuk"]["w"].reshape(kv_lora, n_heads, qk_nope_dim)
+    wuv = p["wuv"]["w"].reshape(kv_lora, n_heads, v_dim)
+
+    if mode == "decode":
+        c = _dus_seq(cache["c"], c_new, pos, 1)
+        kr = _dus_seq(cache["kr"], kr_new, pos, 1)
+        new_cache = {"c": c, "kr": kr}
+        # absorbed path: q_nope -> latent space, score against c directly.
+        # No whole-cache casts — f32 accumulate via preferred_element_type.
+        q_lat = jnp.einsum("bhqd,lhd->bhql", q_nope, wuk, preferred_element_type=jnp.float32)
+        s_lat = jnp.einsum("bhql,bkl->bhqk", q_lat.astype(c.dtype), c, preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bhqd,bkd->bhqk", q_rope, kr, preferred_element_type=jnp.float32)
+        s_all = (s_lat + s_rope) * scale
+        Skv = c.shape[1]
+        mask = (jnp.arange(Skv)[None, None, None, :] <= pos)
+        s_all = jnp.where(mask, s_all, -1e30)
+        prob = jax.nn.softmax(s_all, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkl->bhql", prob.astype(c.dtype), c, preferred_element_type=jnp.float32)
+        o = jnp.einsum("bhql,lhd->bhqd", o_lat.astype(wuv.dtype), wuv, preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        new_cache = {"c": c_new, "kr": kr_new}
+        k_nope = jnp.einsum("bkl,lhd->bhkd", c_new, wuk)    # expand per head
+        vfull = jnp.einsum("bkl,lhd->bhkd", c_new, wuv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_new[:, None], (B, n_heads, Sq, qk_rope_dim))],
+            axis=-1,
+        )
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if Sq > ATTN_CHUNK_THRESHOLD:
+            o = _sdpa_chunked(qfull, k, vfull, scale=scale, causal=(mode == "causal"))
+        else:
+            mask = causal_mask(Sq, Sq) if mode == "causal" else None
+            o = _sdpa(qfull, k, vfull, scale=scale, mask=mask)
+
+    out = o.transpose(0, 2, 1, 3).reshape(B, Sq, n_heads * v_dim)
+    return dense_apply(p["wo"], out), new_cache

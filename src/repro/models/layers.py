@@ -1,0 +1,129 @@
+"""Shared layers: norms, dense projections, SwiGLU MLP, RoPE, embeddings.
+
+Every init returns (params, specs): specs mirror the param tree with tuples
+of logical axis names consumed by repro.distributed.sharding.  Axis-name
+vocabulary (resolution rules live in one place, sharding.py):
+
+  "vocab"    embedding rows / lm-head cols        -> tensor axis
+  "embed"    d_model                              -> fsdp axis (weights)
+  "mlp"      ffn hidden                           -> tensor axis
+  "heads"    q heads * head_dim (fused)           -> tensor axis
+  "kv"       kv heads * head_dim (fused)          -> tensor axis
+  "expert"   MoE expert count                     -> tensor axis (EP)
+  "lora"     MLA latent dims                      -> replicated
+  "conv"/"state"/"ssm"  SSM internals             -> see sharding.py
+  "layers"   scan-stacked leading axis            -> never sharded
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncnorm_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def dense_init(key, in_dim, out_dim, in_ax, out_ax, dtype, *, bias=False, scale=None):
+    scale = scale if scale is not None else (in_dim**-0.5)
+    p = {"w": truncnorm_init(key, (in_dim, out_dim), dtype, scale)}
+    s = {"w": (in_ax, out_ax)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        s["b"] = (out_ax,)
+    return p, s
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(dim, dtype):
+    return {"scale": jnp.ones((dim,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm_apply(p, x, *, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim, dtype):
+    return (
+        {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm_apply(p, x, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def embedding_init(key, vocab, dim, dtype):
+    return (
+        {"table": truncnorm_init(key, (vocab, dim), dtype, 1.0)},
+        {"table": ("vocab", "embed")},
+    )
+
+
+def embedding_apply(p, ids, *, iota_threshold: int = 8192):
+    """Embedding lookup.
+
+    Large vocabularies use the one-hot-matmul form: with the table sharded
+    on the vocab axis, a gather forces the SPMD partitioner into an
+    "involuntary full rematerialization" (replicate-the-table), and its
+    transpose is a scatter.  one_hot @ table is a plain dot — it partitions
+    cleanly along the vocab axis and its grad is another dot.  (Same trick
+    as MaxText's use_iota_embed.)
+    """
+    table = p["table"]
+    if table.shape[0] >= iota_threshold:
+        onehot = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+        return onehot @ table
+    return jnp.take(table, ids, axis=0)
+
+
+# ------------------------------------------------------------------ SwiGLU
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    wi, si = dense_init(k1, d_model, d_ff, "embed", "mlp", dtype)
+    wg, sg = dense_init(k2, d_model, d_ff, "embed", "mlp", dtype)
+    wo, so = dense_init(k3, d_ff, d_model, "mlp", "embed", dtype)
+    return {"wi": wi, "wg": wg, "wo": wo}, {"wi": si, "wg": sg, "wo": so}
+
+
+def swiglu_apply(p, x):
+    h = jax.nn.silu(dense_apply(p["wg"], x)) * dense_apply(p["wi"], x)
+    return dense_apply(p["wo"], h)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions: (..., S) int -> (cos, sin) of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, S, d); cos/sin: (B, S, d/2) or (S, d/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos_, sin_ = cos[None, None], sin[None, None]
+    else:
+        cos_, sin_ = cos[:, None], sin[:, None]
+    out1 = x1 * cos_ - x2 * sin_
+    out2 = x2 * cos_ + x1 * sin_
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN with top-k routing and fixed-capacity one-hot
+dispatch (GShard/Switch pattern).
+
+The dispatch/combine einsums are the SPMD-friendly formulation: the
+(tokens, experts, capacity) tensors shard tokens on the data axes and
+experts on the tensor axis, so XLA partitions the dispatch into the
+canonical all-to-all + batched expert GEMMs with *static* shapes (no
+data-dependent shapes on the hot path — the straggler-free property
+DESIGN.md Section 5 relies on).  Capacity overflow drops tokens
+deterministically (standard fixed-capacity semantics); the aux load-balance
+loss keeps overflow rare.
+
+Supports shared (always-on) experts alongside routed ones (DeepSeek-V2
+style), and expert widths != shared widths (Qwen3-MoE style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, swiglu_apply, swiglu_init, truncnorm_init
+
+
+def moe_init(
+    key, d_model, *, n_experts, d_ff_expert, top_k, n_shared=0, d_ff_shared=0, dtype
+):
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["router"] = {"w": truncnorm_init(ks[0], (d_model, n_experts), jnp.float32, d_model**-0.5)}
+    s["router"] = {"w": ("embed", "expert")}
+    # stacked expert SwiGLU weights: (E, d, f) / (E, f, d)
+    p["wi"] = truncnorm_init(ks[1], (n_experts, d_model, d_ff_expert), dtype, d_model**-0.5)
+    p["wg"] = truncnorm_init(ks[2], (n_experts, d_model, d_ff_expert), dtype, d_model**-0.5)
+    p["wo"] = truncnorm_init(ks[3], (n_experts, d_ff_expert, d_model), dtype, d_ff_expert**-0.5)
+    s["wi"] = ("expert", "embed", "mlp")
+    s["wg"] = ("expert", "embed", "mlp")
+    s["wo"] = ("expert", "mlp", "embed")
+    if n_shared:
+        p["shared"], s["shared"] = swiglu_init(ks[4], d_model, n_shared * d_ff_shared, dtype)
+    return p, s
+
+
+def moe_apply(
+    p, x, *, n_experts, top_k, capacity_factor=1.25, dropless=False,
+    chunk: int = 1024,
+):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    CHUNKED dispatch: the GShard one-hot dispatch einsum costs
+    2*T*E*C*d flops with C ~ cf*T*k/E, i.e. QUADRATIC in the number of
+    tokens dispatched together.  Dispatching a whole 131k-token microbatch
+    at once made the dispatch ~170x the expert-FFN cost (observed in the
+    dry-run: MoE prefill compute 100x the dense archs').  Tokens are
+    therefore routed in chunks of ``chunk``: the dispatch tensors get a
+    leading chunk axis (nc, Tc, E, C) and every einsum carries it — total
+    dispatch cost becomes 2*cf*k*T*chunk*d, linear in T, ~0.5x the FFN
+    flops at chunk=1024 for the assigned MoE shapes.
+
+    dropless=True (serving): capacity = Tc per chunk — exact, no token ever
+    dropped, and prefill/decode stay bit-consistent.  Training uses the
+    fixed-capacity regime (cf=1.25) with deterministic overflow drops.
+    """
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    Tc = min(chunk, T)
+    pad = (-T) % Tc
+    if pad:
+        xt = jnp.concatenate([xt, jnp.zeros((pad, D), xt.dtype)])
+    nc = xt.shape[0] // Tc
+    xc = xt.reshape(nc, Tc, D)
+
+    logits = (xc.astype(jnp.float32)) @ p["router"]["w"]           # (n,Tc,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)              # (n,Tc,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    if dropless:
+        C = Tc
+    else:
+        C = int(min(Tc, max(1, (Tc * top_k * capacity_factor) // n_experts)))
+
+    # position of each (token, choice) in its expert's per-chunk buffer
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # (n,Tc,k,E)
+    flat = onehot.reshape(nc, Tc * top_k, n_experts)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(nc, Tc, top_k, n_experts)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                 # (n,Tc,k)
+    keep = pos < C
+
+    disp = (
+        jax.nn.one_hot(gate_idx, n_experts, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=x.dtype)[..., :C][..., None, :]
+    )                                                              # (n,Tc,k,E,C)
+    comb = disp * gate_vals[..., None, None].astype(x.dtype)
+    disp = jnp.sum(disp, axis=2)                                   # (n,Tc,E,C)
+    comb = jnp.sum(comb, axis=2)
+
+    xe = jnp.einsum("ntec,ntd->necd", disp, xc)                    # (n,E,C,D)
+    h = jnp.einsum("necd,edf->necf", xe, p["wg"])
+    h = jax.nn.silu(h) * jnp.einsum("necd,edf->necf", xe, p["wi"])
+    ye = jnp.einsum("necf,efd->necd", h, p["wo"])                  # (n,E,C,D)
+    yt = jnp.einsum("ntec,necd->ntd", comb, ye)                    # (n,Tc,D)
+
+    out = yt.reshape(nc * Tc, D)[:T].reshape(B, S, D)
+    if "shared" in p:
+        out = out + swiglu_apply(p["shared"], x)
+
+    # Switch-style load-balance aux loss (over real tokens only)
+    probs_flat = probs.reshape(nc * Tc, n_experts)[:T]
+    idx_flat = gate_idx.reshape(nc * Tc, top_k)[:T]
+    me = jnp.mean(probs_flat, axis=0)                              # (E,)
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx_flat, n_experts, dtype=jnp.float32), axis=1),
+        axis=0,
+    )
+    aux = n_experts * jnp.sum(me * frac)
+    return out, aux

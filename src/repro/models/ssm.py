@@ -1,0 +1,290 @@
+"""State-space sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Mamba2 uses the chunked SSD formulation (Mamba-2 paper, Sec. 6): within a
+chunk of length L the recurrence
+
+    h_t = a_t h_{t-1} + B_t (dt_t x_t)',   y_t = C_t' h_t + D x_t
+
+is evaluated as masked matmuls — M[t,i] = exp(La_t - La_i) for t >= i (all
+exponents <= 0, so no overflow path exists), y_intra = (M * C B') @ xb —
+while chunk-to-chunk states are carried by a lax.scan.  This keeps the MXU
+fed (L x L and L x N contractions) instead of serializing 4k steps, and the
+HLO stays compact (one scan over T/L chunks).
+
+RWKV6's data-dependent per-channel decay makes the safe matmul factorization
+overflow-prone (exponents of both signs), so the baseline WKV6 runs as a
+lax.scan over time, vectorized over (B, H, dk, dv) — exact, compact HLO.
+A chunked variant is a recorded candidate in EXPERIMENTS.md §Perf.
+
+Both expose one-step decode paths with O(1) state caches — the reason these
+families run the long_500k cell that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init, rmsnorm_apply, truncnorm_init
+
+
+# =============================================================== Mamba2/SSD
+def mamba2_init(key, d_model, *, d_inner, d_state, head_dim, conv_width, dtype):
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    # fused in-projection: [z | x | B | C | dt]
+    proj_out = 2 * d_inner + 2 * d_state + n_heads
+    p["in_proj"], s["in_proj"] = dense_init(ks[0], d_model, proj_out, "embed", "heads", dtype)
+    conv_ch = d_inner + 2 * d_state
+    p["conv_w"] = truncnorm_init(ks[1], (conv_width, conv_ch), dtype, conv_width**-0.5)
+    s["conv_w"] = ("conv", "heads")
+    p["conv_b"] = jnp.zeros((conv_ch,), dtype)
+    s["conv_b"] = ("heads",)
+    p["A_log"] = jnp.zeros((n_heads,), jnp.float32) + jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32))
+    s["A_log"] = ("ssm",)
+    p["D"] = jnp.ones((n_heads,), jnp.float32)
+    s["D"] = ("ssm",)
+    p["dt_bias"] = jnp.zeros((n_heads,), jnp.float32)
+    s["dt_bias"] = ("ssm",)
+    p["norm"] = {"scale": jnp.ones((d_inner,), dtype)}
+    s["norm"] = {"scale": ("heads",)}
+    p["out_proj"], s["out_proj"] = dense_init(ks[2], d_inner, d_model, "heads", "embed", dtype)
+    return p, s
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv over seq.  x: (B,T,C), w: (W,C).  state: (B,W-1,C)
+    carries the last W-1 inputs for decode; returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    # (B, T+W-1, C) -> windows
+    T = x.shape[1]
+    y = sum(xp[:, i : i + T] * w[i][None, None] for i in range(W))
+    new_state = xp[:, -(W - 1) :] if W > 1 else None
+    return y + b[None, None], new_state
+
+
+def _ssd_chunked(xb, loga, Bm, Cm, h0, *, chunk):
+    """xb: (B,T,H,P) inputs (dt*x); loga: (B,T,H) per-step log decay (<=0);
+    Bm, Cm: (B,T,N); h0: (B,H,N,P).  Returns (y: (B,T,H,P), h_final)."""
+    Bsz, T, H, Pd = xb.shape
+    N = Bm.shape[-1]
+    L = min(chunk, T)
+    nc = T // L
+    xb = xb.reshape(Bsz, nc, L, H, Pd)
+    loga = loga.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, L, N)
+    Cm = Cm.reshape(Bsz, nc, L, N)
+
+    La = jnp.cumsum(loga, axis=2)                      # inclusive (B,nc,L,H)
+    # intra-chunk: M[t,i] = exp(La_t - La_i), t >= i  (exponents <= 0).
+    # Mask BEFORE exp: exp(+big) under a where still poisons the backward
+    # pass with 0 * inf = NaN cotangents.
+    diff = La[:, :, :, None, :] - La[:, :, None, :, :]  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -jnp.inf))
+    CB = jnp.einsum("bcln,bcmn->bclm", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    # The (B,nc,L,L,H) masked-decay matrix is the largest intra-chunk buffer;
+    # combine with CB in f32 (exp/cumsum precision) then drop to the compute
+    # dtype for the contraction — halves its HBM traffic in bf16 runs
+    # (§Perf iteration A3).
+    MCB = (M * CB[..., None]).astype(xb.dtype)
+    y_intra = jnp.einsum(
+        "bclmh,bcmhp->bclhp", MCB, xb, preferred_element_type=jnp.float32
+    )
+
+    # per-chunk state contribution (independent of h): sum_i exp(La_L - La_i) B_i xb_i
+    decay_out = jnp.exp(La[:, :, -1:, :] - La)          # (B,nc,L,H) <= 1
+    S_chunk = jnp.einsum("bclh,bcln,bclhp->bchnp", decay_out, Bm.astype(jnp.float32), xb.astype(jnp.float32))
+    a_chunk = jnp.exp(La[:, :, -1, :])                  # (B,nc,H) total chunk decay
+
+    def scan_body(h, per_chunk):
+        a_c, S_c = per_chunk                            # (B,H), (B,H,N,P)
+        h_next = a_c[..., None, None] * h + S_c
+        return h_next, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_body,
+        h0.astype(jnp.float32),
+        (a_chunk.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)          # (B,nc,H,N,P)
+
+    # inter-chunk: y_t += exp(La_t) C_t' h_prev(chunk)
+    y_inter = jnp.einsum(
+        "bclh,bcln,bchnp->bclhp", jnp.exp(La), Cm.astype(jnp.float32), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Pd)
+    return y, h_final
+
+
+def mamba2_apply(
+    p, x, *, d_inner, d_state, head_dim, conv_width, chunk=128, cache=None
+):
+    """Full-sequence when cache is None (returns final state as cache);
+    single-step decode when cache = {'conv': (B,W-1,C), 'ssm': (B,H,N,P)}."""
+    B, T, D = x.shape
+    H = d_inner // head_dim
+    zxbcdt = dense_apply(p["in_proj"], x)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + d_state, 2 * d_inner + 2 * d_state], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], state=conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])  # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                                  # (H,) < 0
+    loga = dt * A[None, None]                                                 # <= 0
+    xh = xs.reshape(B, T, H, head_dim)
+    # keep the discretized input in the compute dtype: decay math (loga,
+    # cumsums) stays f32, but the big intra-chunk contraction operands drop
+    # to bf16 in production — state accumulation is still f32 via
+    # preferred_element_type (§Perf iteration A3).
+    xb = (xh * dt[..., None]).astype(x.dtype)
+
+    h0 = (
+        jnp.zeros((B, H, d_state, head_dim), jnp.float32)
+        if cache is None
+        else cache["ssm"].astype(jnp.float32)
+    )
+    if cache is None:
+        y, h_final = _ssd_chunked(xb, loga, Bm, Cm, h0, chunk=chunk)
+    else:  # decode: exact one-step recurrence
+        a = jnp.exp(loga[:, 0])                                               # (B,H)
+        h_final = a[..., None, None] * h0 + jnp.einsum(
+            "bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32), xb[:, 0].astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h_final)[:, None]
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, T, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_apply(p["norm"], y)
+    out = dense_apply(p["out_proj"], y)
+    new_cache = {"conv": new_conv, "ssm": h_final.astype(jnp.float32)}
+    return out, new_cache
+
+
+# ================================================================== RWKV6
+def rwkv6_init(key, d_model, *, head_dim, d_ff, lora_rank, dtype):
+    from repro.models.layers import layernorm_init
+
+    H = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = layernorm_init(d_model, dtype)
+    p["ln2"], s["ln2"] = layernorm_init(d_model, dtype)
+    for i, name in enumerate(("r", "k", "v", "g", "w")):
+        p[f"mu_{name}"] = jnp.full((d_model,), 0.5, dtype)
+        s[f"mu_{name}"] = ("embed",)
+    p["wr"], s["wr"] = dense_init(ks[0], d_model, d_model, "embed", "heads", dtype)
+    p["wk"], s["wk"] = dense_init(ks[1], d_model, d_model, "embed", "heads", dtype)
+    p["wv"], s["wv"] = dense_init(ks[2], d_model, d_model, "embed", "heads", dtype)
+    p["wg"], s["wg"] = dense_init(ks[3], d_model, d_model, "embed", "heads", dtype)
+    p["w_lora_a"], s["w_lora_a"] = dense_init(ks[4], d_model, lora_rank, "embed", "lora", dtype)
+    p["w_lora_b"], s["w_lora_b"] = dense_init(ks[5], lora_rank, d_model, "lora", "heads", dtype)
+    p["w_base"] = jnp.full((d_model,), -6.0, jnp.float32)
+    s["w_base"] = ("heads",)
+    p["u"] = truncnorm_init(ks[6], (d_model,), jnp.float32, 0.5)
+    s["u"] = ("heads",)
+    p["ln_x"] = {"scale": jnp.ones((d_model,), dtype)}
+    s["ln_x"] = {"scale": ("heads",)}
+    p["wo"], s["wo"] = dense_init(ks[7], d_model, d_model, "heads", "embed", dtype)
+    # channel mix
+    p["cm_mu_r"] = jnp.full((d_model,), 0.5, dtype)
+    s["cm_mu_r"] = ("embed",)
+    p["cm_mu_k"] = jnp.full((d_model,), 0.5, dtype)
+    s["cm_mu_k"] = ("embed",)
+    p["cm_wr"], s["cm_wr"] = dense_init(ks[8], d_model, d_model, "embed", "heads", dtype)
+    p["cm_wk"], s["cm_wk"] = dense_init(ks[9], d_model, d_ff, "embed", "mlp", dtype)
+    p["cm_wv"], s["cm_wv"] = dense_init(ks[10], d_ff, d_model, "mlp", "embed", dtype)
+    return p, s
+
+
+def _token_shift(x, mu, shift_state):
+    """lerp(x_t, x_{t-1}, mu); shift_state: (B,1,D) previous last token."""
+    prev = jnp.concatenate([shift_state.astype(x.dtype), x[:, :-1]], axis=1)
+    return x + (prev - x) * mu[None, None]
+
+
+def _wkv6_scan(r, k, v, w, u, s0):
+    """Exact WKV6:  S_t = diag(w_t) S_{t-1} + k_t v_t';
+                    y_t = r_t' (S_{t-1} + diag(u) k_t v_t').
+    r,k,v,w: (B,T,H,dk); u: (H,dk); s0: (B,H,dk,dv).  Scan over T."""
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,H,dk) each
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    rs, ks_, vs, ws = (t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    S_final, ys = jax.lax.scan(step, s0, (rs, ks_, vs, ws))
+    return ys.transpose(1, 0, 2, 3), S_final            # (B,T,H,dv)
+
+
+def rwkv6_apply(p, x, *, head_dim, d_ff, cache=None):
+    """Time-mix (WKV6) + channel-mix, pre-LN block with internal residuals:
+    x = x + tm(LN1(x)); out = x + cm(LN2(x)).  cache carries {'shift_tm',
+    'shift_cm','wkv'} for decode; full-sequence mode returns final state."""
+    from repro.models.layers import layernorm_apply
+
+    B, T, D = x.shape
+    H = D // head_dim
+    if cache is None:
+        shift_tm = jnp.zeros((B, 1, D), x.dtype)
+        shift_cm = jnp.zeros((B, 1, D), x.dtype)
+        s0 = jnp.zeros((B, H, head_dim, head_dim), jnp.float32)
+    else:
+        shift_tm, shift_cm, s0 = cache["shift_tm"], cache["shift_cm"], cache["wkv"]
+
+    # ---- time mix
+    xa = layernorm_apply(p["ln1"], x)
+    xr = _token_shift(xa, p["mu_r"], shift_tm)
+    xk = _token_shift(xa, p["mu_k"], shift_tm)
+    xv = _token_shift(xa, p["mu_v"], shift_tm)
+    xg = _token_shift(xa, p["mu_g"], shift_tm)
+    xw = _token_shift(xa, p["mu_w"], shift_tm)
+    r = dense_apply(p["wr"], xr).reshape(B, T, H, head_dim).astype(jnp.float32)
+    k = dense_apply(p["wk"], xk).reshape(B, T, H, head_dim).astype(jnp.float32)
+    v = dense_apply(p["wv"], xv).reshape(B, T, H, head_dim).astype(jnp.float32)
+    g = dense_apply(p["wg"], xg)
+    # data-dependent decay (Finch): w_t = exp(-exp(w_base + lora(x_w)))
+    ww = p["w_base"][None, None] + dense_apply(
+        p["w_lora_b"], jnp.tanh(dense_apply(p["w_lora_a"], xw))
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(jnp.clip(ww, -12.0, 3.0))).reshape(B, T, H, head_dim)
+    u = p["u"].reshape(H, head_dim)
+
+    y, s_final = _wkv6_scan(r, k, v, w, u, s0)
+    y = y.reshape(B, T, D)
+    # per-head group norm
+    yh = y.reshape(B, T, H, head_dim)
+    yh = yh * jax.lax.rsqrt(jnp.mean(jnp.square(yh), axis=-1, keepdims=True) + 1e-6)
+    y = (yh.reshape(B, T, D) * p["ln_x"]["scale"].astype(jnp.float32)[None, None]).astype(x.dtype)
+    tm_out = dense_apply(p["wo"], y * jax.nn.silu(g))
+    h = x + tm_out
+
+    # ---- channel mix
+    hb = layernorm_apply(p["ln2"], h)
+    hr = _token_shift(hb, p["cm_mu_r"], shift_cm)
+    hk = _token_shift(hb, p["cm_mu_k"], shift_cm)
+    rr = jax.nn.sigmoid(dense_apply(p["cm_wr"], hr))
+    kk = jnp.square(jax.nn.relu(dense_apply(p["cm_wk"], hk)))
+    cm_out = rr * dense_apply(p["cm_wv"], kk)
+    out = h + cm_out
+
+    new_cache = {
+        "shift_tm": xa[:, -1:],
+        "shift_cm": hb[:, -1:],
+        "wkv": s_final,
+    }
+    return out, new_cache

@@ -1,0 +1,527 @@
+"""Model stacks for all assigned families.
+
+One init + three entry points per family, built from a config:
+
+  init_params(key, cfg)                          -> (params, specs)
+  forward_train(params, cfg, batch)              -> (loss, aux)
+  prefill(params, cfg, batch)                    -> (last_logits, caches)
+  decode_step(params, cfg, token, caches, pos)   -> (logits, caches)
+
+Layers are scan-stacked (compact HLO, one compiled layer body) with an
+optional remat policy applied to the scan body by the caller (train.step).
+Families: "decoder" (dense/moe/vlm, GQA or MLA), "encdec" (seamless),
+"hybrid" (zamba2: mamba segments + shared attention block), "rwkv".
+
+Vocab is padded to a multiple of 256 so the "vocab" axis shards on any mesh
+(Megatron-style padding; padded rows never receive probability mass from
+real tokens and are sliced off nowhere — the loss simply never selects
+them).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.context import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense_apply,
+    dense_init,
+    embedding_apply,
+    embedding_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    rope_angles,
+)
+
+VOCAB_PAD = 256
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return ((cfg.vocab + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def _is_spec_leaf(x):
+    return isinstance(x, tuple) and all(isinstance(t, (str, type(None))) for t in x)
+
+
+def stacked_init(init_fn, key, n):
+    """vmap an init over n layer keys; prepend the 'layers' logical axis."""
+    box = {}
+
+    def params_only(k):
+        p, s = init_fn(k)
+        box["specs"] = s
+        return p
+
+    params = jax.vmap(params_only)(jax.random.split(key, n))
+    specs = jax.tree.map(
+        lambda ax: ("layers",) + ax, box["specs"], is_leaf=_is_spec_leaf
+    )
+    return params, specs
+
+
+# ======================================================= layer definitions
+def _decoder_layer_init(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+    p["ln2"], s["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.mla:
+        p["attn"], s["attn"] = attn.mla_init(
+            k1, cfg.d_model, cfg.n_heads, dtype,
+            kv_lora=cfg.kv_lora_rank, qk_nope_dim=cfg.qk_nope_dim,
+            qk_rope_dim=cfg.qk_rope_dim, v_dim=cfg.v_head_dim,
+        )
+    else:
+        p["attn"], s["attn"] = attn.gqa_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, dtype, bias=cfg.qkv_bias,
+        )
+    if cfg.moe:
+        p["mlp"], s["mlp"] = moe_mod.moe_init(
+            k2, cfg.d_model, n_experts=cfg.n_experts, d_ff_expert=cfg.d_ff_expert,
+            top_k=cfg.top_k, n_shared=cfg.n_shared_experts,
+            d_ff_shared=cfg.d_ff_expert, dtype=dtype,
+        )
+    else:
+        from repro.models.layers import swiglu_init
+
+        p["mlp"], s["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+def _decoder_layer_apply(
+    p, x, cfg: ArchConfig, *, cos, sin, mode, cache=None, pos=None, dropless=True
+):
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    if cfg.mla:
+        h, new_cache = attn.mla_apply(
+            p["attn"], h, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora_rank,
+            qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim, cos=cos, sin=sin, mode=mode,
+            cache=cache, pos=pos,
+        )
+    else:
+        h, new_cache = attn.gqa_apply(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, cos=cos, sin=sin, mode=mode,
+            cache=cache, pos=pos,
+        )
+    x = x + h
+    h2 = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+    if cfg.moe:
+        ff, aux = moe_mod.moe_apply(
+            p["mlp"], h2, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            dropless=dropless,
+        )
+    else:
+        from repro.models.layers import swiglu_apply
+
+        ff, aux = swiglu_apply(p["mlp"], h2), jnp.zeros((), jnp.float32)
+    return x + ff, new_cache, aux
+
+
+def _shared_attn_block_init(key, cfg: ArchConfig):
+    """Zamba2's shared transformer block (one copy of weights, applied after
+    every ``attn_every`` mamba layers)."""
+    from repro.models.layers import swiglu_init
+
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+    p["ln2"], s["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    p["attn"], s["attn"] = attn.gqa_init(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+    )
+    p["mlp"], s["mlp"] = swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+def _mamba_layer_init(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p, s = {}, {}
+    p["ln"], s["ln"] = rmsnorm_init(cfg.d_model, dtype)
+    p["mix"], s["mix"] = ssm_mod.mamba2_init(
+        k1, cfg.d_model, d_inner=2 * cfg.d_model, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, conv_width=cfg.ssm_conv_width, dtype=dtype,
+    )
+    return p, s
+
+
+def _encdec_dec_layer_init(key, cfg: ArchConfig):
+    from repro.models.layers import swiglu_init
+
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = rmsnorm_init(cfg.d_model, dtype)
+    p["ln_x"], s["ln_x"] = rmsnorm_init(cfg.d_model, dtype)
+    p["ln2"], s["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    p["self"], s["self"] = attn.gqa_init(
+        k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+    )
+    p["cross"], s["cross"] = attn.gqa_init(
+        k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+    )
+    p["mlp"], s["mlp"] = swiglu_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+# ============================================================ whole models
+def init_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["embed"], s["embed"] = embedding_init(ks[0], padded_vocab(cfg), cfg.d_model, dtype)
+    p["final_norm"], s["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    p["lm_head"], s["lm_head"] = dense_init(
+        ks[1], cfg.d_model, padded_vocab(cfg), "embed", "vocab", dtype
+    )
+    if cfg.frontend:
+        p["frontend_proj"], s["frontend_proj"] = dense_init(
+            ks[2], cfg.d_model, cfg.d_model, "embed", "embed_out", dtype
+        )
+
+    if cfg.ssm:  # rwkv
+        def one(k):
+            return ssm_mod.rwkv6_init(
+                k, cfg.d_model, head_dim=cfg.ssm_head_dim, d_ff=cfg.d_ff,
+                lora_rank=cfg.ssm_lora_rank, dtype=dtype,
+            )
+
+        p["layers"], s["layers"] = stacked_init(one, ks[3], cfg.n_layers)
+    elif cfg.hybrid:  # zamba2
+        p["mamba"], s["mamba"] = stacked_init(
+            lambda k: _mamba_layer_init(k, cfg), ks[3], cfg.n_layers
+        )
+        p["shared_attn"], s["shared_attn"] = _shared_attn_block_init(ks[4], cfg)
+    elif cfg.encoder_decoder:
+        p["enc_layers"], s["enc_layers"] = stacked_init(
+            lambda k: _decoder_layer_init(k, cfg), ks[3], cfg.n_enc_layers
+        )
+        p["dec_layers"], s["dec_layers"] = stacked_init(
+            lambda k: _encdec_dec_layer_init(k, cfg), ks[4], cfg.n_layers
+        )
+        p["enc_norm"], s["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    else:
+        p["layers"], s["layers"] = stacked_init(
+            lambda k: _decoder_layer_init(k, cfg), ks[3], cfg.n_layers
+        )
+    return p, s
+
+
+def _rope_cache(cfg: ArchConfig, positions):
+    if cfg.mla:
+        return rope_angles(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    return rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+
+def _segments(n_layers: int, every: int) -> list[int]:
+    """Hybrid segmentation: [every, every, ..., remainder]."""
+    sizes, left = [], n_layers
+    while left > 0:
+        sizes.append(min(every, left))
+        left -= every
+    return sizes
+
+
+def _tree_slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def _scan_layers(layer_fn, params_stacked, x, *, remat_policy=None, ys=None):
+    """Scan a layer body over stacked params (+ optional per-layer inputs),
+    collecting per-layer outputs."""
+    body = layer_fn
+    if remat_policy is not None:
+        body = jax.checkpoint(layer_fn, policy=remat_policy)
+
+    def scan_body(carry, xs):
+        return body(carry, xs)
+
+    return jax.lax.scan(scan_body, x, (params_stacked, ys) if ys is not None else params_stacked)
+
+
+# ------------------------------------------------------------ entry points
+def _embed_sequence(p, cfg, batch):
+    """Token embeddings (+ projected frontend stub embeddings prepended)."""
+    # constrain BEFORE any frontend concat: sharding must be pinned on the
+    # one-hot-matmul output itself, or SPMD replicates the (B, S, V/tp)
+    # one-hot across the batch axis (observed: 24 GB/device on internvl2).
+    x = constrain(embedding_apply(p["embed"], batch["tokens"]), ("batch", "seq", "embed"))
+    if cfg.frontend and "frontend" in batch:
+        fe = dense_apply(p["frontend_proj"], batch["frontend"].astype(x.dtype))
+        fe = constrain(fe, ("batch", "seq", "embed"))
+        x = jnp.concatenate([fe, x], axis=1)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+def _run_decoder_stack(
+    p, cfg, x, *, mode, caches=None, pos=None, remat_policy=None, dropless=True
+):
+    B, S, _ = x.shape
+    if mode == "decode":
+        positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    else:
+        positions = jnp.arange(S)
+    cos, sin = _rope_cache(cfg, positions)
+
+    if mode == "decode":
+        def body(carry, xs):
+            layer_p, layer_cache = xs
+            y, new_cache, _ = _decoder_layer_apply(
+                layer_p, carry, cfg, cos=cos, sin=sin, mode="decode",
+                cache=layer_cache, pos=pos,
+            )
+            return constrain(y, ("batch", "seq", "embed")), new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    def body(carry, layer_p):
+        y, cache, aux = _decoder_layer_apply(
+            layer_p, carry, cfg, cos=cos, sin=sin, mode=mode, dropless=dropless
+        )
+        return constrain(y, ("batch", "seq", "embed")), (cache, aux)
+
+    if remat_policy is not None:
+        body = jax.checkpoint(body, policy=remat_policy)
+    x, (caches_out, auxs) = jax.lax.scan(body, x, p["layers"])
+    return x, caches_out, jnp.sum(auxs)
+
+
+def _run_rwkv_stack(p, cfg, x, *, mode, caches=None, remat_policy=None):
+    if mode == "decode":
+        def body(carry, xs):
+            layer_p, layer_cache = xs
+            y, new_cache = ssm_mod.rwkv6_apply(
+                layer_p, carry, head_dim=cfg.ssm_head_dim, d_ff=cfg.d_ff,
+                cache=layer_cache,
+            )
+            return constrain(y, ("batch", "seq", "embed")), new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
+        return x, new_caches, jnp.zeros((), jnp.float32)
+
+    def body(carry, layer_p):
+        y, cache = ssm_mod.rwkv6_apply(
+            layer_p, carry, head_dim=cfg.ssm_head_dim, d_ff=cfg.d_ff
+        )
+        return constrain(y, ("batch", "seq", "embed")), cache
+
+    if remat_policy is not None:
+        body = jax.checkpoint(body, policy=remat_policy)
+    x, caches_out = jax.lax.scan(body, x, p["layers"])
+    return x, caches_out, jnp.zeros((), jnp.float32)
+
+
+def _shared_attn_apply(p, x, cfg, *, cos, sin, mode, cache=None, pos=None):
+    h = rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+    h, new_cache = attn.gqa_apply(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, cos=cos, sin=sin, mode=mode,
+        cache=cache, pos=pos,
+    )
+    x = x + h
+    from repro.models.layers import swiglu_apply
+
+    h2 = rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+    return x + swiglu_apply(p["mlp"], h2), new_cache
+
+
+def _run_hybrid_stack(p, cfg, x, *, mode, caches=None, pos=None, remat_policy=None):
+    """Zamba2: segments of mamba layers, shared attn block between them."""
+    B, S, _ = x.shape
+    sizes = _segments(cfg.n_layers, cfg.attn_every)
+    n_attn = len(sizes) - 1  # shared attn after every segment except the last
+    if mode == "decode":
+        positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    else:
+        positions = jnp.arange(S)
+    cos, sin = _rope_cache(cfg, positions)
+
+    def mamba_body(carry, xs):
+        if mode == "decode":
+            layer_p, layer_cache = xs
+        else:
+            layer_p, layer_cache = xs, None
+        h = rmsnorm_apply(layer_p["ln"], carry, eps=cfg.norm_eps)
+        h, new_cache = ssm_mod.mamba2_apply(
+            layer_p["mix"], h, d_inner=2 * cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, conv_width=cfg.ssm_conv_width,
+            chunk=cfg.ssm_chunk, cache=layer_cache,
+        )
+        return constrain(carry + h, ("batch", "seq", "embed")), new_cache
+
+    body = mamba_body if remat_policy is None else jax.checkpoint(mamba_body, policy=remat_policy)
+
+    mamba_caches_out, attn_caches_out = [], []
+    lo = 0
+    for seg_idx, size in enumerate(sizes):
+        seg_params = _tree_slice(p["mamba"], lo, lo + size)
+        if mode == "decode":
+            seg_caches = _tree_slice(caches["mamba"], lo, lo + size)
+            x, seg_caches_new = jax.lax.scan(body, x, (seg_params, seg_caches))
+        else:
+            x, seg_caches_new = jax.lax.scan(body, x, seg_params)
+        mamba_caches_out.append(seg_caches_new)
+        lo += size
+        if seg_idx < n_attn:
+            if mode == "decode":
+                a_cache = jax.tree.map(lambda a: a[seg_idx], caches["attn"])
+                x, a_new = _shared_attn_apply(
+                    p["shared_attn"], x, cfg, cos=cos, sin=sin, mode="decode",
+                    cache=a_cache, pos=pos,
+                )
+            else:
+                x, a_new = _shared_attn_apply(
+                    p["shared_attn"], x, cfg, cos=cos, sin=sin, mode=mode
+                )
+            attn_caches_out.append(a_new)
+
+    caches_out = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *mamba_caches_out),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *attn_caches_out)
+        if attn_caches_out
+        else {},
+    }
+    return x, caches_out, jnp.zeros((), jnp.float32)
+
+
+def _run_encdec(p, cfg, batch, *, mode, caches=None, pos=None, remat_policy=None):
+    """Seamless: encoder over stub frames, decoder with self+cross attention."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def enc_body(carry, layer_p):
+        y, _, aux = _decoder_layer_apply(
+            layer_p, carry, cfg, cos=cos_e, sin=sin_e, mode="full"
+        )
+        return constrain(y, ("batch", "seq", "embed")), aux
+
+    def dec_body(carry, xs):
+        if mode == "decode":
+            layer_p, (self_cache, cross_cache) = xs
+        else:
+            layer_p, (self_cache, cross_cache) = xs, (None, None)
+        x = carry
+        h = rmsnorm_apply(layer_p["ln1"], x, eps=cfg.norm_eps)
+        h, self_new = attn.gqa_apply(
+            layer_p["self"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, cos=cos_d, sin=sin_d,
+            mode="decode" if mode == "decode" else "causal",
+            cache=self_cache, pos=pos,
+        )
+        x = x + h
+        hx = rmsnorm_apply(layer_p["ln_x"], x, eps=cfg.norm_eps)
+        if mode == "decode":
+            hx, cross_new = attn.gqa_apply(
+                layer_p["cross"], hx, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, mode="cross_decode", cache=cross_cache,
+            )
+        else:
+            hx, _ = attn.gqa_apply(
+                layer_p["cross"], hx, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, mode="cross", x_kv=enc_out,
+            )
+            # prefill builds the static cross cache from encoder memory
+            from repro.models.attention import _split_heads
+            from repro.models.layers import dense_apply as _da
+
+            cross_new = {
+                "k": _split_heads(_da(layer_p["cross"]["wk"], enc_out), cfg.n_kv_heads, cfg.resolved_head_dim),
+                "v": _split_heads(_da(layer_p["cross"]["wv"], enc_out), cfg.n_kv_heads, cfg.resolved_head_dim),
+            }
+        x = x + hx
+        from repro.models.layers import swiglu_apply
+
+        h2 = rmsnorm_apply(layer_p["ln2"], x, eps=cfg.norm_eps)
+        out = constrain(x + swiglu_apply(layer_p["mlp"], h2), ("batch", "seq", "embed"))
+        return out, (self_new, cross_new)
+
+    if mode == "decode":
+        # encoder already consumed; caches carry self+cross
+        positions = jnp.asarray(pos, jnp.int32).reshape(1)
+        cos_d, sin_d = _rope_cache(cfg, positions)
+        cos_e = sin_e = None
+        x = embedding_apply(p["embed"], batch["tokens"])
+        x, caches_new = jax.lax.scan(
+            dec_body, x, (p["dec_layers"], (caches["self"], caches["cross"]))
+        )
+        return x, {"self": caches_new[0], "cross": caches_new[1]}, jnp.zeros((), jnp.float32)
+
+    frames = batch["frames"].astype(dtype)
+    fe = dense_apply(p["frontend_proj"], frames) if "frontend_proj" in p else frames
+    cos_e, sin_e = _rope_cache(cfg, jnp.arange(fe.shape[1]))
+    enc_body_ = enc_body if remat_policy is None else jax.checkpoint(enc_body, policy=remat_policy)
+    enc_out, _ = jax.lax.scan(enc_body_, fe, p["enc_layers"])
+    enc_out = rmsnorm_apply(p["enc_norm"], enc_out, eps=cfg.norm_eps)
+
+    x = embedding_apply(p["embed"], batch["tokens"])
+    cos_d, sin_d = _rope_cache(cfg, jnp.arange(x.shape[1]))
+    dec_body_ = dec_body if remat_policy is None else jax.checkpoint(dec_body, policy=remat_policy)
+    x, caches_new = jax.lax.scan(dec_body_, x, p["dec_layers"])
+    return x, {"self": caches_new[0], "cross": caches_new[1]}, jnp.zeros((), jnp.float32)
+
+
+def backbone_apply(
+    p, cfg: ArchConfig, batch, *, mode, caches=None, pos=None,
+    remat_policy=None, dropless=True,
+):
+    """Dispatch to the family stack. Returns (hidden, caches, aux)."""
+    if cfg.encoder_decoder:
+        return _run_encdec(p, cfg, batch, mode=mode, caches=caches, pos=pos, remat_policy=remat_policy)
+    x = _embed_sequence(p, cfg, batch)
+    if cfg.ssm:
+        return _run_rwkv_stack(p, cfg, x, mode=mode, caches=caches, remat_policy=remat_policy)
+    if cfg.hybrid:
+        return _run_hybrid_stack(p, cfg, x, mode=mode, caches=caches, pos=pos, remat_policy=remat_policy)
+    return _run_decoder_stack(
+        p, cfg, x, mode=mode, caches=caches, pos=pos,
+        remat_policy=remat_policy, dropless=dropless,
+    )
+
+
+def token_loss(logits, targets):
+    """Mean next-token cross-entropy in f32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - ll)
+
+
+def forward_train(p, cfg: ArchConfig, batch, *, remat_policy=None, aux_weight=0.01):
+    x, _, aux = backbone_apply(
+        p, cfg, batch, mode="causal", remat_policy=remat_policy, dropless=False
+    )
+    x = rmsnorm_apply(p["final_norm"], x, eps=cfg.norm_eps)
+    if cfg.frontend and "frontend" in batch:
+        x = x[:, batch["frontend"].shape[1]:]  # loss on the text span only
+    logits = constrain(dense_apply(p["lm_head"], x), ("batch", "seq", "vocab"))
+    loss = token_loss(logits, batch["targets"])
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def prefill(p, cfg: ArchConfig, batch):
+    x, caches, _ = backbone_apply(p, cfg, batch, mode="causal")
+    x = rmsnorm_apply(p["final_norm"], x[:, -1:], eps=cfg.norm_eps)
+    logits = constrain(dense_apply(p["lm_head"], x)[:, 0], ("batch", "vocab"))
+    return logits, caches
+
+
+def decode_step(p, cfg: ArchConfig, token, caches, pos):
+    """token: (B, 1) int32; pos: scalar int32 write index."""
+    batch = {"tokens": token}
+    x, caches, _ = backbone_apply(p, cfg, batch, mode="decode", caches=caches, pos=pos)
+    x = rmsnorm_apply(p["final_norm"], x, eps=cfg.norm_eps)
+    logits = constrain(dense_apply(p["lm_head"], x)[:, 0], ("batch", "vocab"))
+    return logits, caches

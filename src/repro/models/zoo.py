@@ -1,0 +1,60 @@
+"""Model builder + parameter accounting."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable          # (key) -> (params, specs)
+    train_loss: Callable    # (params, batch, remat_policy=None) -> (loss, metrics)
+    prefill: Callable       # (params, batch) -> (last_logits, caches)
+    decode_step: Callable   # (params, token, caches, pos) -> (logits, caches)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: tfm.init_params(key, cfg),
+        train_loss=lambda p, batch, remat_policy=None: tfm.forward_train(
+            p, cfg, batch, remat_policy=remat_policy
+        ),
+        prefill=lambda p, batch: tfm.prefill(p, cfg, batch),
+        decode_step=lambda p, token, caches, pos: tfm.decode_step(
+            p, cfg, token, caches, pos
+        ),
+    )
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def count_params_abstract(cfg: ArchConfig) -> int:
+    shapes = jax.eval_shape(
+        lambda k: tfm.init_params(k, cfg)[0], jax.random.key(0)
+    )
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Parameters touched per token (MoE: shared + top_k of routed experts) —
+    the N in MODEL_FLOPS = 6*N*D."""
+    total = count_params_abstract(cfg)
+    if not cfg.moe:
+        return total
+    # routed expert params per layer
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    routed = cfg.n_layers * cfg.n_experts * per_expert
+    active_routed = cfg.n_layers * cfg.top_k * per_expert
+    return total - routed + active_routed

@@ -1,0 +1,10 @@
+"""Hand-rolled optimizers (no optax in this container — and the substrate
+rule is: build everything)."""
+
+from repro.optim.adafactor import adafactor
+from repro.optim.adamw import adamw
+from repro.optim.schedule import cosine_with_warmup
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor}
+
+__all__ = ["adamw", "adafactor", "cosine_with_warmup", "OPTIMIZERS"]

@@ -1,0 +1,68 @@
+"""Adafactor [Shazeer & Stern 2018] — factored second moment: O(n+m) state
+for an (n, m) matrix instead of Adam's O(nm).  At qwen2-72b scale this cuts
+optimizer HBM by ~2x vs AdamW (the m buffer disappears, v factors are
+negligible) — one of the levers the memory-bound hillclimb can pull."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(
+    lr: float = 1e-2,
+    *,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay_rate: float = 0.8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(per_leaf, params, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_rate)
+
+        def per_leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                )
+                upd = g / jnp.maximum(denom, eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                upd = g / jnp.sqrt(v)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p - lr * upd - lr * weight_decay * p).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [per_leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = tdef.unflatten([o[1] for o in out])
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)

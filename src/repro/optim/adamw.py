@@ -1,0 +1,64 @@
+"""AdamW with decoupled weight decay.
+
+State (m, v) is kept in f32 and mirrors the (f32 master) param tree, so
+under FSDP the optimizer state inherits the parameters' sharding — each
+device updates only its parameter shard (ZeRO-style, by construction)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params, step) -> (new_params, new_state)
+
+
+def adamw(
+    lr: float | Callable = 3e-4,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+
+        def upd(p, m_, v_):
+            mh = m_ / c1
+            vh = v_ / c2
+            return (p - lr_t * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)).astype(
+                p.dtype
+            )
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update)

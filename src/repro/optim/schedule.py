@@ -1,0 +1,14 @@
+"""LR schedules."""
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak: float, *, warmup: int = 100, total: int = 10_000, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * (step + 1) / warmup
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,1 @@
+"""Training/serving substrate: train state, steps, serving helpers."""

@@ -1,0 +1,64 @@
+"""Serving helpers: cache padding (prefill -> decode handoff) and a batched
+greedy-decode driver used by the serving example."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def _pad_axis(a, axis, to_len):
+    cur = a.shape[axis]
+    if cur >= to_len:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, to_len - cur)
+    return jnp.pad(a, pad)
+
+
+def pad_caches(cfg: ArchConfig, caches, cur_len: int, *, to_len: int):
+    """Grow prefill caches to a decode-capacity length along their seq axis.
+
+    Family layout (leading axis is the scan-stacked layer axis):
+      gqa self-attn  k/v: (L, B, Hkv, S, hd)  -> seq axis 3
+      MLA            c: (L, B, S, lora), kr: (L, B, S, rope) -> seq axis 2
+      zamba2         mamba states seq-free; shared attn k/v: (A, B, Hkv, S, hd)
+      rwkv           states seq-free
+      encdec         self like gqa; cross is static (encoder length)
+    """
+    if cfg.ssm:
+        return caches  # state caches are seq-free
+    if cfg.hybrid:
+        return {
+            "mamba": caches["mamba"],
+            "attn": jax.tree.map(lambda a: _pad_axis(a, 3, to_len), caches["attn"]),
+        }
+    if cfg.encoder_decoder:
+        return {
+            "self": jax.tree.map(lambda a: _pad_axis(a, 3, to_len), caches["self"]),
+            "cross": caches["cross"],
+        }
+    if cfg.mla:
+        return jax.tree.map(lambda a: _pad_axis(a, 2, to_len), caches)
+    return jax.tree.map(lambda a: _pad_axis(a, 3, to_len), caches)
+
+
+def greedy_generate(model, params, batch, *, max_new_tokens: int):
+    """Prefill + greedy decode loop (example driver; jits the decode step)."""
+    cfg = model.cfg
+    logits, caches = model.prefill(params, batch)
+    prompt_len = batch["tokens"].shape[1]
+    total = prompt_len + max_new_tokens
+    caches = pad_caches(cfg, caches, prompt_len, to_len=total)
+
+    step = jax.jit(model.decode_step)
+    tokens = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    offset = cfg.frontend_len if cfg.frontend else 0
+    for i in range(max_new_tokens):
+        tokens.append(tok)
+        logits, caches = step(params, tok, caches, jnp.asarray(prompt_len + i + offset, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(tokens, axis=1)

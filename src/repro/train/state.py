@@ -1,0 +1,40 @@
+"""Train state: f32 master params + optimizer state + step counter."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    step: jax.Array
+    params: dict
+    opt_state: dict
+
+
+def init_state(model, optimizer: Optimizer, key) -> tuple[TrainState, dict]:
+    params, specs = model.init(key)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return (
+        TrainState(
+            step=jnp.zeros((), jnp.int32),
+            params=master,
+            opt_state=optimizer.init(master),
+        ),
+        specs,
+    )
+
+
+def state_specs(specs: dict, optimizer_name: str = "adamw") -> dict:
+    """Logical-axis specs for the whole TrainState (mirrors params for m/v)."""
+    if optimizer_name == "adamw":
+        opt = {"m": specs, "v": specs}
+    else:  # adafactor factored dims handled leaf-wise at resolve time
+        opt = {"m": specs, "v": specs}
+    return {"step": (), "params": specs, "opt_state": opt}

@@ -1,0 +1,119 @@
+"""The jit-compiled step functions the launcher and the dry-run lower.
+
+train_step: gradient-accumulation scan over microbatches (bf16 compute, f32
+grad accumulators), remat policy on the layer scan, then one optimizer
+update on the f32 master params.  Activation sharding constraints are
+applied at the microbatch boundary; everything else is left to SPMD
+propagation from the param/batch shardings.
+
+serve steps: prefill and decode_step wrappers with donated caches (decode
+updates its KV cache in place — no per-token cache copy)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.train.state import TrainState
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def cast_params(params, dtype):
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params,
+    )
+
+
+def make_train_step(
+    model,
+    optimizer,
+    *,
+    microbatches: int = 1,
+    remat: str = "full",
+    sharding_policy=None,
+) -> Callable:
+    cfg: ArchConfig = model.cfg
+    policy = REMAT_POLICIES[remat]
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def _constrain_micro(tree, *, stacked: bool):
+        """Re-pin the batch axis after the microbatch reshape — SPMD loses
+        the data sharding across the (n, B/n, ...) reshape and would
+        otherwise replicate the whole microbatch on every device."""
+        if sharding_policy is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def leaf(l):
+            spec = sharding_policy.batch_pspec(l.shape[1:] if stacked else l.shape)
+            parts = (None, *spec) if stacked else tuple(spec)
+            return jax.lax.with_sharding_constraint(
+                l, NamedSharding(sharding_policy.mesh, P(*parts))
+            )
+
+        return jax.tree.map(leaf, tree)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        n = microbatches
+
+        def to_micro(x):
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+        micro = _constrain_micro(jax.tree.map(to_micro, batch), stacked=True)
+        params_c = cast_params(state.params, compute_dtype)
+
+        def loss_fn(p, mb):
+            mb = _constrain_micro(mb, stacked=False)
+            loss, metrics = model.train_loss(p, mb, remat_policy=policy)
+            return loss, metrics
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def body(carry, mb):
+            gacc, lacc = carry
+            (loss, _), grads = grad_fn(params_c, mb)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads
+            )
+            return (gacc, lacc + loss), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params_c
+        )
+        (gsum, lsum), _ = jax.lax.scan(body, (gzero, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / n, gsum)
+
+        new_params, new_opt = optimizer.update(
+            grads, state.opt_state, state.params, state.step
+        )
+        new_state = TrainState(
+            step=state.step + 1, params=new_params, opt_state=new_opt
+        )
+        return new_state, {"loss": lsum / n}
+
+    return train_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos)
+
+    return decode_step

@@ -1,0 +1,42 @@
+"""Shared test config.
+
+x64 is enabled globally: the paper pillar's optimality/Theorem-1 checks need
+f64 KKT residuals.  LM-substrate tests pass explicit f32/bf16 dtypes, so they
+are unaffected.  NOTE: no XLA_FLAGS device-count override here by design —
+tests and benches must see the single real CPU device; only launch/dryrun.py
+fakes 512 devices (and does so before importing jax).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_covariance(rng, p: int, n: int | None = None) -> np.ndarray:
+    """A generic dense sample covariance with no planted structure."""
+    n = n or max(2 * p, 8)
+    X = rng.standard_normal((n, p)) @ (
+        np.eye(p) + 0.3 * rng.standard_normal((p, p))
+    )
+    return np.cov(X, rowvar=False, bias=True)
+
+
+def lambda_between_edges(S: np.ndarray, q: float) -> float:
+    """A lambda at quantile q of the off-diagonal |S| values, nudged to the
+    midpoint between two consecutive distinct values so the strict-inequality
+    threshold (eq. 4) is unambiguous."""
+    p = S.shape[0]
+    iu = np.triu_indices(p, 1)
+    vals = np.unique(np.abs(S[iu]))
+    if vals.size == 1:
+        return float(vals[0] * 0.5)
+    k = int(np.clip(q * (vals.size - 1), 0, vals.size - 2))
+    return float(0.5 * (vals[k] + vals[k + 1]))

@@ -1,0 +1,114 @@
+"""Bucketing/padding invariants, scheduling bounds, capacity rule."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import lambda_between_edges, random_covariance
+from repro.core import glasso, lambda_for_max_component, merge_profile
+from repro.core.blocks import bucket_size, build_plan, pad_block
+from repro.core.schedule import check_capacity, default_cost, lpt_assign
+from repro.core.solvers import glasso_bcd
+from repro.core.screening import thresholded_components
+
+
+def test_padding_invariance():
+    """Corollary of Theorem 1: padding a block with identity coordinates does
+    not perturb the block's solution, and padded coords solve to 1/(1+lam)."""
+    rng = np.random.default_rng(0)
+    Sb = random_covariance(rng, 5)
+    lam = 0.3
+    direct = np.asarray(glasso_bcd(jnp.asarray(Sb), lam, tol=1e-10))
+    padded = np.asarray(
+        glasso_bcd(jnp.asarray(pad_block(Sb, 8)), lam, tol=1e-10)
+    )
+    np.testing.assert_allclose(padded[:5, :5], direct, atol=1e-8)
+    np.testing.assert_allclose(
+        padded[5:, 5:], np.eye(3) / (1.0 + lam), atol=1e-8
+    )
+    assert np.abs(padded[:5, 5:]).max() == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(4, 16), seed=st.integers(0, 1000), q=st.floats(0.3, 0.9))
+def test_screen_equals_noscreen(p, seed, q):
+    """The headline experiment: glasso with screening == without, exactly the
+    same Theta (up to solver tolerance)."""
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lam = lambda_between_edges(S, q)
+    a = glasso(S, lam, solver="bcd", screen=True, tol=1e-9)
+    b = glasso(S, lam, solver="bcd", screen=False, tol=1e-9)
+    np.testing.assert_allclose(a.Theta, b.Theta, atol=2e-5)
+
+
+def test_plan_partitions_vertices():
+    rng = np.random.default_rng(1)
+    S = random_covariance(rng, 20)
+    lam = lambda_between_edges(S, 0.8)
+    labels, _ = thresholded_components(S, lam)
+    plan = build_plan(S, lam, labels)
+    seen = list(plan.isolated)
+    for b in plan.buckets:
+        assert b.blocks.shape[0] == len(b.comps)
+        assert b.blocks.shape[1] == b.size
+        for c in b.comps:
+            assert bucket_size(len(c)) == b.size
+            seen.extend(c.tolist())
+    assert sorted(seen) == list(range(20))
+
+
+def test_bucket_sizes_powers_of_two():
+    assert [bucket_size(b) for b in (2, 3, 4, 5, 9, 17)] == [2, 4, 4, 8, 16, 32]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 200), min_size=1, max_size=60),
+    workers=st.integers(1, 16),
+)
+def test_lpt_bounds(sizes, workers):
+    a = lpt_assign(sizes, workers)
+    costs = [default_cost(s) for s in sizes]
+    assert a.worker_of.shape == (len(sizes),)
+    assert set(a.worker_of.tolist()) <= set(range(workers))
+    np.testing.assert_allclose(a.loads.sum(), sum(costs), rtol=1e-9)
+    # LPT makespan <= mean load + max job (classic greedy bound)
+    assert a.makespan <= sum(costs) / workers + max(costs) + 1e-9
+
+
+def test_capacity_check():
+    check_capacity([3, 5], 5)
+    with pytest.raises(ValueError, match="exceeds worker capacity"):
+        check_capacity([3, 6], 5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(4, 25), seed=st.integers(0, 1000), p_max=st.integers(1, 10))
+def test_lambda_for_max_component(p, seed, p_max):
+    """Consequence 5: at the returned lambda the max component fits; for any
+    strictly smaller threshold at the next edge value it would not."""
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lam = lambda_for_max_component(S, p_max)
+    _, stats = thresholded_components(S, lam)
+    assert stats.max_comp <= p_max
+    if lam > 0.0:
+        _, stats2 = thresholded_components(S, lam * (1 - 1e-12) - 1e-15)
+        assert stats2.max_comp > p_max
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(3, 20), seed=st.integers(0, 1000))
+def test_merge_profile_matches_direct_cc(p, seed):
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    prof = merge_profile(S)
+    vals = prof["value"][1:]  # finite edge values, descending
+    for k in range(min(5, vals.size)):
+        # lambda just below vals[k] includes edges of weight vals[k]
+        lam = vals[k] - 1e-12 if k == vals.size - 1 else 0.5 * (vals[k] + vals[k + 1])
+        _, stats = thresholded_components(S, lam)
+        assert stats.n_components == prof["n_components"][k + 1]
+        assert stats.max_comp == prof["max_comp"][k + 1]

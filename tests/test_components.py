@@ -1,0 +1,74 @@
+"""Connected-component implementations agree with library oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+import scipy.sparse.csgraph as csgraph
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    canonicalize_labels,
+    connected_components_host,
+    connected_components_labelprop,
+    partitions_equal,
+    threshold_adjacency,
+)
+
+
+def random_adjacency(rng, p, density):
+    A = rng.random((p, p)) < density
+    A = np.triu(A, 1)
+    return A | A.T
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.integers(2, 60),
+    density=st.floats(0.0, 0.3),
+    seed=st.integers(0, 10_000),
+)
+def test_unionfind_matches_scipy(p, density, seed):
+    rng = np.random.default_rng(seed)
+    A = random_adjacency(rng, p, density)
+    ours = connected_components_host(A)
+    _, ref = csgraph.connected_components(sp.csr_matrix(A), directed=False)
+    assert partitions_equal(ours, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.integers(2, 40),
+    density=st.floats(0.0, 0.4),
+    seed=st.integers(0, 10_000),
+)
+def test_labelprop_matches_unionfind(p, density, seed):
+    rng = np.random.default_rng(seed)
+    A = random_adjacency(rng, p, density)
+    # encode adjacency as a "covariance": edge weight 1.0, threshold 0.5
+    S = A.astype(np.float64)
+    labels_jax = np.asarray(connected_components_labelprop(jnp.asarray(S), 0.5))
+    labels_host = connected_components_host(A)
+    assert partitions_equal(labels_jax, labels_host)
+    # label-prop labels are already canonical (min vertex index of component)
+    np.testing.assert_array_equal(labels_jax, canonicalize_labels(labels_jax))
+
+
+def test_threshold_strictness():
+    """eq. (4) is a strict inequality: |S_ij| == lambda is NOT an edge."""
+    S = np.array([[1.0, 0.5], [0.5, 1.0]])
+    assert not threshold_adjacency(S, 0.5).any()
+    assert threshold_adjacency(S, 0.49999).sum() == 2
+
+
+def test_networkx_oracle_on_path_graph():
+    import networkx as nx
+
+    p = 30
+    G = nx.random_geometric_graph(p, 0.2, seed=4)
+    A = nx.to_numpy_array(G) > 0
+    ours = connected_components_host(A)
+    ref = np.empty(p, dtype=int)
+    for i, comp in enumerate(nx.connected_components(G)):
+        for v in comp:
+            ref[v] = i
+    assert partitions_equal(ours, ref)

@@ -1,0 +1,85 @@
+"""Covariance substrate: estimators + synthetic generators."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.covariance import (
+    impute_missing,
+    lambda_interval_for_k,
+    microarray_like,
+    paper_synthetic,
+    sample_correlation,
+    sample_covariance,
+    streaming_covariance,
+)
+from repro.core import thresholded_components
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 50), p=st.integers(1, 20), seed=st.integers(0, 1000))
+def test_covariance_matches_numpy(n, p, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    S = np.asarray(sample_covariance(jnp.asarray(X)))
+    np.testing.assert_allclose(S, np.cov(X, rowvar=False, bias=True), atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(4, 200),
+    p=st.integers(1, 16),
+    chunk=st.integers(3, 64),
+    seed=st.integers(0, 1000),
+)
+def test_streaming_matches_direct(n, p, chunk, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    a = np.asarray(streaming_covariance(jnp.asarray(X), chunk=chunk))
+    b = np.asarray(sample_covariance(jnp.asarray(X)))
+    np.testing.assert_allclose(a, b, atol=1e-8)
+
+
+def test_correlation_properties():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((40, 8)) * rng.uniform(0.1, 10.0, size=(1, 8))
+    R = np.asarray(sample_correlation(jnp.asarray(X)))
+    np.testing.assert_allclose(np.diag(R), 1.0, atol=1e-10)
+    assert np.abs(R).max() <= 1.0 + 1e-9
+    # paper Section 4.2: correlation input => all nodes isolated at lambda >= 1
+    _, stats = thresholded_components(R, 1.0)
+    assert stats.n_isolated == 8
+
+
+def test_imputation():
+    X = np.array([[1.0, np.nan], [3.0, 4.0], [np.nan, 8.0]])
+    Xi = np.asarray(impute_missing(jnp.asarray(X)))
+    np.testing.assert_allclose(Xi[2, 0], 2.0)
+    np.testing.assert_allclose(Xi[0, 1], 6.0)
+    assert not np.isnan(Xi).any()
+
+
+def test_paper_synthetic_calibration():
+    """sigma is calibrated so 1.25 * max off-block |noise| == 1 (Section 4.1)."""
+    K, p1 = 3, 8
+    S = paper_synthetic(K, p1, seed=0)
+    p = K * p1
+    block_id = np.repeat(np.arange(K), p1)
+    off = block_id[:, None] != block_id[None, :]
+    np.testing.assert_allclose(np.abs(S[off]).max(), 0.8, atol=1e-12)
+    lam_min, lam_max = lambda_interval_for_k(S, K)
+    assert lam_min >= 0.8 - 1e-9  # off-block edges all below lambda_min
+    lam_mid = 0.5 * (lam_min + lam_max)
+    _, stats = thresholded_components(S, lam_mid)
+    assert stats.n_components == K
+    assert stats.max_comp == p1
+
+
+def test_microarray_like_profile():
+    X = microarray_like(60, 300, seed=0)
+    assert X.shape == (60, 300)
+    R = np.asarray(sample_correlation(jnp.asarray(X)))
+    # moderate lambda splits into many components with a non-trivial largest
+    _, stats = thresholded_components(R, 0.5)
+    assert stats.n_components > 10
+    assert stats.max_comp >= 4

@@ -1,0 +1,145 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs pure-jnp
+oracle, across shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.covgram.ops import covgram
+from repro.kernels.covgram.ref import covgram_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.prox_l1.ops import prox_step
+from repro.kernels.prox_l1.ref import prox_step_ref
+from repro.kernels.threshold_cc.ops import connected_components_kernel, labelprop_step
+from repro.kernels.threshold_cc.ref import labelprop_step_ref
+
+
+# ---------------------------------------------------------------- covgram
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "n,p,bn,bp",
+    [(64, 32, 16, 8), (100, 17, 32, 8), (33, 64, 8, 16), (256, 96, 64, 32)],
+)
+def test_covgram_shapes(n, p, bn, bp, dtype):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, p)), dtype)
+    out = covgram(x, block_n=bn, block_p=bp)
+    ref = covgram_ref(x)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 80), p=st.integers(2, 40), seed=st.integers(0, 100))
+def test_covgram_property(n, p, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, p)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(covgram(x, block_n=16, block_p=8)),
+        np.asarray(covgram_ref(x)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+# ----------------------------------------------------------- threshold_cc
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(2, 70), seed=st.integers(0, 100), lam=st.floats(0.0, 2.0))
+def test_labelprop_step_matches_ref(p, seed, lam):
+    rng = np.random.default_rng(seed)
+    S = rng.standard_normal((p, p))
+    S = S + S.T
+    labels = jnp.asarray(rng.integers(0, p, size=p), jnp.int32)
+    out = labelprop_step(jnp.asarray(S, jnp.float32), labels, lam, block=16)
+    ref = labelprop_step_ref(jnp.asarray(S, jnp.float32), labels, lam)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(2, 50), seed=st.integers(0, 100), density=st.floats(0.01, 0.3))
+def test_cc_kernel_matches_host(p, seed, density):
+    from repro.core.components import components_from_covariance_host, partitions_equal
+
+    rng = np.random.default_rng(seed)
+    A = rng.random((p, p)) < density
+    A = np.triu(A, 1)
+    S = (A | A.T).astype(np.float32)
+    labels = np.asarray(connected_components_kernel(jnp.asarray(S), 0.5, block=16))
+    assert partitions_equal(labels, components_from_covariance_host(S, 0.5))
+
+
+# ---------------------------------------------------------------- prox_l1
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,b,blk", [(1, 8, 8), (3, 20, 8), (5, 64, 32), (2, 100, 64)])
+def test_prox_shapes(B, b, blk, dtype):
+    rng = np.random.default_rng(1)
+    theta = jnp.asarray(rng.standard_normal((B, b, b)), dtype)
+    grad = jnp.asarray(rng.standard_normal((B, b, b)), dtype)
+    out = prox_step(theta, grad, 0.1, 0.5, block=blk)
+    ref = prox_step_ref(theta, grad, 0.1, 0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(2, 40),
+    t=st.floats(1e-4, 2.0),
+    lam=st.floats(0.0, 2.0),
+    seed=st.integers(0, 100),
+)
+def test_prox_property(b, t, lam, seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.standard_normal((2, b, b)), jnp.float32)
+    grad = jnp.asarray(rng.standard_normal((2, b, b)), jnp.float32)
+    out = prox_step(theta, grad, t, lam, block=16)
+    ref = prox_step_ref(theta, grad, t, lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # prox output is exactly sparse where |theta - t g| <= t lam
+    z = np.asarray(theta) - t * np.asarray(grad)
+    assert np.all(np.asarray(out)[np.abs(z) <= t * lam] == 0.0)
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Skv,d",
+    [
+        (1, 4, 4, 64, 64, 16),    # MHA square
+        (2, 8, 2, 32, 32, 8),     # GQA 4:1
+        (1, 4, 1, 40, 72, 16),    # MQA, ragged + cross lengths
+    ],
+)
+def test_flash_attention_matches_ref(B, Hq, Hkv, Sq, Skv, d, causal, dtype):
+    if causal and Sq != Skv:
+        pytest.skip("causal requires aligned self-attention lengths here")
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    sq=st.integers(2, 48),
+    d=st.sampled_from([4, 8, 16]),
+    group=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_property(sq, d, group, seed):
+    rng = np.random.default_rng(seed)
+    Hkv = 2
+    q = jnp.asarray(rng.standard_normal((1, Hkv * group, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, Hkv, sq, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, Hkv, sq, d)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,66 @@
+"""Serving-path tests: cache padding invariants, greedy generation sanity,
+multi-token generation consistency with repeated decode."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, get_arch
+from repro.data.specs import make_batch
+from repro.models.zoo import build_model
+from repro.train.serving import greedy_generate, pad_caches
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "deepseek_v2_lite_16b", "rwkv6_7b", "zamba2_1_2b"])
+def test_pad_caches_preserves_prefix(arch):
+    cfg = dataclasses.replace(get_arch(arch).reduced(), dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    shape = ShapeConfig("s", seq_len=8, global_batch=2, kind="prefill")
+    batch = make_batch(cfg, shape, seed=0)
+    _, caches = model.prefill(params, batch)
+    padded = pad_caches(cfg, caches, 8, to_len=16)
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(padded)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape == b.shape:
+            np.testing.assert_array_equal(a, b)
+        else:
+            # padded along exactly one axis; prefix must be intact
+            (axis,) = [i for i in range(a.ndim) if a.shape[i] != b.shape[i]]
+            sl = tuple(slice(0, s) for s in a.shape)
+            np.testing.assert_array_equal(b[sl], a)
+
+
+def test_greedy_generate_matches_stepwise_prefill():
+    """Token t+1 from the generate loop equals the argmax of a fresh prefill
+    over the extended prompt (teacher-forcing equivalence for greedy)."""
+    cfg = dataclasses.replace(get_arch("granite_3_8b").reduced(), dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(1))
+    shape = ShapeConfig("s", seq_len=6, global_batch=2, kind="prefill")
+    batch = make_batch(cfg, shape, seed=3)
+
+    gen = np.asarray(greedy_generate(model, params, batch, max_new_tokens=3))
+    # reference: roll the prompt forward with fresh prefills
+    tokens = np.asarray(batch["tokens"])
+    for step in range(3):
+        logits, _ = model.prefill(params, {"tokens": jnp.asarray(tokens)})
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))[:, None]
+        np.testing.assert_array_equal(gen[:, step : step + 1], nxt)
+        tokens = np.concatenate([tokens, nxt.astype(np.int32)], axis=1)
+
+
+def test_generate_shapes_and_determinism():
+    cfg = dataclasses.replace(get_arch("qwen2_5_3b").reduced(), dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(2))
+    shape = ShapeConfig("s", seq_len=5, global_batch=3, kind="prefill")
+    batch = make_batch(cfg, shape, seed=4)
+    a = np.asarray(greedy_generate(model, params, batch, max_new_tokens=4))
+    b = np.asarray(greedy_generate(model, params, batch, max_new_tokens=4))
+    assert a.shape == (3, 4)
+    np.testing.assert_array_equal(a, b)
+    assert (a >= 0).all() and (a < cfg.vocab + 256).all()

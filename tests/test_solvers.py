@@ -1,0 +1,100 @@
+"""Solver correctness: KKT optimality, cross-solver agreement, batching."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import lambda_between_edges, random_covariance
+from repro.core import SOLVERS, glasso_bcd, kkt_residual
+from repro.core.solvers.kkt import glasso_objective
+
+
+@pytest.mark.parametrize("solver", sorted(SOLVERS))
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(2, 12), seed=st.integers(0, 1000), q=st.floats(0.2, 0.9))
+def test_kkt_optimality(solver, p, seed, q):
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lam = lambda_between_edges(S, q)
+    Theta = SOLVERS[solver](jnp.asarray(S), lam, tol=1e-9)
+    res = float(kkt_residual(jnp.asarray(S), Theta, lam, zero_tol=1e-8))
+    scale = float(np.abs(S).max())
+    assert res < 2e-4 * max(scale, 1.0), f"{solver} kkt residual {res}"
+
+
+@settings(max_examples=8, deadline=None)
+@given(p=st.integers(2, 10), seed=st.integers(0, 1000))
+def test_solvers_agree(p, seed):
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lam = lambda_between_edges(S, 0.5)
+    thetas = {
+        name: np.asarray(fn(jnp.asarray(S), lam, tol=1e-9))
+        for name, fn in SOLVERS.items()
+    }
+    objs = {
+        name: float(glasso_objective(jnp.asarray(S), jnp.asarray(T), lam))
+        for name, T in thetas.items()
+    }
+    best = min(objs.values())
+    for name, obj in objs.items():
+        assert obj - best < 1e-4 * max(abs(best), 1.0), (name, objs)
+    np.testing.assert_allclose(thetas["bcd"], thetas["admm"], atol=5e-4)
+    np.testing.assert_allclose(thetas["pg"], thetas["admm"], atol=5e-4)
+
+
+def test_node_screen_equivalence():
+    """eq. (10): the node-screen shortcut must not change the solution."""
+    rng = np.random.default_rng(2)
+    S = random_covariance(rng, 8)
+    lam = lambda_between_edges(S, 0.85)  # sparse regime, screening active
+    a = np.asarray(glasso_bcd(jnp.asarray(S), lam, node_screen=True, tol=1e-9))
+    b = np.asarray(glasso_bcd(jnp.asarray(S), lam, node_screen=False, tol=1e-9))
+    np.testing.assert_allclose(a, b, atol=1e-8)
+
+
+def test_size_one_block():
+    S = jnp.asarray([[2.5]])
+    for name, fn in SOLVERS.items():
+        Theta = np.asarray(fn(S, 0.3))
+        np.testing.assert_allclose(Theta, [[1.0 / 2.8]], rtol=1e-6, err_msg=name)
+
+
+def test_vmap_batching_matches_loop():
+    rng = np.random.default_rng(9)
+    blocks = np.stack([random_covariance(rng, 6) for _ in range(5)])
+    lam = 0.2
+    batched = np.asarray(
+        jax.vmap(lambda Sb: glasso_bcd(Sb, lam, tol=1e-9))(jnp.asarray(blocks))
+    )
+    single = np.stack(
+        [np.asarray(glasso_bcd(jnp.asarray(b), lam, tol=1e-9)) for b in blocks]
+    )
+    np.testing.assert_allclose(batched, single, atol=1e-7)
+
+
+def test_warm_start_path_speedup_and_correctness():
+    rng = np.random.default_rng(4)
+    S = random_covariance(rng, 10)
+    lam_hi = lambda_between_edges(S, 0.8)
+    lam_lo = lambda_between_edges(S, 0.5)
+    Theta_hi = glasso_bcd(jnp.asarray(S), lam_hi, tol=1e-10)
+    W_hi = jnp.linalg.inv(Theta_hi)
+    warm = np.asarray(glasso_bcd(jnp.asarray(S), lam_lo, W0=W_hi, tol=1e-10))
+    cold = np.asarray(glasso_bcd(jnp.asarray(S), lam_lo, tol=1e-10))
+    np.testing.assert_allclose(warm, cold, atol=1e-6)
+
+
+def test_objective_at_solution_beats_perturbations():
+    rng = np.random.default_rng(6)
+    S = random_covariance(rng, 7)
+    lam = lambda_between_edges(S, 0.5)
+    Theta = np.asarray(glasso_bcd(jnp.asarray(S), lam, tol=1e-10))
+    obj = float(glasso_objective(jnp.asarray(S), jnp.asarray(Theta), lam))
+    for seed in range(5):
+        d = np.random.default_rng(seed).standard_normal(Theta.shape) * 1e-3
+        d = 0.5 * (d + d.T)
+        pert = float(glasso_objective(jnp.asarray(S), jnp.asarray(Theta + d), lam))
+        assert pert >= obj - 1e-10

@@ -1,0 +1,97 @@
+"""Property tests for Theorem 1: the vertex partition of the thresholded
+sample covariance graph equals the partition of the glasso solution's
+concentration graph — for ANY PSD input and ANY lambda > 0."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import lambda_between_edges, random_covariance
+from repro.core import (
+    glasso_admm,
+    kkt_residual,
+    partitions_equal,
+    thresholded_components,
+)
+from repro.core.components import connected_components_host
+from repro.covariance import lambda_interval_for_k, paper_synthetic
+
+
+def concentration_partition(Theta: np.ndarray, zero_tol: float = 0.0) -> np.ndarray:
+    A = np.abs(Theta) > zero_tol
+    np.fill_diagonal(A, False)
+    return connected_components_host(A)
+
+
+def solve_full(S: np.ndarray, lam: float) -> np.ndarray:
+    # ADMM's Z-iterate is exactly sparse (soft-threshold zeros), so the
+    # support needs no fragile epsilon.
+    Theta = np.asarray(glasso_admm(jnp.asarray(S), lam, tol=1e-9, max_iter=4000))
+    res = float(kkt_residual(jnp.asarray(S), jnp.asarray(Theta), lam, zero_tol=1e-12))
+    assert res < 1e-5, f"oracle solve failed to converge (kkt={res})"
+    return Theta
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p=st.integers(4, 14),
+    seed=st.integers(0, 10_000),
+    q=st.floats(0.2, 0.95),
+)
+def test_theorem1_random_covariance(p, seed, q):
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lam = lambda_between_edges(S, q)
+    labels_thresh, _ = thresholded_components(S, lam)
+    Theta = solve_full(S, lam)
+    labels_conc = concentration_partition(Theta)
+    assert partitions_equal(labels_thresh, labels_conc)
+
+
+@pytest.mark.parametrize("K,p1", [(2, 5), (3, 6), (4, 4)])
+def test_theorem1_paper_synthetic(K, p1):
+    S = paper_synthetic(K, p1, seed=1)
+    lam_min, lam_max = lambda_interval_for_k(S, K)
+    # lambda_II backs off 2% from the knife edge: at lambda exactly 1 ulp
+    # below the critical |S_ij| the true cross-entries are O(ulp) — exact in
+    # theory (Thm 1) but below any solver's resolution.
+    lam_II = lam_max - 0.02 * (lam_max - lam_min)
+    for lam in (0.5 * (lam_min + lam_max), lam_II):  # lambda_I and lambda_II
+        labels_thresh, stats = thresholded_components(S, lam)
+        assert stats.n_components == K
+        Theta = solve_full(S, lam)
+        assert partitions_equal(labels_thresh, concentration_partition(Theta))
+
+
+def test_theorem1_remark1_edges_may_differ():
+    """Remark 1: within a component the *edge sets* need not coincide — the
+    thresholded graph can have an edge where Theta is zero.  Exhibit one."""
+    rng = np.random.default_rng(7)
+    found = False
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        S = random_covariance(rng, 8)
+        lam = lambda_between_edges(S, 0.3)
+        labels, stats = thresholded_components(S, lam)
+        Theta = solve_full(S, lam)
+        A_thresh = np.abs(S) > lam
+        np.fill_diagonal(A_thresh, False)
+        A_conc = np.abs(Theta) > 0
+        np.fill_diagonal(A_conc, False)
+        assert partitions_equal(labels, concentration_partition(Theta))
+        if not np.array_equal(A_thresh, A_conc):
+            found = True
+            break
+    assert found, "never saw differing edge sets (suspicious)"
+
+
+def test_isolated_nodes_closed_form():
+    """Witten-Friedman special case: isolated nodes get Theta_ii=1/(S_ii+lam)."""
+    rng = np.random.default_rng(3)
+    S = random_covariance(rng, 6)
+    lam = float(np.abs(S - np.diag(np.diag(S))).max() * 1.01)  # all isolated
+    labels, stats = thresholded_components(S, lam)
+    assert stats.n_components == 6 and stats.n_isolated == 6
+    Theta = solve_full(S, lam)
+    np.testing.assert_allclose(Theta, np.diag(1.0 / (np.diag(S) + lam)), rtol=1e-6)

@@ -1,0 +1,50 @@
+"""Theorem 2: vertex partitions are nested along the lambda path (components
+only merge as lambda decreases) — for both the thresholded covariance graph
+(by construction) and the estimated concentration graph (via Theorem 1)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from conftest import lambda_between_edges, random_covariance
+from repro.core import glasso_path, is_refinement, thresholded_components
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(4, 20), seed=st.integers(0, 10_000))
+def test_thresholded_partitions_nested(p, seed):
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lams = sorted(
+        (lambda_between_edges(S, q) for q in (0.1, 0.3, 0.5, 0.7, 0.9)), reverse=True
+    )
+    labels = [thresholded_components(S, lam)[0] for lam in lams]
+    for fine, coarse in zip(labels[:-1], labels[1:]):
+        assert is_refinement(fine, coarse)
+
+
+def test_estimated_partitions_nested_via_solve():
+    rng = np.random.default_rng(11)
+    S = random_covariance(rng, 10)
+    lams = sorted(
+        (lambda_between_edges(S, q) for q in (0.3, 0.55, 0.8)), reverse=True
+    )
+    results = glasso_path(S, lams, solver="admm", tol=1e-8)
+    parts = []
+    for res in results:
+        A = np.abs(res.Theta) > 0
+        np.fill_diagonal(A, False)
+        from repro.core.components import connected_components_host
+
+        parts.append(connected_components_host(A))
+    for fine, coarse in zip(parts[:-1], parts[1:]):
+        assert is_refinement(fine, coarse)
+
+
+def test_path_warm_start_matches_cold():
+    rng = np.random.default_rng(5)
+    S = random_covariance(rng, 8)
+    lams = [lambda_between_edges(S, q) for q in (0.8, 0.5, 0.3)]
+    warm = glasso_path(S, lams, solver="bcd", warm_start=True, tol=1e-9)
+    cold = glasso_path(S, lams, solver="bcd", warm_start=False, tol=1e-9)
+    for rw, rc in zip(warm, cold):
+        np.testing.assert_allclose(rw.Theta, rc.Theta, atol=1e-5)
