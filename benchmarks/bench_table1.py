@@ -16,10 +16,11 @@ import jax
 import numpy as np
 
 
-def run(rows=None, solvers=("bcd", "pg"), log=print) -> list[dict]:
+def run(rows=None, solvers=("bcd", "pg"), cc_backend="host", log=print) -> list[dict]:
     jax.config.update("jax_enable_x64", True)
     from repro.core import glasso
     from repro.covariance import lambda_interval_for_k, paper_synthetic
+    from repro.engine import compiled_cache_stats
 
     rows = rows or [(2, 50), (2, 100), (5, 60), (8, 40)]
     out = []
@@ -30,12 +31,13 @@ def run(rows=None, solvers=("bcd", "pg"), log=print) -> list[dict]:
         lam_II = lam_max - 0.02 * (lam_max - lam_min)
         for lam_name, lam in (("lambda_I", lam_I), ("lambda_II", lam_II)):
             for solver in solvers:
-                # warm BOTH paths' jit caches first — the paper's timings are
-                # solve times, not compile times (Fortran/MATLAB have no JIT)
-                glasso(S, lam, solver=solver, screen=True, tol=1e-7)
+                # warm BOTH paths' executables first (the engine's compiled
+                # cache is process-global) — the paper's timings are solve
+                # times, not compile times (Fortran/MATLAB have no JIT)
+                glasso(S, lam, solver=solver, screen=True, cc_backend=cc_backend, tol=1e-7)
                 glasso(S, lam, solver=solver, screen=False, tol=1e-7)
                 t0 = time.perf_counter()
-                r_screen2 = glasso(S, lam, solver=solver, screen=True, tol=1e-7)
+                r_screen2 = glasso(S, lam, solver=solver, screen=True, cc_backend=cc_backend, tol=1e-7)
                 t_screen = time.perf_counter() - t0
                 t0 = time.perf_counter()
                 r_full = glasso(S, lam, solver=solver, screen=False, tol=1e-7)
@@ -58,6 +60,7 @@ def run(rows=None, solvers=("bcd", "pg"), log=print) -> list[dict]:
                     f"speedup {rec['speedup']:6.2f}x  partition {rec['graph_partition_s']:.4f}s  "
                     f"diff {err:.2e}"
                 )
+    log(f"engine compiled cache after sweep: {compiled_cache_stats()}")
     return out
 
 

@@ -6,6 +6,11 @@ Table 3's structure: examples where the FULL problem is beyond the
 unscreened solver's reach — only the screened path is run, reporting the
 average per-lambda time and the graph-partition cost.
 
+Both grids now run through the engine's ``glasso_path`` — one union-find
+planning pass per grid, diffed bucket plans, warm starts — and
+``run_planning`` measures exactly that: incremental path planning vs naive
+per-lambda replanning on the Table-3 synthetic at p >= 2000.
+
 Synthetic microarray generator matches the paper's (n, p) regimes
 qualitatively (latent-factor modules, power-law sizes); see DESIGN.md §8.
 """
@@ -20,8 +25,8 @@ import numpy as np
 
 def run(log=print) -> list[dict]:
     jax.config.update("jax_enable_x64", True)
-    from repro.core import glasso, lambda_for_max_component, merge_profile
-    from repro.core.screening import thresholded_components
+    from repro.core import glasso, glasso_path, lambda_for_max_component, merge_profile
+    from repro.core.instrument import counts, reset
     from repro.covariance import microarray_like, sample_correlation
     import jax.numpy as jnp
 
@@ -35,12 +40,13 @@ def run(log=print) -> list[dict]:
         prof = merge_profile(R)
         vals = prof["value"][1:]
         lams = sorted(set(np.concatenate([[lam0 * 1.001], vals[vals > lam0][:4]])), reverse=True)[:5]
-        t_screen_total, t_full_total, mx = 0.0, 0.0, []
-        for lam in lams:
-            t0 = time.perf_counter()
-            r = glasso(R, float(lam), solver="bcd", tol=1e-6)
-            t_screen_total += time.perf_counter() - t0
-            mx.append(r.screen.max_comp)
+        reset("planner")
+        t0 = time.perf_counter()
+        results = glasso_path(R, lams, solver="bcd", tol=1e-6)
+        t_screen_total = time.perf_counter() - t0
+        mx = [r.screen.max_comp for r in results]
+        reused = counts("planner").get("planner.buckets_reused", 0)
+        t_full_total = 0.0
         feasible_full = p_max <= 20  # unscreened full p=400 only for the cheap regime
         if feasible_full:
             for lam in lams:
@@ -54,11 +60,12 @@ def run(log=print) -> list[dict]:
             "with_screen_s": round(t_screen_total, 3),
             "without_screen_s": round(t_full_total, 3) if feasible_full else None,
             "speedup": round(t_full_total / max(t_screen_total, 1e-9), 2) if feasible_full else None,
+            "buckets_reused": int(reused),
         }
         out.append(rec)
         log(f"Table2 {regime}: avg max comp {rec['avg_max_component']:.1f} "
-            f"screen {rec['with_screen_s']}s full {rec['without_screen_s']} "
-            f"speedup {rec['speedup']}")
+            f"path {rec['with_screen_s']}s (buckets reused {reused}) "
+            f"full {rec['without_screen_s']} speedup {rec['speedup']}")
 
     # ---- Table-3 analog: larger p where only the screened path is viable
     for name, n, p in (("B-like", 100, 1200), ("C-like", 80, 2400)):
@@ -70,19 +77,16 @@ def run(log=print) -> list[dict]:
         lams = vals[vals > lam500][:3]
         if len(lams) == 0:
             lams = [lam500 * 1.01]
-        times, parts, mx = [], [], []
-        for lam in lams:
-            labels, stats = thresholded_components(R, float(lam))
-            parts.append(stats.seconds)
-            t0 = time.perf_counter()
-            r = glasso(R, float(lam), solver="bcd", tol=1e-6)
-            times.append(time.perf_counter() - t0)
-            mx.append(r.screen.max_comp)
+        t0 = time.perf_counter()
+        results = glasso_path(R, [float(l) for l in lams], solver="bcd", tol=1e-6)
+        total = time.perf_counter() - t0
+        parts = [r.screen.seconds for r in results]
+        mx = [r.screen.max_comp for r in results]
         rec = {
             "table": "3", "example": name, "n": n, "p": p,
             "grid_size": len(lams),
             "avg_max_component": float(np.mean(mx)),
-            "avg_solve_s": round(float(np.mean(times)), 3),
+            "avg_solve_s": round(total / len(lams), 3),
             "avg_partition_s": round(float(np.mean(parts)), 5),
         }
         out.append(rec)
@@ -91,5 +95,54 @@ def run(log=print) -> list[dict]:
     return out
 
 
+def run_planning(p: int = 2400, n: int = 80, n_lambdas: int = 20, log=print) -> dict:
+    """Incremental path planning vs per-lambda replanning (NO solving).
+
+    The acceptance target for the engine planner: one union-find pass +
+    diffed plans must beat n_lambdas x (threshold + union-find + re-pad)
+    on the Table-3 C-like synthetic at p >= 2000."""
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+
+    from repro.core import lambda_for_max_component, merge_profile, thresholded_components
+    from repro.core.blocks import build_plan
+    from repro.core.instrument import count, reset
+    from repro.covariance import microarray_like, sample_correlation
+    from repro.engine.planner import plan_path
+
+    X = microarray_like(n, p, seed=1)
+    R = np.asarray(sample_correlation(jnp.asarray(X)))
+    lam0 = lambda_for_max_component(R, 100)
+    vals = merge_profile(R)["value"][1:]
+    grid = vals[vals > lam0]
+    lams = [float(l) for l in grid[:: max(1, len(grid) // n_lambdas)][:n_lambdas]]
+
+    reset("partition")
+    t0 = time.perf_counter()
+    path = plan_path(R, lams)
+    t_inc = time.perf_counter() - t0
+    passes = count("partition.unionfind_passes")
+
+    t0 = time.perf_counter()
+    for lam in lams:
+        labels, _ = thresholded_components(R, lam)
+        build_plan(R, lam, labels)
+    t_naive = time.perf_counter() - t0
+
+    rec = {
+        "p": p, "n_lambdas": len(lams),
+        "incremental_s": round(t_inc, 3),
+        "replanning_s": round(t_naive, 3),
+        "speedup": round(t_naive / max(t_inc, 1e-9), 2),
+        "unionfind_passes": int(passes),
+        "steps": len(path.steps),
+    }
+    log(f"planning p={p} grid={len(lams)}: incremental {rec['incremental_s']}s "
+        f"({passes} union-find pass) vs replanning {rec['replanning_s']}s "
+        f"-> {rec['speedup']}x")
+    return rec
+
+
 if __name__ == "__main__":
     run()
+    run_planning()

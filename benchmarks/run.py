@@ -2,7 +2,12 @@
 microbench + the LM dry-run roofline summary.  Prints ``name,us_per_call,
 derived`` CSV rows at the end for machine consumption.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--smoke]
+
+``--smoke`` is the CI gate: a fast fixed-seed equivalence check that the
+engine path (screen -> plan -> async batched solve) produces the same Theta
+as the dense unscreened path, for single solves and for an incremental
+warm-started lambda path.  Exits non-zero on any mismatch.
 """
 
 from __future__ import annotations
@@ -13,10 +18,52 @@ import sys
 from pathlib import Path
 
 
+def smoke() -> None:
+    """Engine-vs-dense equivalence on fixed seeds; asserts, no timing."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.core import glasso, glasso_path
+    from repro.core.instrument import count, reset
+    from repro.covariance import lambda_interval_for_k, paper_synthetic
+    from repro.engine import available_cc_backends
+
+    S = paper_synthetic(3, 12, seed=0)
+    lam_min, lam_max = lambda_interval_for_k(S, 3)
+    lam = 0.5 * (lam_min + lam_max)
+
+    dense = glasso(S, lam, screen=False, tol=1e-9)
+    for backend in available_cc_backends():
+        res = glasso(S, lam, cc_backend=backend, tol=1e-9)
+        err = float(np.abs(res.Theta - dense.Theta).max())
+        assert err < 1e-6, f"backend {backend}: engine vs dense diff {err:.2e}"
+        print(f"smoke: cc_backend={backend:10s} matches dense (diff {err:.2e})")
+
+    lams = sorted(np.linspace(lam_min * 0.8, lam_max * 1.05, 6), reverse=True)
+    reset()
+    path = glasso_path(S, lams, tol=1e-9)
+    assert count("partition.unionfind_passes") == 1, "path planner must plan in one pass"
+    for r in path:
+        ref = glasso(S, r.lam, screen=False, tol=1e-9)
+        err = float(np.abs(r.Theta - ref.Theta).max())
+        assert err < 1e-5, f"path lam={r.lam:.4f}: engine vs dense diff {err:.2e}"
+    print(f"smoke: {len(path)}-lambda warm-started path matches dense "
+          f"(1 union-find pass)")
+    print("smoke: OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller Table-1 grid")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI equivalence gate (engine path == dense path)")
     args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
 
     rows = []
 
@@ -39,6 +86,14 @@ def main() -> None:
         key = f"table{r['table']}/" + (r.get("regime") or r.get("example", ""))
         rows.append((key, (r.get("with_screen_s") or r.get("avg_solve_s", 0)) * 1e6,
                      f"max_comp={r['avg_max_component']:.0f}"))
+
+    print("=" * 72)
+    print("Engine planner: incremental path planning vs per-lambda replanning")
+    print("=" * 72)
+    plan_rec = bench_table23.run_planning(p=1200 if args.quick else 2400,
+                                          n=100 if args.quick else 80)
+    rows.append((f"planner/p{plan_rec['p']}", plan_rec["incremental_s"] * 1e6,
+                 f"speedup={plan_rec['speedup']}"))
 
     print("=" * 72)
     print("Figure 1 analog: component-size profile across lambda")

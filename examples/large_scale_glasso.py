@@ -1,10 +1,11 @@
 """END-TO-END DRIVER (the paper's kind: large-scale optimization).
 
-Full production pipeline on one box:
+Full production pipeline on one box, all through the Plan->Execute engine:
   raw samples -> streaming covariance (Pallas covgram twin) -> exact
-  screening (Theorem 1) -> LPT scheduling of components onto the device
-  mesh -> zero-communication distributed block solves (shard_map) ->
-  assembled precision matrix -> KKT verification.
+  screening via the engine's ``shard_map`` registry backend (row-sharded
+  label propagation, cross-checked against the host backend) -> incremental
+  bucket plan -> async LPT-placed batched block solves -> assembled
+  precision matrix -> KKT verification.
 
 On a pod, the same code runs with make_production_mesh(); here the mesh is
 the container's single device — the shard_map paths are identical.
@@ -22,12 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kkt_residual, lambda_for_max_component
-from repro.core.blocks import build_plan
 from repro.core.components import component_lists, partitions_equal
-from repro.core.distributed import distributed_bucket_solve, distributed_components
+from repro.core.instrument import counts, reset
 from repro.core.schedule import lpt_assign
-from repro.core.solvers import glasso_bcd
 from repro.covariance import microarray_like
+from repro.engine import Engine, label_components
 from repro.kernels.covgram.ops import covgram
 
 
@@ -47,47 +47,40 @@ def main():
     lam = lambda_for_max_component(R, p_max) * 1.0005
     print(f"capacity-bounded lambda (p_max={p_max}): {lam:.4f}")
 
-    mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-
-    # distributed CC (label-prop, row-sharded) cross-checked against host
+    # distributed CC via the registry backend, cross-checked against host
     t0 = time.perf_counter()
-    labels_dist = np.asarray(distributed_components(jnp.asarray(R), lam, mesh))
+    labels_dist = label_components(R, lam, backend="shard_map")
     t_cc = time.perf_counter() - t0
-    from repro.core.components import components_from_covariance_host
-
-    assert partitions_equal(labels_dist, components_from_covariance_host(R, lam))
+    assert partitions_equal(labels_dist, label_components(R, lam, backend="host"))
     comps = component_lists(labels_dist)
     sizes = [len(c) for c in comps if len(c) > 1]
-    print(f"distributed CC: {t_cc:.2f}s; {len(comps)} components, "
+    print(f"shard_map CC: {t_cc:.2f}s; {len(comps)} components, "
           f"{len(sizes)} non-trivial, max {max(sizes)}")
 
-    # LPT schedule across (simulated) workers
+    # LPT preview across (simulated) workers; the engine executor applies the
+    # same policy across the real local devices
     a = lpt_assign(sizes, n_workers=8)
     print(f"LPT over 8 workers: makespan/mean = {a.balance:.3f}")
 
-    # zero-communication distributed bucket solves
-    plan = build_plan(R, lam, labels_dist)
+    # engine solve: plan + async batched bucket dispatch + assembly (the
+    # partition above is passed through — screening is not paid twice)
+    reset()
+    engine = Engine(solver="bcd", cc_backend="shard_map", tol=1e-7)
     t0 = time.perf_counter()
-    Theta = np.zeros_like(R)
-    Theta[plan.isolated, plan.isolated] = 1.0 / (R[plan.isolated, plan.isolated] + lam)
-    for bucket in plan.buckets:
-        sols = np.asarray(
-            distributed_bucket_solve(bucket.blocks, lam, glasso_bcd, mesh, tol=1e-7)
-        )
-        for comp, sol in zip(bucket.comps, sols):
-            b = len(comp)
-            Theta[np.ix_(comp, comp)] = sol[:b, :b]
-    print(f"distributed block solves: {time.perf_counter()-t0:.2f}s")
+    res = engine.run(R, lam, p_max=p_max, labels=labels_dist)
+    print(f"engine block solves: {time.perf_counter()-t0:.2f}s "
+          f"(buckets padded {counts().get('planner.buckets_padded', 0)}, "
+          f"dispatches {counts().get('executor.dispatches', 0)})")
+    Theta = res.Theta
 
     # verify blockwise KKT on the largest few components
     worst = 0.0
     for comp in comps[:5]:
         if len(comp) < 2:
             continue
-        res = float(kkt_residual(jnp.asarray(R[np.ix_(comp, comp)]),
-                                 jnp.asarray(Theta[np.ix_(comp, comp)]), lam))
-        worst = max(worst, res)
+        res_kkt = float(kkt_residual(jnp.asarray(R[np.ix_(comp, comp)]),
+                                     jnp.asarray(Theta[np.ix_(comp, comp)]), lam))
+        worst = max(worst, res_kkt)
     print(f"worst blockwise KKT residual (top-5 components): {worst:.2e}")
     print("OK" if worst < 1e-4 else "FAILED")
 

@@ -14,6 +14,7 @@ from repro.core.components import (
 from repro.core.glasso import GlassoResult, glasso, glasso_path
 from repro.core.partition import (
     component_size_distribution,
+    labels_at_thresholds,
     lambda_for_max_component,
     merge_profile,
 )
@@ -33,6 +34,7 @@ __all__ = [
     "partitions_equal",
     "is_refinement",
     "merge_profile",
+    "labels_at_thresholds",
     "lambda_for_max_component",
     "component_size_distribution",
     "SOLVERS",

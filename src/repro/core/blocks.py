@@ -32,6 +32,46 @@ def bucket_size(b: int, *, min_bucket: int = 2) -> int:
     return size
 
 
+def plan_bucket_size(b: int, *, single_block: bool = False, min_bucket: int = 2) -> int:
+    """Padded size for a component of size b inside a plan.
+
+    Buckets holding several blocks stay at the next power of two (few compiled
+    shapes, shared across lambdas).  A bucket holding a SINGLE block — always
+    the case for the largest component, and for the full p x p problem when
+    screening is off — gets mild next-multiple-of-128 padding instead: pow2
+    would pad 1025 -> 2048, an 8x FLOPs blowup at b^3 cost, where 1025 -> 1152
+    costs 1.4x.  128 keeps TPU lane/MXU alignment; below 128 pow2 is already
+    mild, so the rule only changes sizes > 256.
+    """
+    p2 = bucket_size(b, min_bucket=min_bucket)
+    if not single_block or b <= 128:
+        return p2
+    return min(p2, ((b + 127) // 128) * 128)
+
+
+def group_components(comps: list[np.ndarray]) -> tuple[np.ndarray, dict[int, list[np.ndarray]]]:
+    """Split components into (isolated vertices, {padded size: members}).
+
+    Grouping is by power-of-two size; groups that end up with exactly one
+    block are then re-padded to their mild single-block size (see
+    ``plan_bucket_size``).  Sizes cannot collide across groups: the mild size
+    stays within (pow2/2, pow2].
+    """
+    isolated = np.array(
+        sorted(int(c[0]) for c in comps if len(c) == 1), dtype=np.int64
+    )
+    by_p2: dict[int, list[np.ndarray]] = {}
+    for c in comps:
+        if len(c) == 1:
+            continue
+        by_p2.setdefault(bucket_size(len(c)), []).append(c)
+    by_size: dict[int, list[np.ndarray]] = {}
+    for members in by_p2.values():
+        size = plan_bucket_size(len(members[0]), single_block=len(members) == 1)
+        by_size.setdefault(size, []).extend(members)
+    return isolated, dict(sorted(by_size.items()))
+
+
 def pad_block(S_block: np.ndarray, size: int) -> np.ndarray:
     b = S_block.shape[0]
     out = np.eye(size, dtype=S_block.dtype)
@@ -65,6 +105,18 @@ class Plan:
         return mx
 
 
+def make_bucket(
+    S: np.ndarray, size: int, members: list[np.ndarray], *, dtype=np.float64
+) -> Bucket:
+    """Pad and stack one size-group of components (the ONLY place padded
+    bucket stacks are constructed — build_plan and the engine planner both
+    delegate here, so the padding convention cannot desynchronize)."""
+    blocks = np.stack(
+        [pad_block(np.asarray(S, dtype)[np.ix_(c, c)], size) for c in members]
+    )
+    return Bucket(size=size, comps=members, blocks=blocks)
+
+
 def build_plan(
     S: np.ndarray, lam: float, labels: np.ndarray, *, dtype=np.float64
 ) -> Plan:
@@ -72,19 +124,11 @@ def build_plan(
     from repro.core.components import component_lists
 
     comps = component_lists(labels)
-    isolated = np.array(sorted(int(c[0]) for c in comps if len(c) == 1), dtype=np.int64)
-    by_size: dict[int, list[np.ndarray]] = {}
-    for c in comps:
-        if len(c) == 1:
-            continue
-        by_size.setdefault(bucket_size(len(c)), []).append(c)
-    buckets = []
-    for size in sorted(by_size):
-        members = by_size[size]
-        blocks = np.stack(
-            [pad_block(np.asarray(S, dtype)[np.ix_(c, c)], size) for c in members]
-        )
-        buckets.append(Bucket(size=size, comps=members, blocks=blocks))
+    isolated, by_size = group_components(comps)
+    buckets = [
+        make_bucket(S, size, members, dtype=dtype)
+        for size, members in by_size.items()
+    ]
     return Plan(p=S.shape[0], lam=float(lam), labels=labels, isolated=isolated, buckets=buckets)
 
 

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.jax_compat import shard_map
+
 
 def distributed_components(
     S: jax.Array, lam, mesh, *, axis: str = "data", max_rounds: int | None = None
@@ -43,7 +45,7 @@ def distributed_components(
     spec_rows = P(axis, None)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(spec_rows, P()), out_specs=P(), check_vma=False
+        shard_map, mesh=mesh, in_specs=(spec_rows, P()), out_specs=P()
     )
     def run(S_rows, lam_arr):
         rows = S_rows.shape[0]
@@ -109,7 +111,7 @@ def distributed_bucket_solve(
         )
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(P(axis, None, None),), out_specs=P(axis, None, None), check_vma=False
+        shard_map, mesh=mesh, in_specs=(P(axis, None, None),), out_specs=P(axis, None, None)
     )
     def run(local):
         return jax.vmap(lambda Sb: solver(Sb, lam, **solver_opts))(local)

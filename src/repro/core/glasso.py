@@ -1,72 +1,31 @@
-"""Public graphical-lasso API: screening wrapper + lambda-path driver.
+"""Public graphical-lasso API: thin wrappers over the Plan->Execute engine.
 
 ``glasso(S, lam)``        solve (1) — with exact covariance-thresholding
                           screening (Theorem 1) on by default, or screen=False
                           for the paper's "without screening" baseline column.
-``glasso_path(S, lams)``  descending-lambda path exploiting Theorem 2:
-                          components only merge as lambda decreases, so each
-                          block is warm-started from the block-diagonal of the
-                          previous solution restricted to its vertices.
+                          ``cc_backend`` picks any registered screening backend
+                          ("host", "jax", "pallas", "shard_map", ...).
+``glasso_path(S, lams)``  descending-lambda path exploiting Theorem 2: the
+                          engine plans the whole grid from ONE union-find pass,
+                          diffs consecutive plans so unchanged buckets skip
+                          re-padding, and warm-starts every block from the
+                          previous solution.
+
+The engine itself (``repro.engine``) is the extension surface: new screening
+backends register with ``@register_cc_backend``; the executor's compiled
+solver cache is shared process-wide (lambda paths, benchmarks, and the
+``launch/serve_glasso.py`` endpoint all reuse the same executables).
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import blocks as blocks_mod
-from repro.core import schedule as schedule_mod
-from repro.core.screening import ScreenStats, thresholded_components
-from repro.core.solvers import SOLVERS
+from repro.core.screening import ScreenStats  # noqa: F401  (re-export, API compat)
+from repro.engine.api import Engine, GlassoResult
 
-
-@dataclass
-class GlassoResult:
-    lam: float
-    Theta: np.ndarray
-    labels: np.ndarray
-    screen: ScreenStats | None
-    solve_seconds: float
-    solver: str
-    block_sizes: list[int] = field(default_factory=list)
-
-    @property
-    def support(self) -> np.ndarray:
-        """Estimated concentration-graph adjacency (eq. (2))."""
-        A = np.abs(self.Theta) > 0
-        np.fill_diagonal(A, False)
-        return A
-
-
-def _solve_plan(
-    S, plan: blocks_mod.Plan, lam, solver_fn, dtype, warm_W: np.ndarray | None, solver_opts
-) -> np.ndarray:
-    sols = []
-    for bucket in plan.buckets:
-        stacked = jnp.asarray(bucket.blocks, dtype)
-        opts = dict(solver_opts)
-        if warm_W is not None:
-            W0 = np.stack(
-                [
-                    blocks_mod.pad_block(
-                        warm_W[np.ix_(c, c)].astype(np.asarray(bucket.blocks).dtype),
-                        bucket.size,
-                    )
-                    for c in bucket.comps
-                ]
-            )
-            # pad_block puts 1.0 on padded diagonal; W padding wants 1 + lam.
-            for k, c in enumerate(bucket.comps):
-                b = len(c)
-                idx = np.arange(b, bucket.size)
-                W0[k, idx, idx] = 1.0 + lam
-            opts["W0"] = jnp.asarray(W0, dtype)
-        out = blocks_mod.solve_bucket(stacked, float(lam), solver_fn, **opts)
-        sols.append(np.asarray(out))
-    return blocks_mod.assemble_dense(plan, sols, S)
+__all__ = ["GlassoResult", "glasso", "glasso_path"]
 
 
 def glasso(
@@ -81,36 +40,8 @@ def glasso(
     warm_W: np.ndarray | None = None,
     **solver_opts,
 ) -> GlassoResult:
-    S = np.asarray(S)
-    p = S.shape[0]
-    solver_fn = SOLVERS[solver]
-
-    screen_stats = None
-    if screen:
-        labels, screen_stats = thresholded_components(S, lam, backend=cc_backend)
-    else:
-        labels = np.zeros(p, dtype=np.int64)  # one global component
-
-    plan = blocks_mod.build_plan(S, lam, labels)
-    schedule_mod.check_capacity(
-        [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
-    )
-
-    t0 = time.perf_counter()
-    Theta = _solve_plan(S, plan, lam, solver_fn, dtype, warm_W, solver_opts)
-    solve_seconds = time.perf_counter() - t0
-
-    return GlassoResult(
-        lam=float(lam),
-        Theta=Theta,
-        labels=labels,
-        screen=screen_stats,
-        solve_seconds=solve_seconds,
-        solver=solver,
-        block_sizes=sorted(
-            (len(c) for b in plan.buckets for c in b.comps), reverse=True
-        ),
-    )
+    engine = Engine(solver=solver, dtype=dtype, cc_backend=cc_backend, **solver_opts)
+    return engine.run(S, lam, screen=screen, p_max=p_max, warm_W=warm_W)
 
 
 def glasso_path(
@@ -120,26 +51,25 @@ def glasso_path(
     solver: str = "bcd",
     warm_start: bool = True,
     dtype=jnp.float64,
+    screen: bool = True,
+    cc_backend: str = "host",
+    p_max: int | None = None,
     **solver_opts,
 ) -> list[GlassoResult]:
-    """Solve along a descending lambda path.
+    """Solve along a descending lambda path (one planning pass, warm starts).
 
     Theorem 2 guarantees the vertex partitions are nested (components only
     merge), so the previous Theta/W restricted to a new component's vertices
     is block-diagonal over its old sub-components — a valid PD warm start.
+    ``cc_backend`` is accepted for API symmetry with ``glasso``; path planning
+    always uses the host edge-sorted union-find (it IS the incremental
+    planner), which produces the identical partition.  ``screen=False`` is the
+    paper's unscreened baseline column: no planner, one dense solve per
+    lambda.
     """
-    lambdas = sorted((float(l) for l in np.asarray(lambdas).ravel()), reverse=True)
-    results: list[GlassoResult] = []
-    warm_W = None
-    for lam in lambdas:
-        res = glasso(S, lam, solver=solver, dtype=dtype, warm_W=warm_W, **solver_opts)
-        results.append(res)
-        if warm_start:
-            # W = Theta^{-1} blockwise; store densely for the next lambda.
-            warm_W = np.zeros_like(res.Theta)
-            from repro.core.components import component_lists
-
-            for comp in component_lists(res.labels):
-                blk = res.Theta[np.ix_(comp, comp)]
-                warm_W[np.ix_(comp, comp)] = np.linalg.inv(blk)
-    return results
+    del cc_backend  # see docstring
+    engine = Engine(solver=solver, dtype=dtype, **solver_opts)
+    if not screen:
+        lams = sorted((float(l) for l in np.asarray(list(lambdas)).ravel()), reverse=True)
+        return [engine.run(S, lam, screen=False, p_max=p_max) for lam in lams]
+    return engine.run_path(S, lambdas, warm_start=warm_start, p_max=p_max)

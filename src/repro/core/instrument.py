@@ -1,0 +1,38 @@
+"""Process-wide counters for planner/executor observability.
+
+The engine's acceptance invariants are stated as counter facts — "one
+union-find pass per ``glasso_path`` call", "this serving batch hit the
+compiled-solver cache N times" — so the counters live in one tiny module that
+every layer (core, engine, launch) can bump without import cycles.  Thread
+safe: the serving endpoint bumps from worker threads.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import Counter
+
+_LOCK = threading.Lock()
+_COUNTS: Counter[str] = Counter()
+
+
+def bump(name: str, n: int = 1) -> None:
+    with _LOCK:
+        _COUNTS[name] += n
+
+
+def count(name: str) -> int:
+    with _LOCK:
+        return _COUNTS[name]
+
+
+def counts(prefix: str = "") -> dict[str, int]:
+    with _LOCK:
+        return {k: v for k, v in _COUNTS.items() if k.startswith(prefix)}
+
+
+def reset(prefix: str = "") -> None:
+    """Reset all counters with the given prefix ('' resets everything)."""
+    with _LOCK:
+        for k in [k for k in _COUNTS if k.startswith(prefix)]:
+            del _COUNTS[k]

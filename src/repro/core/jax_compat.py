@@ -1,0 +1,42 @@
+"""Version-compat shims for the handful of jax APIs that moved after 0.4.x.
+
+The container pins jax 0.4.37 while some call sites were written against the
+newer surface; everything engine-side goes through these helpers so the
+distributed screening/solving backends stay first-class on either version:
+
+    shard_map(...)   jax.shard_map (>=0.6, ``check_vma``) vs
+                     jax.experimental.shard_map.shard_map (0.4.x, ``check_rep``)
+    make_mesh(...)   ``axis_types`` keyword only exists on newer jax
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Unreplicated-output-check disabled in both dialects (the label-prop
+    while_loop trips the 0.4.x replication checker)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True):
+    """jax.make_mesh with axis_types=Auto where supported."""
+    if auto_axes and hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes,
+            axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def local_device_mesh(axis: str = "data"):
+    """1-D mesh over every local device (the engine's default placement)."""
+    return make_mesh((jax.device_count(),), (axis,))

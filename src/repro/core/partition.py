@@ -18,6 +18,18 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.instrument import bump
+
+
+def _sorted_edges(S: np.ndarray):
+    """Upper-triangle edges of |S| sorted by decreasing weight."""
+    S = np.asarray(S)
+    p = S.shape[0]
+    iu, ju = np.triu_indices(p, 1)
+    w = np.abs(S[iu, ju])
+    order = np.argsort(-w, kind="stable")
+    return iu[order], ju[order], w[order]
+
 
 def merge_profile(S: np.ndarray, *, max_edges: int | None = None) -> dict:
     """Incremental-union merge profile.
@@ -30,14 +42,12 @@ def merge_profile(S: np.ndarray, *, max_edges: int | None = None) -> dict:
     lambda >= max|S_ij| regime (all isolated): value=+inf boundary handled by
     callers via lambda >= value[1].
     """
+    bump("partition.unionfind_passes")
     S = np.asarray(S)
     p = S.shape[0]
-    iu, ju = np.triu_indices(p, 1)
-    w = np.abs(S[iu, ju])
-    order = np.argsort(-w, kind="stable")
+    iu, ju, w = _sorted_edges(S)
     if max_edges is not None:
-        order = order[:max_edges]
-    iu, ju, w = iu[order], ju[order], w[order]
+        iu, ju, w = iu[:max_edges], ju[:max_edges], w[:max_edges]
 
     parent = np.arange(p)
     size = np.ones(p, dtype=np.int64)
@@ -98,16 +108,56 @@ def lambda_for_max_component(S: np.ndarray, p_max: int) -> float:
     return float(vals[bad[0]])
 
 
+def labels_at_thresholds(S: np.ndarray, lambdas, *, edges=None) -> list[np.ndarray]:
+    """Canonical component labels at every requested lambda from ONE
+    incremental union-find pass over the edge-sorted |S_ij| (Theorem 2: the
+    partitions are nested, so one descending sweep visits them all).
+
+    Returns one (p,) canonical label array per lambda, aligned with the INPUT
+    order of ``lambdas`` (internally processed descending).  Each snapshot
+    costs O(p) on top of the shared O(p^2 log p) sort — this is the engine
+    path-planner's only partition pass, counted in
+    ``instrument.count("partition.unionfind_passes")``.
+    """
+    from repro.core.components import canonicalize_labels
+
+    bump("partition.unionfind_passes")
+    S = np.asarray(S)
+    p = S.shape[0]
+    iu, ju, w = _sorted_edges(S) if edges is None else edges
+
+    parent = np.arange(p)
+
+    def find(i):
+        root = i
+        while parent[root] != root:
+            root = parent[root]
+        while parent[i] != root:
+            parent[i], i = root, parent[i]
+        return root
+
+    lams = np.asarray(list(lambdas), dtype=np.float64).ravel()
+    out: list[np.ndarray | None] = [None] * lams.size
+    k, m = 0, w.size
+    for pos in np.argsort(-lams, kind="stable"):
+        lam = lams[pos]
+        while k < m and w[k] > lam:  # strict: eq. (4)
+            ra, rb = find(int(iu[k])), find(int(ju[k]))
+            if ra != rb:
+                parent[rb if ra < rb else ra] = min(ra, rb)
+            k += 1
+        roots = np.fromiter((find(i) for i in range(p)), np.int64, p)
+        out[pos] = canonicalize_labels(roots)
+    return out  # type: ignore[return-value]
+
+
 def component_size_distribution(S: np.ndarray, lambdas: np.ndarray) -> list[dict]:
     """Figure-1 data: for each lambda, the histogram of component sizes.
 
-    Re-runs union-find once over the sorted edges, snapshotting at each
-    requested lambda (descending order internally)."""
-    from repro.core.components import components_from_covariance_host
-
+    Runs union-find ONCE over the sorted edges via ``labels_at_thresholds``,
+    snapshotting at each requested lambda (descending order internally)."""
     out = []
-    for lam in np.asarray(lambdas):
-        labels = components_from_covariance_host(S, float(lam))
+    for lam, labels in zip(np.asarray(lambdas), labels_at_thresholds(S, lambdas)):
         _, counts = np.unique(labels, return_counts=True)
         sizes, freq = np.unique(counts, return_counts=True)
         out.append(

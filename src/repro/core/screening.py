@@ -26,42 +26,42 @@ class ScreenStats:
 
 
 def thresholded_components(
-    S: np.ndarray, lam: float, *, backend: str = "host"
+    S: np.ndarray, lam: float, *, backend: str = "host", **backend_opts
 ) -> tuple[np.ndarray, ScreenStats]:
     """Labels of the thresholded sample covariance graph + timing stats.
 
-    backend="host"  numpy union-find (orchestration path)
-    backend="jax"   min-label-propagation on device (used by the distributed
-                    path; identical partition, property-tested)
+    ``backend`` names any registered engine screening backend
+    (``repro.engine.registry``); the four built-ins are
+
+    backend="host"       numpy union-find (orchestration path)
+    backend="jax"        min-label-propagation on device
+    backend="pallas"     fused threshold+hook TPU kernel (interpret off-TPU)
+    backend="shard_map"  row-sharded label propagation over the local mesh
+
+    All produce the identical canonical partition (property-tested, including
+    ties |S_ij| == lambda — strict inequality, eq. (4)).
     """
+    from repro.engine.registry import label_components  # lazy: import cycle
+
     t0 = time.perf_counter()
-    if backend == "host":
-        from repro.core.components import components_from_covariance_host
-
-        labels = components_from_covariance_host(S, lam)
-    elif backend == "jax":
-        import jax.numpy as jnp
-
-        from repro.core.components import canonicalize_labels, connected_components_labelprop
-
-        labels = canonicalize_labels(
-            np.asarray(connected_components_labelprop(jnp.asarray(S), lam))
-        )
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    labels = label_components(S, lam, backend=backend, **backend_opts)
     dt = time.perf_counter() - t0
+    return labels, screen_stats_from_labels(S, lam, labels, seconds=dt)
 
+
+def screen_stats_from_labels(
+    S: np.ndarray, lam: float, labels: np.ndarray, *, seconds: float
+) -> ScreenStats:
     Sd = np.asarray(S)
     p = Sd.shape[0]
     off = ~np.eye(p, dtype=bool)
     n_edges = int((np.abs(Sd)[off] > lam).sum() // 2)
     _, counts = np.unique(labels, return_counts=True)
-    stats = ScreenStats(
+    return ScreenStats(
         lam=float(lam),
         n_components=int(counts.size),
         max_comp=int(counts.max()),
         n_isolated=int((counts == 1).sum()),
         n_edges=n_edges,
-        seconds=dt,
+        seconds=seconds,
     )
-    return labels, stats

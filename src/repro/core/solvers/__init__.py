@@ -27,4 +27,16 @@ SOLVERS = {
     "admm": glasso_admm,
 }
 
-__all__ = ["glasso_bcd", "glasso_pg", "glasso_admm", "kkt_residual", "SOLVERS"]
+# solvers that actually consume a W0 covariance warm start (pg/admm accept
+# the kwarg for API parity but discard it — the engine skips building W0
+# stacks for them entirely)
+WARM_START_SOLVERS = frozenset({"bcd"})
+
+__all__ = [
+    "glasso_bcd",
+    "glasso_pg",
+    "glasso_admm",
+    "kkt_residual",
+    "SOLVERS",
+    "WARM_START_SOLVERS",
+]

@@ -10,6 +10,11 @@ Per-iteration cost is one (b, b) eigh — O(b^3), same class as one GLASSO
 sweep.  Most robust solver on ill-conditioned blocks; the tests use it with a
 tight tolerance as the cross-check oracle.  Returns Z (the sparse iterate), so
 the support is exactly sparse — important for Theorem-1 pattern checks.
+
+rho is adapted online (Boyd Section 3.4.1: x2 when the primal residual runs
+10x ahead of the dual, /2 in the opposite case, with the scaled dual variable
+U rescaled accordingly) — fixed rho=1 stalls far from the optimum on
+ill-conditioned blocks well inside the default iteration budget.
 """
 
 from __future__ import annotations
@@ -30,40 +35,52 @@ def glasso_admm(
     lam: jax.Array,
     *,
     rho: float = 1.0,
-    max_iter: int = 500,
+    max_iter: int = 2000,
     tol: float = 1e-7,
     W0: jax.Array | None = None,  # accepted for API parity; unused
 ) -> jax.Array:
     b = S.shape[0]
     dtype = S.dtype
     lam = jnp.asarray(lam, dtype)
-    rho = jnp.asarray(rho, dtype)
-    eye = jnp.eye(b, dtype=dtype)
+    rho0 = jnp.asarray(rho, dtype)
 
-    def theta_update(Z, U):
+    def theta_update(Z, U, rho):
         rhs = rho * (Z - U) - S
         d, Q = jnp.linalg.eigh(rhs)
         theta_d = (d + jnp.sqrt(d * d + 4.0 * rho)) / (2.0 * rho)
         return (Q * theta_d[None, :]) @ Q.T
 
     def body(carry):
-        Z, U, _, _, it = carry
-        Theta = theta_update(Z, U)
+        Z, U, rho, _, _, it = carry
+        Theta = theta_update(Z, U, rho)
         Z_new = _soft(Theta + U, lam / rho)
         U_new = U + Theta - Z_new
         r_prim = jnp.linalg.norm(Theta - Z_new)
         r_dual = rho * jnp.linalg.norm(Z_new - Z)
-        return Z_new, U_new, r_prim, r_dual, it + 1
+        # adaptive rho; U is the SCALED dual, so it rescales inversely
+        factor = jnp.where(
+            r_prim > 10.0 * r_dual,
+            jnp.asarray(2.0, dtype),
+            jnp.where(r_dual > 10.0 * r_prim, jnp.asarray(0.5, dtype), jnp.asarray(1.0, dtype)),
+        )
+        return Z_new, U_new / factor, rho * factor, r_prim, r_dual, it + 1
 
     def cond(carry):
-        _, _, r_prim, r_dual, it = carry
+        _, _, _, r_prim, r_dual, it = carry
         eps = tol * b
         return jnp.logical_and(
             jnp.logical_or(r_prim > eps, r_dual > eps), it < max_iter
         )
 
     Z0 = jnp.where(jnp.eye(b, dtype=bool), 1.0 / (jnp.diag(S) + lam), jnp.zeros_like(S))
-    init = (Z0, jnp.zeros_like(S), jnp.asarray(jnp.inf, dtype), jnp.asarray(jnp.inf, dtype), jnp.int32(0))
-    Z, U, _, _, _ = jax.lax.while_loop(cond, body, init)
-    del eye, W0
+    init = (
+        Z0,
+        jnp.zeros_like(S),
+        rho0,
+        jnp.asarray(jnp.inf, dtype),
+        jnp.asarray(jnp.inf, dtype),
+        jnp.int32(0),
+    )
+    Z, U, _, _, _, _ = jax.lax.while_loop(cond, body, init)
+    del W0
     return 0.5 * (Z + Z.T)

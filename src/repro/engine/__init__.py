@@ -1,0 +1,47 @@
+"""Plan->Execute engine for the Theorem-1 screening pipeline.
+
+Layers (DESIGN.md):
+    registry   screening backends behind one ``backend=`` string
+    planner    incremental lambda-path planning (one union-find pass, diffed
+               bucket plans)
+    executor   async multi-device bucket dispatch + process-global compiled
+               solver cache
+    api        the ``Engine`` facade that ``repro.core.glasso`` wraps
+"""
+
+from repro.engine.registry import (
+    available_cc_backends,
+    get_cc_backend,
+    label_components,
+    register_cc_backend,
+)
+from repro.engine.planner import (
+    PathPlan,
+    PathStep,
+    bucket_key,
+    build_plan_incremental,
+    plan_path,
+)
+from repro.engine.executor import (
+    BucketExecutor,
+    compiled_bucket_solver,
+    compiled_cache_stats,
+)
+from repro.engine.api import Engine, GlassoResult
+
+__all__ = [
+    "Engine",
+    "GlassoResult",
+    "BucketExecutor",
+    "PathPlan",
+    "PathStep",
+    "available_cc_backends",
+    "bucket_key",
+    "build_plan_incremental",
+    "compiled_bucket_solver",
+    "compiled_cache_stats",
+    "get_cc_backend",
+    "label_components",
+    "plan_path",
+    "register_cc_backend",
+]

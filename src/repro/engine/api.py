@@ -1,0 +1,191 @@
+"""The Plan->Execute engine: one object owning the whole pipeline
+
+    screen -> partition -> bucket -> place -> solve -> assemble
+
+``Engine.run``       one (S, lam) solve through a registry screening backend,
+                     the bucket planner, and the async executor.
+``Engine.run_path``  a descending lambda grid with ONE partition pass
+                     (planner.plan_path) and bucket-level reuse of padded
+                     arrays + warm starts between consecutive lambdas.
+
+``repro.core.glasso.glasso/glasso_path`` are thin wrappers over this module —
+the public API is unchanged, the engine is the implementation.  Serving
+(``repro.launch.serve_glasso``) drives the same executor/compiled-cache with
+cross-request coalescing.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedule as schedule_mod
+from repro.core.components import component_lists
+from repro.core.screening import ScreenStats, thresholded_components
+from repro.engine.executor import BucketExecutor
+from repro.engine.planner import build_plan_incremental, plan_path
+
+
+@dataclass
+class GlassoResult:
+    lam: float
+    Theta: np.ndarray
+    labels: np.ndarray
+    screen: ScreenStats | None
+    solve_seconds: float
+    solver: str
+    block_sizes: list[int] = field(default_factory=list)
+
+    @property
+    def support(self) -> np.ndarray:
+        """Estimated concentration-graph adjacency (eq. (2))."""
+        A = np.abs(self.Theta) > 0
+        np.fill_diagonal(A, False)
+        return A
+
+
+def _result(plan, labels, screen_stats, Theta, seconds, solver, lam) -> GlassoResult:
+    return GlassoResult(
+        lam=float(lam),
+        Theta=Theta,
+        labels=labels,
+        screen=screen_stats,
+        solve_seconds=seconds,
+        solver=solver,
+        block_sizes=sorted(
+            (len(c) for b in plan.buckets for c in b.comps), reverse=True
+        ),
+    )
+
+
+class Engine:
+    """Reusable pipeline instance: fixed (solver, dtype, cc_backend, opts).
+
+    Holds the per-stream executor (and thus the warm-start bucket state); the
+    compiled-solver cache underneath is process-global, so engines are cheap
+    to construct."""
+
+    def __init__(
+        self,
+        *,
+        solver: str = "bcd",
+        dtype=jnp.float64,
+        cc_backend: str = "host",
+        devices=None,
+        **solver_opts,
+    ):
+        from repro.core.solvers import WARM_START_SOLVERS
+
+        self.solver = solver
+        self.dtype = dtype
+        self.np_dtype = np.dtype(jnp.dtype(dtype).name)  # host-side twin
+        self.cc_backend = cc_backend
+        self.warm_capable = solver in WARM_START_SOLVERS
+        self.executor = BucketExecutor(
+            solver=solver, dtype=dtype, solver_opts=solver_opts, devices=devices
+        )
+
+    # -- stages ------------------------------------------------------------
+
+    def screen(self, S: np.ndarray, lam: float) -> tuple[np.ndarray, ScreenStats]:
+        return thresholded_components(S, lam, backend=self.cc_backend)
+
+    # -- single solve ------------------------------------------------------
+
+    def run(
+        self,
+        S: np.ndarray,
+        lam: float,
+        *,
+        screen: bool = True,
+        p_max: int | None = None,
+        warm_W: np.ndarray | None = None,
+        labels: np.ndarray | None = None,
+    ) -> GlassoResult:
+        """``labels`` short-circuits the screening stage with a precomputed
+        canonical partition (callers that already screened, e.g. to report
+        stage timings, should not pay for the partition twice)."""
+        S = np.asarray(S)
+        p = S.shape[0]
+        if labels is not None:
+            from repro.core.screening import screen_stats_from_labels
+
+            labels = np.asarray(labels)
+            screen_stats = screen_stats_from_labels(S, lam, labels, seconds=0.0)
+        elif screen:
+            labels, screen_stats = self.screen(S, lam)
+        else:
+            labels = np.zeros(p, dtype=np.int64)  # one global component
+            screen_stats = None
+        plan, _ = build_plan_incremental(S, lam, labels, dtype=self.np_dtype)
+        schedule_mod.check_capacity(
+            [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
+        )
+        t0 = time.perf_counter()
+        Theta = self.executor.solve_plan(plan, float(lam), S, warm_W=warm_W)
+        seconds = time.perf_counter() - t0
+        return _result(plan, labels, screen_stats, Theta, seconds, self.solver, lam)
+
+    # -- lambda path -------------------------------------------------------
+
+    def run_path(
+        self,
+        S: np.ndarray,
+        lambdas,
+        *,
+        warm_start: bool = True,
+        p_max: int | None = None,
+    ) -> list[GlassoResult]:
+        """Descending path: one union-find pass, diffed plans, warm starts.
+
+        Theorem 2 guarantees nested partitions, so (a) the planner can
+        snapshot every lambda from a single pass, and (b) the previous Theta
+        restricted to a merged component is block-diagonal over its old
+        sub-components — a valid PD warm start.  Buckets unchanged between
+        consecutive lambdas skip re-padding entirely and warm-start from their
+        own previous padded solutions on device."""
+        S = np.asarray(S)
+        path = plan_path(S, lambdas, dtype=self.np_dtype)
+        results: list[GlassoResult] = []
+        prev: GlassoResult | None = None
+        for step in path.steps:
+            schedule_mod.check_capacity(
+                [len(c) for b in step.plan.buckets for c in b.comps] or [1], p_max
+            )
+            warm_W = None
+            if warm_start and prev is not None and self.warm_capable:
+                fresh = [
+                    b for b in step.plan.buckets if not step.is_reused(b)
+                ]
+                if fresh:
+                    # dense warm start only for merged buckets: blockwise
+                    # inverse of the previous Theta over its old components
+                    warm_W = np.zeros_like(prev.Theta)
+                    needed = np.zeros(S.shape[0], dtype=bool)
+                    for b in fresh:
+                        for c in b.comps:
+                            needed[c] = True
+                    for comp in component_lists(prev.labels):
+                        if not needed[comp].any():
+                            continue
+                        blk = prev.Theta[np.ix_(comp, comp)]
+                        warm_W[np.ix_(comp, comp)] = np.linalg.inv(blk)
+            t0 = time.perf_counter()
+            Theta = self.executor.solve_plan(
+                step.plan,
+                step.lam,
+                S,
+                warm_W=warm_W,
+                reused_keys=step.reused_keys if warm_start else frozenset(),
+                keep_solutions=warm_start,
+            )
+            seconds = time.perf_counter() - t0
+            res = _result(
+                step.plan, step.labels, step.screen, Theta, seconds, self.solver, step.lam
+            )
+            results.append(res)
+            prev = res
+        return results

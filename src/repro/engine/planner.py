@@ -1,0 +1,141 @@
+"""Incremental lambda-path planning: screen -> partition -> bucket, diffed.
+
+The screening stage's output along a descending lambda grid is NESTED
+(Theorem 2: components only merge), so planning the whole path needs exactly
+ONE union-find pass over the edge-sorted |S_ij| —
+``partition.labels_at_thresholds`` — after which each lambda's plan is a
+snapshot.  Consecutive plans are then DIFFED at bucket granularity: a bucket
+whose (padded size, member components) signature is unchanged keeps its padded
+block stack (no re-gather / re-pad) and is marked reusable so the executor can
+also recycle its previous solution as a warm start.
+
+Counters (repro.core.instrument):
+    partition.unionfind_passes   exactly 1 per ``plan_path`` call
+    planner.plans_built          one per lambda
+    planner.buckets_padded       buckets that had to be (re)padded
+    planner.buckets_reused       buckets carried over from the previous lambda
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import blocks as blocks_mod
+from repro.core.components import component_lists
+from repro.core.instrument import bump
+from repro.core.partition import _sorted_edges, labels_at_thresholds
+from repro.core.screening import ScreenStats
+
+
+def bucket_key(bucket: blocks_mod.Bucket) -> tuple:
+    """Identity of a bucket across lambdas: padded size + exact membership.
+
+    S is fixed along a path, so equal membership implies bit-identical padded
+    blocks — the invariant that makes reuse sound (DESIGN.md, plan-diff)."""
+    return (bucket.size, tuple(np.asarray(c).tobytes() for c in bucket.comps))
+
+
+def _screen_stats(labels: np.ndarray, lam: float, sorted_w: np.ndarray, seconds: float) -> ScreenStats:
+    _, counts = np.unique(labels, return_counts=True)
+    # sorted_w is descending; edges are strict |S_ij| > lam (eq. (4))
+    n_edges = int(np.searchsorted(-sorted_w, -lam, side="left"))
+    return ScreenStats(
+        lam=float(lam),
+        n_components=int(counts.size),
+        max_comp=int(counts.max()),
+        n_isolated=int((counts == 1).sum()),
+        n_edges=n_edges,
+        seconds=seconds,
+    )
+
+
+@dataclass
+class PathStep:
+    """One lambda's executable plan plus its diff against the previous step."""
+
+    lam: float
+    labels: np.ndarray
+    plan: blocks_mod.Plan
+    screen: ScreenStats
+    reused_keys: frozenset = frozenset()  # bucket_key()s carried over
+
+    def is_reused(self, bucket: blocks_mod.Bucket) -> bool:
+        return bucket_key(bucket) in self.reused_keys
+
+
+@dataclass
+class PathPlan:
+    p: int
+    lambdas: list[float] = field(default_factory=list)  # descending
+    steps: list[PathStep] = field(default_factory=list)
+
+
+def build_plan_incremental(
+    S: np.ndarray,
+    lam: float,
+    labels: np.ndarray,
+    *,
+    prev: blocks_mod.Plan | None = None,
+    dtype=np.float64,
+) -> tuple[blocks_mod.Plan, frozenset]:
+    """``blocks.build_plan`` with bucket reuse against a previous plan.
+
+    Returns (plan, reused bucket keys)."""
+    bump("planner.plans_built")
+    comps = component_lists(labels)
+    isolated, by_size = blocks_mod.group_components(comps)
+    prev_by_key = (
+        {bucket_key(b): b for b in prev.buckets} if prev is not None else {}
+    )
+    buckets, reused = [], set()
+    for size, members in by_size.items():
+        key = (size, tuple(np.asarray(c).tobytes() for c in members))
+        hit = prev_by_key.get(key)
+        if hit is not None:
+            buckets.append(hit)
+            reused.add(key)
+            bump("planner.buckets_reused")
+        else:
+            buckets.append(blocks_mod.make_bucket(S, size, members, dtype=dtype))
+            bump("planner.buckets_padded")
+    plan = blocks_mod.Plan(
+        p=S.shape[0],
+        lam=float(lam),
+        labels=labels,
+        isolated=isolated,
+        buckets=buckets,
+    )
+    return plan, frozenset(reused)
+
+
+def plan_path(S: np.ndarray, lambdas, *, dtype=np.float64) -> PathPlan:
+    """Plan a whole descending-lambda path with one partition pass.
+
+    Every requested lambda gets a PathStep whose ScreenStats are derived from
+    the snapshot (no per-lambda thresholding or union-find)."""
+    S = np.asarray(S)
+    lams = sorted((float(l) for l in np.asarray(list(lambdas)).ravel()), reverse=True)
+    t0 = time.perf_counter()
+    edges = _sorted_edges(S)  # shared by the snapshot pass and edge counting
+    labels_list = labels_at_thresholds(S, lams, edges=edges)
+    sorted_w = edges[2]
+    snap_seconds = (time.perf_counter() - t0) / max(len(lams), 1)
+
+    path = PathPlan(p=S.shape[0], lambdas=lams)
+    prev_plan = None
+    for lam, labels in zip(lams, labels_list):
+        t1 = time.perf_counter()
+        plan, reused = build_plan_incremental(
+            S, lam, labels, prev=prev_plan, dtype=dtype
+        )
+        stats = _screen_stats(
+            labels, lam, sorted_w, snap_seconds + (time.perf_counter() - t1)
+        )
+        path.steps.append(
+            PathStep(lam=lam, labels=labels, plan=plan, screen=stats, reused_keys=reused)
+        )
+        prev_plan = plan
+    return path

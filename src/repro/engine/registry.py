@@ -1,0 +1,120 @@
+"""Backend registry for the screening stage (connected-component labeling).
+
+One contract for every implementation of the paper's eq.-(4) partition step:
+
+    backend(S, lam, **opts) -> int labels, shape (p,), CANONICAL
+    (labels[i] == smallest vertex index in i's component)
+
+so downstream stages (planner, executor, serving) never care which device or
+algorithm produced the partition.  Four backends ship:
+
+    "host"       numpy union-find (orchestration path; the paper's
+                 ``graphconncomp`` role)
+    "jax"        jitted min-label propagation + pointer jumping (single device)
+    "pallas"     the fused threshold+hook Pallas TPU kernel driven to a fixed
+                 point (interpret mode off-TPU)
+    "shard_map"  row-sharded label propagation across the local device mesh
+                 (core/distributed.py), for p too large for one device's HBM
+
+All four provably compute the same partition (strict |S_ij| > lam, Theorem 1);
+tests/test_engine_backends.py property-tests the equivalence, including ties
+|S_ij| == lam.  Register additional backends (e.g. a GPU ECL-CC port) with
+``@register_cc_backend("name")``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.core.instrument import bump
+
+CCBackend = Callable[..., np.ndarray]
+
+_REGISTRY: dict[str, CCBackend] = {}
+
+
+def register_cc_backend(name: str) -> Callable[[CCBackend], CCBackend]:
+    """Decorator: register ``fn(S, lam, **opts) -> canonical labels``."""
+
+    def deco(fn: CCBackend) -> CCBackend:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def available_cc_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_cc_backend(name: str) -> CCBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown cc backend {name!r}; available: {available_cc_backends()}"
+        ) from None
+
+
+def label_components(S, lam: float, *, backend: str = "host", **opts) -> np.ndarray:
+    """Screen S at lam through the named backend; returns canonical labels."""
+    bump(f"registry.cc.{backend}")
+    labels = np.asarray(get_cc_backend(backend)(S, lam, **opts))
+    if labels.shape != (np.asarray(S).shape[0],):
+        raise AssertionError(
+            f"backend {backend!r} broke the contract: labels shape "
+            f"{labels.shape} for p={np.asarray(S).shape[0]}"
+        )
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+@register_cc_backend("host")
+def _host(S, lam, **_opts) -> np.ndarray:
+    from repro.core.components import components_from_covariance_host
+
+    return components_from_covariance_host(np.asarray(S), float(lam))
+
+
+@register_cc_backend("jax")
+def _jax(S, lam, **_opts) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.core.components import (
+        canonicalize_labels,
+        connected_components_labelprop,
+    )
+
+    labels = connected_components_labelprop(jnp.asarray(S), lam)
+    return canonicalize_labels(np.asarray(labels))
+
+
+@register_cc_backend("pallas")
+def _pallas(S, lam, *, block: int = 256, **_opts) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.core.components import canonicalize_labels
+    from repro.kernels.threshold_cc.ops import connected_components_kernel
+
+    labels = connected_components_kernel(jnp.asarray(S), lam, block=block)
+    return canonicalize_labels(np.asarray(labels))
+
+
+@register_cc_backend("shard_map")
+def _shard_map(S, lam, *, mesh=None, axis: str = "data", **_opts) -> np.ndarray:
+    import jax.numpy as jnp
+
+    from repro.core.components import canonicalize_labels
+    from repro.core.distributed import distributed_components
+    from repro.core.jax_compat import local_device_mesh
+
+    if mesh is None:
+        mesh = local_device_mesh(axis)
+    labels = distributed_components(jnp.asarray(S), lam, mesh, axis=axis)
+    return canonicalize_labels(np.asarray(labels))

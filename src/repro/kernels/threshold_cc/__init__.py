@@ -1,3 +1,3 @@
-from repro.kernels.threshold_cc.ops import labelprop_step
+from repro.kernels.threshold_cc.ops import connected_components_kernel, labelprop_step
 
-__all__ = ["labelprop_step"]
+__all__ = ["connected_components_kernel", "labelprop_step"]

@@ -15,12 +15,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     (the slow inter-pod links carry only gradient reductions), TP inside."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    from repro.core.jax_compat import make_mesh
+
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for tests/examples on the container CPU."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.jax_compat import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,301 @@
+"""Batched graphical-lasso serving: many concurrent (S, lam) requests, one
+coalesced solver stream — the ROADMAP's "heavy traffic" workload for the
+Theorem-1 pipeline.
+
+Theorem 1 makes every request a bag of INDEPENDENT padded blocks, and the
+engine's executor already batches same-size blocks; serving just widens the
+batch axis across requests.  The batcher thread drains the queue, screens and
+plans each request through the engine registry/planner, then regroups every
+(request, bucket) by padded size and dispatches ONE compiled solver call per
+size with a per-block lambda vector — so requests with different lambdas, or
+different matrices, share executables AND batches.  The compiled cache is the
+executor's process-global one: after warm-up, a steady-state mix of request
+shapes runs with zero compiles (watch ``executor.compiled_hit``).
+
+    PYTHONPATH=src python -m repro.launch.serve_glasso --requests 8 --p 60
+
+Counters (repro.core.instrument):
+    serve.requests            requests admitted
+    serve.batches             batcher iterations that dispatched work
+    serve.dispatches          coalesced solver calls (one per padded size)
+    serve.coalesced_blocks    blocks that shared a call with ANOTHER request
+"""
+
+from __future__ import annotations
+
+import argparse
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.instrument import bump, counts
+
+
+@dataclass
+class GlassoRequest:
+    S: np.ndarray
+    lam: float
+    future: Future = field(default_factory=Future)
+
+
+@dataclass
+class _PlacedBucket:
+    request: "GlassoRequest"
+    plan: object
+    bucket: object
+
+
+class GlassoServer:
+    """Coalescing batch server over the engine executor.
+
+    ``submit`` is thread-safe and returns a Future resolving to the engine's
+    ``GlassoResult``.  ``max_delay`` is the batching window: the batcher waits
+    that long after the first queued request for co-travellers before
+    dispatching (classic serving latency/throughput knob)."""
+
+    def __init__(
+        self,
+        *,
+        solver: str = "bcd",
+        dtype=None,
+        cc_backend: str = "host",
+        max_delay: float = 0.005,
+        max_batch: int = 64,
+        **solver_opts,
+    ):
+        import jax.numpy as jnp
+
+        from repro.core.solvers import SOLVERS
+        from repro.engine.executor import _validate_solver_opts
+
+        if solver not in SOLVERS:
+            raise ValueError(
+                f"unknown solver {solver!r}; available: {sorted(SOLVERS)}"
+            )
+        _validate_solver_opts(solver, solver_opts)
+        self.solver = solver
+        self.dtype = jnp.float64 if dtype is None else dtype
+        self.cc_backend = cc_backend
+        self.max_delay = max_delay
+        self.max_batch = max_batch
+        self.solver_opts = solver_opts
+        self._opts_key = tuple(sorted(solver_opts.items()))
+        self._queue: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "GlassoServer":
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+        self._fail_pending()
+
+    def _fail_pending(self) -> None:
+        """Fail queued requests fast instead of letting their clients block
+        out the full result() timeout.  Called from stop() and from submit()
+        when it loses the shutdown race."""
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if not req.future.done():
+                req.future.set_exception(RuntimeError("GlassoServer stopped"))
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, S: np.ndarray, lam: float) -> Future:
+        req = GlassoRequest(S=np.asarray(S), lam=float(lam))
+        if self._stop.is_set():
+            # fail fast instead of parking a request no batcher will serve
+            req.future.set_exception(RuntimeError("GlassoServer stopped"))
+            return req.future
+        bump("serve.requests")
+        self._queue.put(req)
+        if self._stop.is_set():
+            # lost the race against stop(): its drain may have run before our
+            # put landed, so sweep the queue ourselves
+            self._fail_pending()
+        return req.future
+
+    # -- batcher -----------------------------------------------------------
+
+    def _drain(self) -> list[GlassoRequest]:
+        try:
+            first = self._queue.get(timeout=0.05)
+        except queue.Empty:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_delay
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._queue.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            batch = self._drain()
+            if not batch:
+                continue
+            try:
+                self.solve_batch(batch)
+            except Exception as e:  # pragma: no cover - defensive
+                for req in batch:
+                    if not req.future.done():
+                        req.future.set_exception(e)
+
+    # -- the coalescing solve (callable synchronously too) -----------------
+
+    def solve_batch(self, requests: list[GlassoRequest]) -> None:
+        """Screen+plan each request, coalesce same-size buckets across ALL
+        requests into one solver dispatch per padded size, scatter back."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import blocks as blocks_mod
+        from repro.core.screening import thresholded_components
+        from repro.engine.api import _result
+        from repro.engine.executor import compiled_bucket_solver
+        from repro.engine.planner import build_plan_incremental
+
+        t0 = time.perf_counter()
+        per_req: list[tuple[GlassoRequest, np.ndarray, object, object]] = []
+        by_size: dict[int, list[_PlacedBucket]] = {}
+        for req in requests:
+            labels, stats = thresholded_components(
+                req.S, req.lam, backend=self.cc_backend
+            )
+            plan, _ = build_plan_incremental(req.S, req.lam, labels)
+            per_req.append((req, labels, stats, plan))
+            for bucket in plan.buckets:
+                by_size.setdefault(bucket.size, []).append(
+                    _PlacedBucket(request=req, plan=plan, bucket=bucket)
+                )
+
+        bump("serve.batches")
+        # one dispatch per padded size, blocks + per-block lambda stacked
+        # across requests; all dispatched before any blocking
+        outs: dict[int, object] = {}
+        for size, placed in sorted(by_size.items()):
+            stacked = jnp.concatenate(
+                [jnp.asarray(pb.bucket.blocks, self.dtype) for pb in placed]
+            )
+            lams = jnp.concatenate(
+                [
+                    jnp.full((pb.bucket.blocks.shape[0],), pb.request.lam, self.dtype)
+                    for pb in placed
+                ]
+            )
+            fn = compiled_bucket_solver(
+                self.solver, size, self.dtype, warm=False, opts_key=self._opts_key
+            )
+            outs[size] = fn(stacked, lams)
+            bump("serve.dispatches")
+            n_reqs = len({id(pb.request) for pb in placed})
+            if n_reqs > 1:
+                bump("serve.coalesced_blocks", int(stacked.shape[0]))
+        jax.block_until_ready(list(outs.values()))
+
+        # scatter solutions back per request
+        cursors = {size: 0 for size in outs}
+        sols_by_req: dict[int, dict[int, list]] = {}
+        for size, placed in sorted(by_size.items()):
+            sols = np.asarray(outs[size])
+            for pb in placed:
+                n = pb.bucket.blocks.shape[0]
+                k = cursors[size]
+                sols_by_req.setdefault(id(pb.request), {}).setdefault(
+                    size, []
+                ).append(sols[k : k + n])
+                cursors[size] = k + n
+
+        seconds = time.perf_counter() - t0
+        # attribute batch wall time to requests by their b^3 solve-cost share
+        # (a request's solve_seconds should not count its co-travellers)
+        costs = {
+            id(req): sum(
+                float(len(c)) ** 3 for b in plan.buckets for c in b.comps
+            )
+            for req, _, _, plan in per_req
+        }
+        total_cost = sum(costs.values())
+        for req, labels, stats, plan in per_req:
+            chunks = sols_by_req.get(id(req), {})
+            bucket_sols = [chunks[b.size].pop(0) for b in plan.buckets]
+            Theta = blocks_mod.assemble_dense(plan, bucket_sols, req.S)
+            share = costs[id(req)] / total_cost if total_cost > 0 else 1.0 / len(per_req)
+            req.future.set_result(
+                _result(plan, labels, stats, Theta, seconds * share, self.solver, req.lam)
+            )
+
+
+def serve_stats() -> dict[str, int]:
+    return counts("serve.")
+
+
+# ---------------------------------------------------------------------------
+# CLI demo: N synthetic concurrent clients
+# ---------------------------------------------------------------------------
+
+
+def main():
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--p", type=int, default=60)
+    ap.add_argument("--blocks", type=int, default=5)
+    ap.add_argument("--solver", default="bcd")
+    args = ap.parse_args()
+
+    from repro.covariance import lambda_interval_for_k, paper_synthetic
+    from repro.engine.executor import compiled_cache_stats
+
+    reqs = []
+    for i in range(args.requests):
+        S = paper_synthetic(args.blocks, args.p // args.blocks, seed=i)
+        lam_min, lam_max = lambda_interval_for_k(S, args.blocks)
+        reqs.append((S, 0.5 * (lam_min + lam_max)))
+
+    with GlassoServer(solver=args.solver, tol=1e-7) as server:
+        t0 = time.perf_counter()
+        futures = [server.submit(S, lam) for S, lam in reqs]
+        results = [f.result(timeout=600) for f in futures]
+        dt = time.perf_counter() - t0
+
+    for i, r in enumerate(results):
+        print(
+            f"req {i}: lam={r.lam:.4f} comps={r.screen.n_components} "
+            f"blocks={r.block_sizes}"
+        )
+    print(f"{len(results)} requests in {dt:.2f}s ({len(results)/dt:.1f} req/s)")
+    print("serve counters:", serve_stats())
+    print("compiled cache:", compiled_cache_stats())
+
+
+if __name__ == "__main__":
+    main()

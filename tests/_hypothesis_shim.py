@@ -1,0 +1,133 @@
+"""Minimal offline stand-in for the ``hypothesis`` API surface this suite uses.
+
+The real library is listed in requirements-dev.txt and is preferred whenever
+it is importable; this shim only exists so the tier-1 suite still collects and
+runs in hermetic containers with no network access.  It implements exactly the
+subset the tests consume:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers(lo, hi), st.floats(lo, hi), st.sampled_from(seq),
+    st.lists(elem, min_size=..., max_size=...)
+
+Examples are drawn deterministically (seeded by the test's qualified name), so
+a run is reproducible; example 0 is the "minimal" corner of every strategy,
+which is where most of hypothesis's shrunk counterexamples live anyway
+(empty-ish lists, lower bounds, density 0.0).  No shrinking is attempted — on
+failure the falsifying kwargs are attached to the exception.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+IS_SHIM = True
+
+
+class _Strategy:
+    def __init__(self, minimal, draw):
+        self._minimal = minimal
+        self._draw = draw
+
+    def minimal(self):
+        return self._minimal()
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda: min_value,
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+    )
+
+
+def floats(min_value, max_value):
+    return _Strategy(
+        lambda: float(min_value),
+        lambda rng: float(rng.uniform(min_value, max_value)),
+    )
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(
+        lambda: seq[0],
+        lambda rng: seq[int(rng.integers(len(seq)))],
+    )
+
+
+def lists(elements, *, min_size=0, max_size=10):
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+
+    return _Strategy(lambda: [elements.minimal() for _ in range(min_size)], draw)
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator-factory; only max_examples is honoured (deadline et al. are
+    timing/shrinking knobs with no meaning here)."""
+
+    def apply(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return apply
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **fixture_kwargs):
+            max_examples = getattr(
+                wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode()
+            ) & 0xFFFFFFFF
+            rng = np.random.default_rng(seed)
+            for k in range(max_examples):
+                if k == 0:
+                    drawn = {n: s.minimal() for n, s in strategy_kwargs.items()}
+                else:
+                    drawn = {n: s.draw(rng) for n, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **fixture_kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example (shim, #{k}): {drawn!r}"
+                    ) from e
+
+        # hide the strategy parameters from pytest's fixture resolver
+        sig = inspect.signature(fn)
+        params = [
+            p for n, p in sig.parameters.items() if n not in strategy_kwargs
+        ]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return deco
+
+
+def install(sys_modules):
+    """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.IS_SHIM = True
+    st.IS_SHIM = True
+    sys_modules["hypothesis"] = mod
+    sys_modules["hypothesis.strategies"] = st

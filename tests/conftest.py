@@ -7,6 +7,15 @@ tests and benches must see the single real CPU device; only launch/dryrun.py
 fakes 512 devices (and does so before importing jax).
 """
 
+import sys
+
+try:  # prefer the real library (requirements-dev.txt); shim only offline
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_shim
+
+    _hypothesis_shim.install(sys.modules)
+
 import jax
 
 jax.config.update("jax_enable_x64", True)

@@ -13,9 +13,9 @@ from repro.core.solvers import glasso_bcd
 
 
 def _mesh1():
-    return jax.make_mesh(
-        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    from repro.core.jax_compat import make_mesh
+
+    return make_mesh((1,), ("data",))
 
 
 def test_distributed_components_matches_host():

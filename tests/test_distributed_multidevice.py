@@ -24,7 +24,9 @@ SCRIPT = textwrap.dedent(
     from repro.covariance import paper_synthetic, lambda_interval_for_k
 
     assert jax.device_count() == 8
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.jax_compat import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
 
     # 8-way row-sharded CC on a structured problem
     S = paper_synthetic(K=4, p1=10, seed=0)

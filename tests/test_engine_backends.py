@@ -1,0 +1,82 @@
+"""Backend-equivalence property tests for the engine screening registry.
+
+All four registered backends must induce the IDENTICAL vertex partition (up
+to label canonicalization, which the registry already applies) for any S and
+lambda — including ties |S_ij| == lambda, which eq. (4)'s strict inequality
+excludes from the edge set.
+
+Entries are quantized to multiples of 1/64 (exactly representable in float32)
+so backends that compute the mask in float32 (the Pallas kernel) cannot
+disagree with the float64 host path through rounding.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.components import partitions_equal
+from repro.engine import available_cc_backends, label_components
+
+BACKENDS = ("host", "jax", "pallas", "shard_map")
+
+
+def quantized_covariance(rng, p, density):
+    """Symmetric matrix with off-diagonal magnitudes on the 1/64 grid."""
+    A = (rng.integers(0, 65, size=(p, p)) / 64.0) * (rng.random((p, p)) < density)
+    A = np.triu(A, 1) * np.where(rng.random((p, p)) < 0.5, -1.0, 1.0)
+    S = A + A.T
+    np.fill_diagonal(S, 1.0)
+    return S
+
+
+def test_all_four_backends_registered():
+    assert set(BACKENDS) <= set(available_cc_backends())
+
+
+def test_unknown_backend_is_an_error():
+    with pytest.raises(ValueError, match="unknown cc backend"):
+        label_components(np.eye(3), 0.1, backend="no-such-backend")
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    p=st.sampled_from([4, 7, 12, 16]),
+    density=st.floats(0.05, 0.6),
+    seed=st.integers(0, 10_000),
+    lam64=st.integers(0, 63),
+)
+def test_backends_equivalent(p, density, seed, lam64):
+    rng = np.random.default_rng(seed)
+    S = quantized_covariance(rng, p, density)
+    # lam on the same 1/64 grid: with probability ~density several |S_ij|
+    # tie with lam exactly — the strict-inequality edge of eq. (4)
+    lam = lam64 / 64.0
+    ref = label_components(S, lam, backend="host")
+    for backend in BACKENDS[1:]:
+        labels = label_components(S, lam, backend=backend, block=8)
+        assert partitions_equal(labels, ref), (
+            f"backend {backend} disagrees with host at lam={lam} (p={p})"
+        )
+
+
+def test_tie_at_lambda_is_not_an_edge_all_backends():
+    """|S_01| == lambda exactly: 0-1 must NOT merge; |S_12| > lambda must."""
+    S = np.eye(4)
+    S[0, 1] = S[1, 0] = 0.5
+    S[1, 2] = S[2, 1] = 0.75
+    for backend in BACKENDS:
+        labels = label_components(S, 0.5, backend=backend, block=8)
+        assert labels[0] != labels[1], backend
+        assert labels[1] == labels[2], backend
+        assert labels[3] not in (labels[0], labels[1]), backend
+
+
+def test_labels_are_canonical():
+    """Registry contract: label == smallest vertex index of the component."""
+    rng = np.random.default_rng(3)
+    S = quantized_covariance(rng, 13, 0.3)
+    for backend in BACKENDS:
+        labels = label_components(S, 0.25, backend=backend, block=8)
+        for lab in np.unique(labels):
+            members = np.nonzero(labels == lab)[0]
+            assert lab == members.min(), backend

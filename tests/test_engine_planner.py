@@ -1,0 +1,183 @@
+"""Incremental path planner invariants: one union-find pass per path, plan
+diffs reuse unchanged buckets, snapshot labels match direct screening, and
+the mild single-block padding rule."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import lambda_between_edges, random_covariance
+from repro.core import glasso_path, thresholded_components
+from repro.core.blocks import build_plan, bucket_size, plan_bucket_size
+from repro.core.components import partitions_equal
+from repro.core.instrument import count, counts, reset
+from repro.core.partition import component_size_distribution, labels_at_thresholds
+from repro.engine.planner import plan_path
+
+
+def _lambda_grid(S, n):
+    qs = np.linspace(0.15, 0.9, n)
+    return sorted({lambda_between_edges(S, q) for q in qs}, reverse=True)
+
+
+# ------------------------------------------------------------ snapshots
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.integers(4, 24), seed=st.integers(0, 10_000))
+def test_labels_at_thresholds_matches_direct_screening(p, seed):
+    rng = np.random.default_rng(seed)
+    S = random_covariance(rng, p)
+    lams = _lambda_grid(S, 7)
+    snapshots = labels_at_thresholds(S, lams)
+    for lam, labels in zip(lams, snapshots):
+        direct, _ = thresholded_components(S, lam)
+        assert partitions_equal(labels, direct)
+
+
+def test_labels_at_thresholds_input_order_preserved():
+    rng = np.random.default_rng(0)
+    S = random_covariance(rng, 10)
+    lams = _lambda_grid(S, 5)
+    shuffled = [lams[2], lams[0], lams[4], lams[1], lams[3]]
+    a = labels_at_thresholds(S, lams)
+    b = labels_at_thresholds(S, shuffled)
+    for lam_pos, lam in enumerate(shuffled):
+        np.testing.assert_array_equal(b[lam_pos], a[lams.index(lam)])
+
+
+# ------------------------------------------------------------ one pass
+
+
+def test_path_plans_with_exactly_one_unionfind_pass():
+    """Acceptance: a 20-lambda glasso_path performs ONE union-find pass."""
+    rng = np.random.default_rng(7)
+    S = random_covariance(rng, 16)
+    lams = _lambda_grid(S, 20)
+    reset()
+    results = glasso_path(S, lams, solver="bcd", tol=1e-7)
+    assert len(results) == len(lams)
+    assert count("partition.unionfind_passes") == 1
+    assert counts("planner").get("planner.plans_built") == len(lams)
+    # screening stats are still populated per lambda from the snapshots
+    n_edges = [r.screen.n_edges for r in results]
+    assert n_edges == sorted(n_edges)  # descending lambda -> growing edge set
+    ncomp = [r.screen.n_components for r in results]
+    assert ncomp == sorted(ncomp, reverse=True)
+
+
+def test_component_size_distribution_single_pass():
+    """Satellite: the docstring's 'once over the sorted edges' is now true."""
+    rng = np.random.default_rng(1)
+    S = random_covariance(rng, 14)
+    lams = _lambda_grid(S, 6)
+    reset()
+    dist = component_size_distribution(S, lams)
+    assert count("partition.unionfind_passes") == 1
+    for lam, d in zip(lams, dist):
+        labels, stats = thresholded_components(S, lam)
+        assert d["n_components"] == stats.n_components
+        assert d["max_comp"] == stats.max_comp
+        assert int((d["sizes"] * d["counts"]).sum()) == 14
+
+
+# ------------------------------------------------------------ plan diff
+
+
+def test_plan_diff_reuses_unchanged_buckets():
+    """Two well-separated blocks: raising the within-block threshold splits
+    one block while the other's bucket must be carried over by identity."""
+    rng = np.random.default_rng(5)
+    A = random_covariance(rng, 6)
+    B = random_covariance(rng, 6)
+    S = np.zeros((12, 12))
+    S[:6, :6], S[6:, 6:] = A, B
+    # couple block A internally stronger than B so a middle lambda splits B
+    iu = np.triu_indices(12, 1)
+    offmax = np.abs(S[iu]).max()
+    lams = [offmax * 0.9, offmax * 0.5]  # both below max: blocks form, nested
+    path = plan_path(S, lams)
+    assert len(path.steps) == 2
+    step0, step1 = path.steps
+    if step1.reused_keys:
+        reused_buckets = [b for b in step1.plan.buckets if step1.is_reused(b)]
+        prev = {id(b) for b in step0.plan.buckets}
+        for b in reused_buckets:
+            assert id(b) in prev  # the very same Bucket object: no re-pad
+
+
+def test_plan_diff_full_reuse_on_identical_lambdas_interval():
+    """Consecutive lambdas between the same two edge values have identical
+    partitions -> every bucket reused."""
+    rng = np.random.default_rng(8)
+    S = random_covariance(rng, 10)
+    iu = np.triu_indices(10, 1)
+    vals = np.unique(np.abs(S[iu]))
+    k = len(vals) // 2
+    lam_hi = vals[k] + (vals[k + 1] - vals[k]) * 0.7
+    lam_lo = vals[k] + (vals[k + 1] - vals[k]) * 0.3
+    path = plan_path(S, [lam_hi, lam_lo])
+    step1 = path.steps[1]
+    assert partitions_equal(path.steps[0].labels, step1.labels)
+    assert len(step1.reused_keys) == len(step1.plan.buckets)
+    assert counts("planner")  # counters exist
+
+
+# ------------------------------------------------------------ padding rule
+
+
+def test_single_block_bucket_mild_padding():
+    # multi-block buckets stay pow2
+    assert plan_bucket_size(1025) == 2048
+    # single-block buckets get next-multiple-of-128, capped by pow2
+    assert plan_bucket_size(1025, single_block=True) == 1152
+    assert plan_bucket_size(300, single_block=True) == 384
+    assert plan_bucket_size(400, single_block=True) == 512  # 512 is both
+    # at or below 128, pow2 is already mild
+    assert plan_bucket_size(100, single_block=True) == bucket_size(100)
+    assert plan_bucket_size(5, single_block=True) == 8
+
+
+def test_build_plan_screen_off_uses_mild_padding():
+    """The screen=False baseline pads the full p x p problem: one component
+    of 300 must land in a 384 bucket, not 512."""
+    rng = np.random.default_rng(2)
+    p = 300
+    S = np.eye(p) + 0.5  # fully coupled: one component
+    labels = np.zeros(p, dtype=np.int64)
+    plan = build_plan(S, 0.1, labels)
+    assert len(plan.buckets) == 1
+    assert plan.buckets[0].size == 384
+    assert plan.buckets[0].blocks.shape == (1, 384, 384)
+    del rng
+
+
+def test_build_plan_multi_block_buckets_still_pow2():
+    rng = np.random.default_rng(4)
+    S = random_covariance(rng, 20)
+    lam = lambda_between_edges(S, 0.8)
+    labels, _ = thresholded_components(S, lam)
+    plan = build_plan(S, lam, labels)
+    for b in plan.buckets:
+        if len(b.comps) > 1:
+            for c in b.comps:
+                assert bucket_size(len(c)) == b.size
+
+
+def test_mild_padding_solution_unchanged():
+    """Padding size must not affect the solution (Theorem-1 corollary)."""
+    import jax.numpy as jnp
+
+    from repro.core.solvers import glasso_bcd
+    from repro.core.blocks import pad_block
+
+    rng = np.random.default_rng(9)
+    Sb = random_covariance(rng, 6)
+    lam = 0.3
+    a = np.asarray(glasso_bcd(jnp.asarray(pad_block(Sb, 8)), lam, tol=1e-10))
+    b = np.asarray(glasso_bcd(jnp.asarray(pad_block(Sb, 11)), lam, tol=1e-10))
+    np.testing.assert_allclose(a[:6, :6], b[:6, :6], atol=1e-7)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

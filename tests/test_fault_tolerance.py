@@ -78,7 +78,9 @@ def test_elastic_restore_new_sharding(tmp_path):
 
     state = small_state()
     save_checkpoint(tmp_path, 3, state, mesh_shape=(16, 16))
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.jax_compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
     restored, step = restore_checkpoint(tmp_path, state, shardings=sh)
     assert step == 3

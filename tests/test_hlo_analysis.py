@@ -69,21 +69,25 @@ def test_matches_cost_analysis_on_scanfree_graph():
     w2 = jax.ShapeDtypeStruct((1024, 256), jnp.float32)
     compiled = _compile(fn, x, w1, w2)
     ours = analyze_hlo(compiled.as_text())["flops"]
-    xla = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax <= 0.4.x returns [dict]
+        ca = ca[0]
+    xla = ca["flops"]
     assert abs(ours - xla) / xla < 0.05, (ours, xla)
 
 
 def test_collective_weighting_in_loop():
     """A psum inside a scan must count once per iteration."""
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.jax_compat import make_mesh, shard_map
+
+    mesh = make_mesh((1,), ("d",))
 
     @jax.jit
     def fn(x):
         def body(c, _):
-            s = jax.shard_map(
+            s = shard_map(
                 lambda v: jax.lax.psum(v, "d"), mesh=mesh,
                 in_specs=jax.sharding.PartitionSpec(), out_specs=jax.sharding.PartitionSpec(),
-                check_vma=False,
             )(c)
             return s, None
         return jax.lax.scan(body, x, None, length=5)[0]
