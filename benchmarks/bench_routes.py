@@ -1,0 +1,177 @@
+"""Route-mix and ladder-speedup benchmark on the p=2400 lambda-path workload.
+
+The routing-ladder acceptance bench: solve ``structured_synthetic`` (p=2400:
+150 planted 16-vertex components — 60% trees, 25% chordal 2-trees, 15%
+chordless cycles, edge weights spread across the lambda interval) along a
+descending lambda path twice: once with the structure-routed solver ladder,
+once with routing off (every block iterative — the PR-1 executor behavior).
+Descending the grid progressively reveals then densifies the planted
+structures, so one path sweeps the whole classification story; at the two
+largest lambdas the thresholded graph is the paper's large-rho regime
+(everything singleton/pair/tree).  Reported:
+
+  * the per-lambda route mix (singleton/pair/tree/chordal/general blocks),
+  * the non-iterative block fraction at the two largest lambdas
+    (acceptance: >= 0.8; in this regime it is ~1.0),
+  * the PATH SOLVE stage speedup, routed vs unrouted, min-of-``reps`` wall
+    (acceptance: >= 1.5x).  Planning (one shared union-find/argsort pass) is
+    identical in both variants and reported separately via the end-to-end
+    wall columns.  Both variants run the CURRENT executor, which this PR
+    also made faster (batched assembly scatter, warm-started repairs), so
+    the unrouted baseline is at least as fast as the literal PR-1 code —
+    the measured ratio is a LOWER bound on the improvement vs PR 1.
+  * fallback counts (closed-form candidates the KKT check rejected).
+
+``--json FILE`` writes the record for the CI artifact; ``--check BASELINE``
+exits non-zero when the measured solve speedup regresses more than 20% below
+the committed baseline, the route-mix fraction drops below it, or a ladder
+class stops being exercised.
+
+    PYTHONPATH=src python -m benchmarks.bench_routes [--quick] \
+        [--json BENCH_routes.json] [--check benchmarks/baseline_routes.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _workload(K: int, p1: int, n_lambdas: int, seed: int = 1):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.covariance import structured_synthetic
+
+    S = structured_synthetic(K, p1, seed=seed)
+    lams = [float(v) for v in np.linspace(0.75, 0.32, n_lambdas)]
+    return S, lams
+
+
+def run(
+    K: int = 150, p1: int = 16, n_lambdas: int = 12, reps: int = 3, log=print
+) -> dict:
+    from repro.core import glasso_path
+    from repro.core.instrument import reset, tail_counts
+
+    R, lams = _workload(K, p1, n_lambdas)
+    p = K * p1
+    log(f"route bench: p={p} ({K} planted blocks of {p1}), {len(lams)} "
+        f"lambdas in [{lams[-1]:.3f}, {lams[0]:.3f}]")
+
+    # warm the compiled caches off the clock (compile time is not the metric)
+    glasso_path(R, lams, tol=1e-7)
+    glasso_path(R, lams, route=False, tol=1e-7)
+
+    wall_r, wall_u, solve_r, solve_u = [], [], [], []
+    routed = unrouted = None
+    mix_counts = fallbacks = {}
+    for _ in range(reps):
+        reset("router")
+        t0 = time.perf_counter()
+        routed = glasso_path(R, lams, tol=1e-7)
+        wall_r.append(time.perf_counter() - t0)
+        mix_counts = tail_counts("router.route.")
+        fallbacks = tail_counts("router.fallback.")
+        t0 = time.perf_counter()
+        unrouted = glasso_path(R, lams, route=False, tol=1e-7)
+        wall_u.append(time.perf_counter() - t0)
+        solve_r.append(sum(r.solve_seconds for r in routed))
+        solve_u.append(sum(r.solve_seconds for r in unrouted))
+
+    worst = 0.0
+    for r, u in zip(routed, unrouted):
+        worst = max(worst, float(np.abs(r.Theta - u.Theta).max()))
+    assert worst < 1e-5, f"routed vs unrouted diverged: {worst:.2e}"
+
+    per_lambda = []
+    for r in routed:
+        per_lambda.append(
+            {
+                "lam": round(r.lam, 5),
+                "mix": r.route_mix,
+                "noniterative_fraction": round(r.noniterative_fraction, 4),
+            }
+        )
+        log(f"  lam={r.lam:7.4f}  mix={r.route_mix}  "
+            f"noniter={r.noniterative_fraction:.3f}")
+
+    frac_top2 = min(row["noniterative_fraction"] for row in per_lambda[:2])
+    rec = {
+        "p": p,
+        "planted_blocks": K,
+        "block_size": p1,
+        "n_lambdas": len(lams),
+        "reps": reps,
+        "solve_routed_s": round(min(solve_r), 3),
+        "solve_unrouted_s": round(min(solve_u), 3),
+        "solve_speedup": round(min(solve_u) / max(min(solve_r), 1e-9), 3),
+        "wall_routed_s": round(min(wall_r), 3),
+        "wall_unrouted_s": round(min(wall_u), 3),
+        "wall_speedup": round(min(wall_u) / max(min(wall_r), 1e-9), 3),
+        "noniterative_fraction_top2": frac_top2,
+        "route_counts": mix_counts,
+        "fallbacks": fallbacks,
+        "max_theta_diff": worst,
+        "per_lambda": per_lambda,
+    }
+    log(f"route bench: solve stage {rec['solve_routed_s']}s vs "
+        f"{rec['solve_unrouted_s']}s -> {rec['solve_speedup']}x "
+        f"(end-to-end wall {rec['wall_routed_s']}s vs {rec['wall_unrouted_s']}s "
+        f"-> {rec['wall_speedup']}x), top-2-lambda non-iterative fraction "
+        f"{frac_top2:.3f}, fallbacks {sum(fallbacks.values())}")
+    return rec
+
+
+def check(rec: dict, baseline_path: str, log=print) -> int:
+    """CI regression gate: >20% solve-speedup regression, any route-mix drop
+    below the committed baseline, or a dead ladder class fails."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    min_speedup = base["solve_speedup"] / 1.2
+    if rec["solve_speedup"] < min_speedup:
+        failures.append(
+            f"solve speedup {rec['solve_speedup']} < {min_speedup:.2f} "
+            f"(baseline {base['solve_speedup']} - 20%)"
+        )
+    if rec["noniterative_fraction_top2"] < base["noniterative_fraction_top2"]:
+        failures.append(
+            f"non-iterative fraction {rec['noniterative_fraction_top2']} < "
+            f"baseline {base['noniterative_fraction_top2']}"
+        )
+    for cls in ("singleton", "pair", "tree", "chordal"):
+        if rec["route_counts"].get(cls, 0) == 0 and base["route_counts"].get(cls, 0):
+            failures.append(f"route class {cls!r} was never taken")
+    for msg in failures:
+        log(f"REGRESSION: {msg}")
+    if not failures:
+        log(f"route bench within baseline ({baseline_path})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="p=600 smoke variant")
+    ap.add_argument("--json", default=None, help="write the record to FILE")
+    ap.add_argument("--check", default=None, help="baseline JSON to gate against")
+    args = ap.parse_args()
+
+    if args.quick:
+        rec = run(K=40, p1=16, n_lambdas=8, reps=2)
+    else:
+        rec = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        sys.exit(check(rec, args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -78,7 +78,7 @@ def run(log=print) -> list[dict]:
         if len(lams) == 0:
             lams = [lam500 * 1.01]
         t0 = time.perf_counter()
-        results = glasso_path(R, [float(l) for l in lams], solver="bcd", tol=1e-6)
+        results = glasso_path(R, [float(v) for v in lams], solver="bcd", tol=1e-6)
         total = time.perf_counter() - t0
         parts = [r.screen.seconds for r in results]
         mx = [r.screen.max_comp for r in results]
@@ -115,7 +115,7 @@ def run_planning(p: int = 2400, n: int = 80, n_lambdas: int = 20, log=print) -> 
     lam0 = lambda_for_max_component(R, 100)
     vals = merge_profile(R)["value"][1:]
     grid = vals[vals > lam0]
-    lams = [float(l) for l in grid[:: max(1, len(grid) // n_lambdas)][:n_lambdas]]
+    lams = [float(v) for v in grid[:: max(1, len(grid) // n_lambdas)][:n_lambdas]]
 
     reset("partition")
     t0 = time.perf_counter()

@@ -13,7 +13,6 @@ warm-started lambda path.  Exits non-zero on any mismatch.
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 from pathlib import Path
 
@@ -34,7 +33,10 @@ def smoke() -> None:
     lam_min, lam_max = lambda_interval_for_k(S, 3)
     lam = 0.5 * (lam_min + lam_max)
 
-    dense = glasso(S, lam, screen=False, tol=1e-9)
+    # route=False pins the reference arm to the iterative dense path — the
+    # gate must compare the engine against the pre-ladder behavior, not two
+    # arms of the new closed-form code
+    dense = glasso(S, lam, screen=False, route=False, tol=1e-9)
     for backend in available_cc_backends():
         res = glasso(S, lam, cc_backend=backend, tol=1e-9)
         err = float(np.abs(res.Theta - dense.Theta).max())
@@ -46,11 +48,37 @@ def smoke() -> None:
     path = glasso_path(S, lams, tol=1e-9)
     assert count("partition.unionfind_passes") == 1, "path planner must plan in one pass"
     for r in path:
-        ref = glasso(S, r.lam, screen=False, tol=1e-9)
+        ref = glasso(S, r.lam, screen=False, route=False, tol=1e-9)
         err = float(np.abs(r.Theta - ref.Theta).max())
         assert err < 1e-5, f"path lam={r.lam:.4f}: engine vs dense diff {err:.2e}"
     print(f"smoke: {len(path)}-lambda warm-started path matches dense "
           f"(1 union-find pass)")
+
+    # routing ladder: every structure class exercised, routed == unrouted.
+    # One deterministic matrix with a singleton (vertex 0), a pair, a path
+    # tree, a chorded 4-cycle (chordal) and a CHORDLESS 4-cycle on vertices
+    # 11-14 (general — no (11,13)/(12,14) chord is ever set) at lam=0.3.
+    from repro.core.instrument import route_mix_counts
+
+    Ss = np.eye(15) * 2.0
+    ladder_edges = [
+        (1, 2, 0.8),                                              # pair
+        (3, 4, 0.7), (4, 5, -0.6), (5, 6, 0.5),                   # tree
+        (7, 8, 0.45), (8, 9, -0.45), (9, 10, 0.45),
+        (10, 7, -0.45), (7, 9, 0.45),                             # chordal
+        (11, 12, 0.5), (12, 13, 0.5), (13, 14, 0.5), (14, 11, 0.5),
+    ]
+    for i, j, v in ladder_edges:
+        Ss[i, j] = Ss[j, i] = v
+    reset()
+    routed = glasso(Ss, 0.3, tol=1e-9)
+    unrouted = glasso(Ss, 0.3, route=False, tol=1e-9)
+    err = float(np.abs(routed.Theta - unrouted.Theta).max())
+    assert err < 1e-6, f"ladder: routed vs unrouted diff {err:.2e}"
+    mix = route_mix_counts()
+    for cls in ("singleton", "pair", "tree", "chordal", "general"):
+        assert mix.get(cls, 0) > 0, f"ladder class {cls!r} never routed"
+    print(f"smoke: routing ladder matches iterative on all classes ({mix})")
     print("smoke: OK")
 
 
@@ -86,6 +114,17 @@ def main() -> None:
         key = f"table{r['table']}/" + (r.get("regime") or r.get("example", ""))
         rows.append((key, (r.get("with_screen_s") or r.get("avg_solve_s", 0)) * 1e6,
                      f"max_comp={r['avg_max_component']:.0f}"))
+
+    print("=" * 72)
+    print("Routing ladder: structure-routed vs all-iterative path solving")
+    print("=" * 72)
+    from benchmarks import bench_routes
+
+    route_rec = bench_routes.run(
+        K=40 if args.quick else 150, n_lambdas=8 if args.quick else 12
+    )
+    rows.append((f"routes/p{route_rec['p']}", route_rec["solve_routed_s"] * 1e6,
+                 f"solve_speedup={route_rec['solve_speedup']}"))
 
     print("=" * 72)
     print("Engine planner: incremental path planning vs per-lambda replanning")

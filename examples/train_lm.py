@@ -9,7 +9,6 @@ configuration (same code path).
 """
 
 import argparse
-import dataclasses
 import sys
 
 sys.path.insert(0, "src")

@@ -3,7 +3,6 @@
     PYTHONPATH=src python scripts/gen_experiments.py
 """
 
-import json
 import sys
 from pathlib import Path
 

@@ -51,7 +51,7 @@ def save_checkpoint(directory, step: int, tree, *, mesh_shape=None) -> Path:
     tmp.mkdir(parents=True, exist_ok=True)
 
     names, leaves, _ = _flatten_with_paths(tree)
-    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    arrays = {f"leaf_{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
     with open(tmp / "shard_00000.npz", "wb") as f:
         np.savez(f, **arrays)
         f.flush()
@@ -59,8 +59,8 @@ def save_checkpoint(directory, step: int, tree, *, mesh_shape=None) -> Path:
     manifest = {
         "step": step,
         "names": names,
-        "shapes": [list(np.shape(l)) for l in leaves],
-        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.shape(leaf)) for leaf in leaves],
+        "dtypes": [str(np.asarray(leaf).dtype) for leaf in leaves],
         "mesh_shape": list(mesh_shape) if mesh_shape else None,
         "time": time.time(),
     }

@@ -7,9 +7,8 @@ any config to a CPU-smoke-test size of the same family.
 
 from __future__ import annotations
 
-import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

@@ -20,7 +20,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -49,27 +48,36 @@ def plan_bucket_size(b: int, *, single_block: bool = False, min_bucket: int = 2)
     return min(p2, ((b + 127) // 128) * 128)
 
 
-def group_components(comps: list[np.ndarray]) -> tuple[np.ndarray, dict[int, list[np.ndarray]]]:
-    """Split components into (isolated vertices, {padded size: members}).
+def group_components(
+    comps: list[np.ndarray], classify=None
+) -> tuple[np.ndarray, dict[tuple[int, str], list[np.ndarray]]]:
+    """Split components into (isolated vertices, {(padded size, structure):
+    members}).
+
+    ``classify`` maps a component's vertex array to its structure class
+    (``repro.engine.structure``); None tags everything "general" — the
+    pre-router behavior.  Buckets are homogeneous in BOTH padded size and
+    structure, so the executor can route a whole bucket down one ladder rung.
 
     Grouping is by power-of-two size; groups that end up with exactly one
     block are then re-padded to their mild single-block size (see
-    ``plan_bucket_size``).  Sizes cannot collide across groups: the mild size
-    stays within (pow2/2, pow2].
+    ``plan_bucket_size``).  Sizes cannot collide across same-structure
+    groups: the mild size stays within (pow2/2, pow2].
     """
     isolated = np.array(
         sorted(int(c[0]) for c in comps if len(c) == 1), dtype=np.int64
     )
-    by_p2: dict[int, list[np.ndarray]] = {}
+    by_p2: dict[tuple[int, str], list[np.ndarray]] = {}
     for c in comps:
         if len(c) == 1:
             continue
-        by_p2.setdefault(bucket_size(len(c)), []).append(c)
-    by_size: dict[int, list[np.ndarray]] = {}
-    for members in by_p2.values():
+        structure = classify(c) if classify is not None else "general"
+        by_p2.setdefault((bucket_size(len(c)), structure), []).append(c)
+    by_key: dict[tuple[int, str], list[np.ndarray]] = {}
+    for (_, structure), members in by_p2.items():
         size = plan_bucket_size(len(members[0]), single_block=len(members) == 1)
-        by_size.setdefault(size, []).extend(members)
-    return isolated, dict(sorted(by_size.items()))
+        by_key.setdefault((size, structure), []).extend(members)
+    return isolated, dict(sorted(by_key.items()))
 
 
 def pad_block(S_block: np.ndarray, size: int) -> np.ndarray:
@@ -84,6 +92,8 @@ class Bucket:
     size: int                                  # padded block size
     comps: list[np.ndarray]                    # member-vertex arrays
     blocks: np.ndarray                         # (n_blocks, size, size) padded S
+    structure: str = "general"                 # routing ladder class
+
 
 @dataclass
 class Plan:
@@ -106,7 +116,12 @@ class Plan:
 
 
 def make_bucket(
-    S: np.ndarray, size: int, members: list[np.ndarray], *, dtype=np.float64
+    S: np.ndarray,
+    size: int,
+    members: list[np.ndarray],
+    *,
+    dtype=np.float64,
+    structure: str = "general",
 ) -> Bucket:
     """Pad and stack one size-group of components (the ONLY place padded
     bucket stacks are constructed — build_plan and the engine planner both
@@ -114,20 +129,23 @@ def make_bucket(
     blocks = np.stack(
         [pad_block(np.asarray(S, dtype)[np.ix_(c, c)], size) for c in members]
     )
-    return Bucket(size=size, comps=members, blocks=blocks)
+    return Bucket(size=size, comps=members, blocks=blocks, structure=structure)
 
 
 def build_plan(
-    S: np.ndarray, lam: float, labels: np.ndarray, *, dtype=np.float64
+    S: np.ndarray, lam: float, labels: np.ndarray, *, dtype=np.float64, classify=None
 ) -> Plan:
-    """Group components into padded same-size buckets."""
+    """Group components into padded same-(size, structure) buckets.
+
+    ``classify`` tags each component with its routing-ladder structure class
+    (see ``group_components``); None keeps every bucket "general"."""
     from repro.core.components import component_lists
 
     comps = component_lists(labels)
-    isolated, by_size = group_components(comps)
+    isolated, by_key = group_components(comps, classify=classify)
     buckets = [
-        make_bucket(S, size, members, dtype=dtype)
-        for size, members in by_size.items()
+        make_bucket(S, size, members, dtype=dtype, structure=structure)
+        for (size, structure), members in by_key.items()
     ]
     return Plan(p=S.shape[0], lam=float(lam), labels=labels, isolated=isolated, buckets=buckets)
 
@@ -149,7 +167,12 @@ def solve_bucket(
 def assemble_dense(
     plan: Plan, bucket_solutions: list[np.ndarray], S: np.ndarray
 ) -> np.ndarray:
-    """Scatter per-component solutions back into the global dense Theta."""
+    """Scatter per-component solutions back into the global dense Theta.
+
+    Buckets whose members all share one size scatter with a single fancy-
+    index assignment per bucket — on large-lambda plans (thousands of tiny
+    components) the per-component python loop was a measurable slice of the
+    whole solve stage."""
     p = plan.p
     Theta = np.zeros((p, p), dtype=np.asarray(bucket_solutions[0]).dtype if bucket_solutions else np.float64)
     Sd = np.asarray(S)
@@ -159,7 +182,14 @@ def assemble_dense(
         )
     for bucket, sols in zip(plan.buckets, bucket_solutions):
         sols = np.asarray(sols)
-        for comp, sol in zip(bucket.comps, sols):
-            b = len(comp)
-            Theta[np.ix_(comp, comp)] = sol[:b, :b]
+        by_b: dict[int, list[int]] = {}
+        for i, comp in enumerate(bucket.comps):
+            by_b.setdefault(len(comp), []).append(i)
+        for b, idxs in by_b.items():
+            if len(idxs) == 1:
+                comp = bucket.comps[idxs[0]]
+                Theta[np.ix_(comp, comp)] = sols[idxs[0]][:b, :b]
+            else:
+                rows = np.stack([bucket.comps[i] for i in idxs])   # (n, b)
+                Theta[rows[:, :, None], rows[:, None, :]] = sols[idxs][:, :b, :b]
     return Theta

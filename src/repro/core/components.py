@@ -139,6 +139,7 @@ def canonicalize_labels(labels: np.ndarray) -> np.ndarray:
     np.minimum.at(mins, inverse, np.arange(p, dtype=np.int64))
     return mins[inverse].astype(labels.dtype, copy=False)
 
+
 def partitions_equal(a: np.ndarray, b: np.ndarray) -> bool:
     """Theorem-1 equality: same vertex partition up to label permutation."""
     return bool(np.array_equal(canonicalize_labels(a), canonicalize_labels(b)))

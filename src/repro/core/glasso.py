@@ -38,9 +38,15 @@ def glasso(
     dtype=jnp.float64,
     cc_backend: str = "host",
     warm_W: np.ndarray | None = None,
+    route: bool = True,
     **solver_opts,
 ) -> GlassoResult:
-    engine = Engine(solver=solver, dtype=dtype, cc_backend=cc_backend, **solver_opts)
+    """``route=False`` disables the structure-routed solver ladder (every
+    block takes the iterative solver — the pre-router baseline; used by the
+    equivalence gates and the route-mix benchmark)."""
+    engine = Engine(
+        solver=solver, dtype=dtype, cc_backend=cc_backend, route=route, **solver_opts
+    )
     return engine.run(S, lam, screen=screen, p_max=p_max, warm_W=warm_W)
 
 
@@ -54,6 +60,7 @@ def glasso_path(
     screen: bool = True,
     cc_backend: str = "host",
     p_max: int | None = None,
+    route: bool = True,
     **solver_opts,
 ) -> list[GlassoResult]:
     """Solve along a descending lambda path (one planning pass, warm starts).
@@ -68,8 +75,8 @@ def glasso_path(
     lambda.
     """
     del cc_backend  # see docstring
-    engine = Engine(solver=solver, dtype=dtype, **solver_opts)
+    engine = Engine(solver=solver, dtype=dtype, route=route, **solver_opts)
     if not screen:
-        lams = sorted((float(l) for l in np.asarray(list(lambdas)).ravel()), reverse=True)
+        lams = sorted((float(v) for v in np.asarray(list(lambdas)).ravel()), reverse=True)
         return [engine.run(S, lam, screen=False, p_max=p_max) for lam in lams]
     return engine.run_path(S, lambdas, warm_start=warm_start, p_max=p_max)

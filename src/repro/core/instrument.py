@@ -31,6 +31,22 @@ def counts(prefix: str = "") -> dict[str, int]:
         return {k: v for k, v in _COUNTS.items() if k.startswith(prefix)}
 
 
+def tail_counts(prefix: str) -> dict[str, int]:
+    """Counters under ``prefix``, keyed by the remainder of the name —
+    e.g. ``tail_counts("router.route.")`` -> {"singleton": 812, "tree": 37}.
+    The router/benchmark convenience view of the per-route counters."""
+    with _LOCK:
+        return {
+            k[len(prefix):]: v for k, v in _COUNTS.items() if k.startswith(prefix)
+        }
+
+
+def route_mix_counts() -> dict[str, int]:
+    """Blocks routed per structure class since the last reset — the
+    acceptance view: every ladder rung exercised shows up here."""
+    return tail_counts("router.route.")
+
+
 def reset(prefix: str = "") -> None:
     """Reset all counters with the given prefix ('' resets everything)."""
     with _LOCK:

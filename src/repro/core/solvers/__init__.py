@@ -18,6 +18,11 @@ MXU:
 
 from repro.core.solvers.admm import glasso_admm
 from repro.core.solvers.bcd import glasso_bcd
+from repro.core.solvers.closed_form import (
+    glasso_chordal_host,
+    glasso_forest,
+    glasso_forest_stack,
+)
 from repro.core.solvers.kkt import kkt_residual
 from repro.core.solvers.pg import glasso_pg
 
@@ -25,6 +30,15 @@ SOLVERS = {
     "bcd": glasso_bcd,
     "pg": glasso_pg,
     "admm": glasso_admm,
+}
+
+# Closed-form direct solvers are NOT in SOLVERS: they are exact only on the
+# structure classes the planner certifies, so they are reachable through the
+# routing ladder (engine.registry.route_for), never as a user-picked solver
+# for arbitrary blocks.
+CLOSED_FORM_SOLVERS = {
+    "forest": glasso_forest,
+    "chordal": glasso_chordal_host,
 }
 
 # solvers that actually consume a W0 covariance warm start (pg/admm accept
@@ -36,7 +50,11 @@ __all__ = [
     "glasso_bcd",
     "glasso_pg",
     "glasso_admm",
+    "glasso_forest",
+    "glasso_forest_stack",
+    "glasso_chordal_host",
     "kkt_residual",
     "SOLVERS",
+    "CLOSED_FORM_SOLVERS",
     "WARM_START_SOLVERS",
 ]

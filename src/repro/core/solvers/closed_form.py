@@ -1,0 +1,149 @@
+"""Closed-form glasso solvers for structured thresholded supports.
+
+The routing ladder (DESIGN.md Section 9) sends each component to the
+cheapest solver its structure admits:
+
+    singleton   Theta_ii = 1/(S_ii + lam)                (diagonal KKT)
+    pair        analytic 2x2: W = [[s11+lam, soft(s12,lam)],
+                                   [soft(s12,lam), s22+lam]], Theta = W^{-1}
+                — the single-edge case of the forest formula
+    tree        Fattahi-Sojoudi closed form (kernels/tree_glasso): O(|E|)
+    chordal     clique-tree inverse of the maximum-determinant completion
+                (Fattahi, Zhang & Sojoudi, arXiv:1711.09131):
+                    Theta = sum_cliques [A_C^{-1}]^0 - sum_seps [A_S^{-1}]^0
+                with A the soft-thresholded matrix restricted to the chordal
+                support.  Equivalent to a zero-fill sparse Cholesky solve
+                under the perfect elimination ordering; cost is
+                sum |C|^3 over maximal cliques instead of iterating O(b^3).
+    general     the iterative tail (bcd / pg / admm)
+
+Closed forms satisfy the edge KKT exactly BY CONSTRUCTION; the non-edge dual
+constraint |W_ij - S_ij| <= lam can fail on adversarial matrices (glasso ==
+thresholding needs the papers' sign-consistency conditions), so every fast
+path is verified — ``kkt_ok_stack`` / ``kkt_residual_host`` — and failures
+fall back to the iterative solver.  Routing therefore never changes the
+answer, only the cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tree_glasso.ops import glasso_forest, glasso_forest_stack
+
+__all__ = [
+    "glasso_forest",
+    "glasso_forest_stack",
+    "glasso_chordal_host",
+    "soft_threshold_host",
+    "kkt_ok_stack",
+    "kkt_residual_host",
+]
+
+
+# ---------------------------------------------------------------------------
+# Chordal: clique-tree inverse of the max-det completion (host, per block)
+# ---------------------------------------------------------------------------
+
+
+def soft_threshold_host(S: np.ndarray, lam: float) -> np.ndarray:
+    """A = soft(S, lam) off-diagonal (strict support |S_ij| > lam),
+    S_ii + lam on the diagonal — the matrix whose completion glasso inverts."""
+    S = np.asarray(S)
+    absS = np.abs(S)
+    A = np.where(absS > lam, np.sign(S) * (absS - lam), 0.0)
+    np.fill_diagonal(A, np.diag(S) + lam)
+    return A
+
+
+def glasso_chordal_host(
+    S_blk: np.ndarray, lam: float, *, adj: np.ndarray | None = None
+) -> np.ndarray:
+    """Closed-form glasso candidate for one block with chordal support.
+
+    Sums zero-padded clique inverses and subtracts separator inverses of the
+    soft-thresholded matrix — the junction-tree formula for the inverse of
+    the maximum-determinant positive-definite completion.  The caller (the
+    executor's router) verifies the KKT residual and falls back on failure.
+    """
+    from repro.engine.structure import clique_tree, component_adjacency, peo_or_none
+
+    S_blk = np.asarray(S_blk, dtype=np.float64 if S_blk.dtype.kind != "f" else S_blk.dtype)
+    b = S_blk.shape[0]
+    if adj is None:
+        adj = component_adjacency(S_blk, np.arange(b), lam)
+    order = peo_or_none(adj)
+    if order is None:
+        raise ValueError("glasso_chordal_host called on a non-chordal support")
+    cliques, separators = clique_tree(adj, order)
+    A = soft_threshold_host(S_blk, lam)
+    Theta = np.zeros_like(A)
+    for C in cliques:
+        Theta[np.ix_(C, C)] += np.linalg.inv(A[np.ix_(C, C)])
+    for sep in separators:
+        Theta[np.ix_(sep, sep)] -= np.linalg.inv(A[np.ix_(sep, sep)])
+    return Theta
+
+
+# ---------------------------------------------------------------------------
+# KKT verification (the router's safety net)
+# ---------------------------------------------------------------------------
+
+
+#: closed-form candidates are EXACTLY sparse off their support, so the zero
+#: classification can be much tighter than the iterative solvers' default
+_ZERO_TOL = 1e-12
+
+
+def _kkt_residual_one(S: jax.Array, lam: jax.Array, Theta: jax.Array) -> jax.Array:
+    """Worst KKT violation of a candidate Theta — delegates to the canonical
+    ``core.solvers.kkt.kkt_residual`` (paper eq. (11)-(12)) so the router's
+    safety net cannot drift from the optimality definition the tests use.
+    NaN/Inf-safe: a degenerate candidate yields NaN/inf, which compares
+    False against any tolerance, so the router falls back; the explicit PD
+    guard catches indefinite candidates whose inverse is still finite."""
+    from repro.core.solvers.kkt import kkt_residual
+
+    res = kkt_residual(S, Theta, lam, zero_tol=_ZERO_TOL)
+    pd = jnp.linalg.slogdet(Theta)[0] > 0
+    return jnp.where(pd, res, jnp.inf)
+
+
+def kkt_ok_stack(
+    blocks: jax.Array, lams: jax.Array, thetas: jax.Array, *, tol: float
+) -> jax.Array:
+    """Per-block bool: candidate solutions within ``tol`` (scaled by max|S|)
+    of KKT optimality.  One batched O(b^3) inverse — cheap next to the
+    hundreds of iterations it certifies skipping."""
+    res = jax.vmap(_kkt_residual_one)(blocks, lams, thetas)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(blocks), axis=(1, 2)), jnp.ones((), blocks.dtype)
+    )
+    return res <= tol * scale
+
+
+def kkt_residual_host(S: np.ndarray, lam: float, Theta: np.ndarray) -> float:
+    """Host twin of ``_kkt_residual_one`` for the chordal (numpy) path.
+
+    Pure numpy so the chordal per-block host loop pays no jax dispatch; the
+    formula MUST mirror ``core.solvers.kkt.kkt_residual`` (eq. (11)-(12)) —
+    tests/test_closed_form.py cross-checks the two on every chordal
+    property-test instance."""
+    S = np.asarray(S, dtype=np.float64)
+    Theta = np.asarray(Theta, dtype=np.float64)
+    sign, _ = np.linalg.slogdet(Theta)
+    if not np.isfinite(Theta).all() or sign <= 0:
+        return float("inf")
+    W = np.linalg.inv(Theta)
+    eye = np.eye(S.shape[0], dtype=bool)
+    is_zero = np.abs(Theta) <= _ZERO_TOL
+    v_zero = np.where(
+        is_zero & ~eye, np.maximum(np.abs(S - W) - lam, 0.0), 0.0
+    ).max()
+    v_act = np.where(
+        ~is_zero & ~eye, np.abs(W - S - lam * np.sign(Theta)), 0.0
+    ).max()
+    v_diag = np.abs(np.diag(W) - np.diag(S) - lam).max()
+    return float(max(v_zero, v_act, v_diag))

@@ -15,6 +15,7 @@ from repro.covariance.synthetic import (
     lambda_interval_for_k,
     microarray_like,
     paper_synthetic,
+    structured_synthetic,
 )
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "impute_missing",
     "paper_synthetic",
     "microarray_like",
+    "structured_synthetic",
     "lambda_interval_for_k",
 ]

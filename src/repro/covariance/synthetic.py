@@ -8,6 +8,12 @@
                         component-merge profile of Figure 1 (the real
                         Alon / Brown-lab / NKI arrays are not redistributable;
                         the generator matches their (n, p) regimes).
+``structured_synthetic`` — planted-support covariance for the routing-ladder
+                        bench: components whose thresholded subgraphs are
+                        trees / chordal k-trees / chordless cycles in chosen
+                        proportions, with edge magnitudes spread across a
+                        lambda interval so a descending path progressively
+                        reveals (then merges) the planted structures.
 """
 
 from __future__ import annotations
@@ -65,6 +71,69 @@ def lambda_interval_for_k(S: np.ndarray, K: int) -> tuple[float, float]:
     lam_max = float(np.nextafter(vals[lo_idx], 0.0))
     lam_min = float(vals[hi_idx + 1]) if hi_idx + 1 < vals.size else 0.0
     return lam_min, lam_max
+
+
+def structured_synthetic(
+    K: int,
+    p1: int,
+    *,
+    tree_frac: float = 0.6,
+    chordal_frac: float = 0.25,
+    lam_lo: float = 0.3,
+    lam_hi: float = 0.8,
+    noise: float = 0.9,
+    seed: int = 0,
+) -> np.ndarray:
+    """Covariance with K planted p1-vertex components of known structure.
+
+    Component i's within-block support is a random recursive tree (first
+    ``tree_frac`` of blocks), a chordal 2-tree (next ``chordal_frac``), or a
+    chordless cycle (the rest — the smallest non-chordal shape, so the
+    iterative ladder tail stays exercised).  Edge magnitudes are uniform in
+    [lam_lo, lam_hi] and off-block noise stays below ``noise * lam_lo``, so
+    any lambda in (noise * lam_lo, lam_hi) screens into (pieces of) the
+    planted blocks; descending through the interval both densifies each
+    block's subgraph and merges pieces — the full structure-classification
+    story on one path.  Diagonals are set diagonally dominant, keeping the
+    soft-thresholded matrix PD (the closed-form regime of the ladder bench).
+
+    Returns the p x p matrix S with p = K * p1 (float64), columns shuffled.
+    """
+    rng = np.random.default_rng(seed)
+    p = K * p1
+    S = np.zeros((p, p))
+    n_tree = int(round(tree_frac * K))
+    n_chordal = int(round(chordal_frac * K))
+    for blk in range(K):
+        base = blk * p1
+        if blk < n_tree:
+            edges = [(i, int(rng.integers(0, i))) for i in range(1, p1)]
+        elif blk < n_tree + n_chordal:
+            # 2-tree: triangle seed, then each vertex joins a random edge
+            edges = [(1, 0), (2, 0), (2, 1)]
+            for v in range(3, p1):
+                a = int(rng.integers(0, v))
+                b = int(rng.integers(0, v))
+                while b == a:
+                    b = int(rng.integers(0, v))
+                edges += [(v, a), (v, b)]
+        else:
+            edges = [(i, (i + 1) % p1) for i in range(p1)]  # chordless cycle
+        for i, j in edges:
+            v = rng.uniform(lam_lo, lam_hi) * (1 if rng.random() < 0.5 else -1)
+            S[base + i, base + j] = S[base + j, base + i] = v
+    # off-block noise strictly below the screening range
+    mask = S == 0
+    np.fill_diagonal(mask, False)
+    tri = np.triu(mask, 1)
+    vals = rng.uniform(0, noise * lam_lo, size=int(tri.sum()))
+    signs = rng.choice([-1.0, 1.0], size=vals.size)
+    S[tri] = vals * signs
+    S = np.triu(S, 1)
+    S = S + S.T
+    np.fill_diagonal(S, 1.0 + np.abs(S).sum(axis=1))
+    perm = rng.permutation(p)
+    return S[np.ix_(perm, perm)]
 
 
 def microarray_like(

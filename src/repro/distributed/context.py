@@ -44,7 +44,7 @@ def constrain(x, names: tuple):
     policy is active (tests, single-device examples)."""
     if _ACTIVE is None:
         return x
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     spec = _ACTIVE.act_pspec(names, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE.mesh, spec))

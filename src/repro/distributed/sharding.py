@@ -17,7 +17,6 @@ batch unshardable -> the sequence dim absorbs the idle axes).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 import jax
@@ -109,7 +108,7 @@ class ShardingPolicy:
 
     def batch_shardings(self, batch_tree):
         return jax.tree.map(
-            lambda l: NamedSharding(self.mesh, self.batch_pspec(l.shape)), batch_tree
+            lambda leaf: NamedSharding(self.mesh, self.batch_pspec(leaf.shape)), batch_tree
         )
 
     # ------------------------------------------------------------- caches
@@ -151,13 +150,13 @@ class ShardingPolicy:
         return P(*([None] * len(shape)))
 
     def cache_shardings(self, caches_tree):
-        def leaf(path, l):
+        def leaf(path, x):
             name = None
             for entry in reversed(path):
                 if hasattr(entry, "key"):
                     name = entry.key
                     break
-            return NamedSharding(self.mesh, self.cache_pspec(name, l.shape))
+            return NamedSharding(self.mesh, self.cache_pspec(name, x.shape))
 
         return jax.tree_util.tree_map_with_path(leaf, caches_tree)
 

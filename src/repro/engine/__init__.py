@@ -1,11 +1,14 @@
 """Plan->Execute engine for the Theorem-1 screening pipeline.
 
 Layers (DESIGN.md):
-    registry   screening backends behind one ``backend=`` string
+    registry   screening backends behind one ``backend=`` string + the
+               structure -> solver routing ladder
+    structure  component subgraph classification (singleton/pair/tree/
+               chordal/general) feeding the ladder
     planner    incremental lambda-path planning (one union-find pass, diffed
-               bucket plans)
+               bucket plans, per-bucket structure tags)
     executor   async multi-device bucket dispatch + process-global compiled
-               solver cache
+               solver cache + verified closed-form fast paths
     api        the ``Engine`` facade that ``repro.core.glasso`` wraps
 """
 
@@ -14,7 +17,11 @@ from repro.engine.registry import (
     get_cc_backend,
     label_components,
     register_cc_backend,
+    route_for,
+    set_route,
+    solver_routes,
 )
+from repro.engine.structure import STRUCTURES, classify_component
 from repro.engine.planner import (
     PathPlan,
     PathStep,
@@ -35,13 +42,18 @@ __all__ = [
     "BucketExecutor",
     "PathPlan",
     "PathStep",
+    "STRUCTURES",
     "available_cc_backends",
     "bucket_key",
     "build_plan_incremental",
+    "classify_component",
     "compiled_bucket_solver",
     "compiled_cache_stats",
     "get_cc_backend",
     "label_components",
     "plan_path",
     "register_cc_backend",
+    "route_for",
+    "set_route",
+    "solver_routes",
 ]

@@ -38,6 +38,8 @@ class GlassoResult:
     solve_seconds: float
     solver: str
     block_sizes: list[int] = field(default_factory=list)
+    route_mix: dict = field(default_factory=dict)  # structure class -> #blocks
+    routed: bool = True            # was the routing ladder enabled?
 
     @property
     def support(self) -> np.ndarray:
@@ -46,8 +48,34 @@ class GlassoResult:
         np.fill_diagonal(A, False)
         return A
 
+    @property
+    def noniterative_fraction(self) -> float:
+        """Share of this solve's blocks ROUTED to a non-iterative solver
+        (the routing-ladder acceptance metric; singletons included).
 
-def _result(plan, labels, screen_stats, Theta, seconds, solver, lam) -> GlassoResult:
+        0.0 when the solve ran with route=False; honors ``registry.set_route``
+        re-routing.  The rare KKT-rejected blocks repaired by the iterative
+        tail are NOT subtracted — track those via the ``router.fallback.*``
+        counters."""
+        from repro.engine.registry import route_for
+
+        if not self.routed:
+            return 0.0
+        total = sum(self.route_mix.values())
+        if not total:
+            return 1.0
+        iterative = sum(
+            n for cls, n in self.route_mix.items() if route_for(cls) == "iterative"
+        )
+        return 1.0 - iterative / total
+
+
+def _result(
+    plan, labels, screen_stats, Theta, seconds, solver, lam, *, routed: bool = True
+) -> GlassoResult:
+    route_mix = {"singleton": len(plan.isolated)} if len(plan.isolated) else {}
+    for b in plan.buckets:
+        route_mix[b.structure] = route_mix.get(b.structure, 0) + len(b.comps)
     return GlassoResult(
         lam=float(lam),
         Theta=Theta,
@@ -58,6 +86,8 @@ def _result(plan, labels, screen_stats, Theta, seconds, solver, lam) -> GlassoRe
         block_sizes=sorted(
             (len(c) for b in plan.buckets for c in b.comps), reverse=True
         ),
+        route_mix=route_mix,
+        routed=routed,
     )
 
 
@@ -75,6 +105,8 @@ class Engine:
         dtype=jnp.float64,
         cc_backend: str = "host",
         devices=None,
+        route: bool = True,
+        route_check_tol: float = 1e-6,
         **solver_opts,
     ):
         from repro.core.solvers import WARM_START_SOLVERS
@@ -85,7 +117,12 @@ class Engine:
         self.cc_backend = cc_backend
         self.warm_capable = solver in WARM_START_SOLVERS
         self.executor = BucketExecutor(
-            solver=solver, dtype=dtype, solver_opts=solver_opts, devices=devices
+            solver=solver,
+            dtype=dtype,
+            solver_opts=solver_opts,
+            devices=devices,
+            route=route,
+            route_check_tol=route_check_tol,
         )
 
     # -- stages ------------------------------------------------------------
@@ -110,6 +147,7 @@ class Engine:
         stage timings, should not pay for the partition twice)."""
         S = np.asarray(S)
         p = S.shape[0]
+        screened = True
         if labels is not None:
             from repro.core.screening import screen_stats_from_labels
 
@@ -120,14 +158,25 @@ class Engine:
         else:
             labels = np.zeros(p, dtype=np.int64)  # one global component
             screen_stats = None
-        plan, _ = build_plan_incremental(S, lam, labels, dtype=self.np_dtype)
+            screened = False
+        # classify only when routing can use the tags AND the labels are a
+        # real screening partition (the screen=False pseudo-component is not
+        # connected, which the classifier requires — the unscreened baseline
+        # must stay on the dense iterative path)
+        plan, _ = build_plan_incremental(
+            S, lam, labels, dtype=self.np_dtype,
+            classify_structures=self.executor.route and screened,
+        )
         schedule_mod.check_capacity(
             [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
         )
         t0 = time.perf_counter()
         Theta = self.executor.solve_plan(plan, float(lam), S, warm_W=warm_W)
         seconds = time.perf_counter() - t0
-        return _result(plan, labels, screen_stats, Theta, seconds, self.solver, lam)
+        return _result(
+            plan, labels, screen_stats, Theta, seconds, self.solver, lam,
+            routed=self.executor.route,
+        )
 
     # -- lambda path -------------------------------------------------------
 
@@ -147,8 +196,13 @@ class Engine:
         sub-components — a valid PD warm start.  Buckets unchanged between
         consecutive lambdas skip re-padding entirely and warm-start from their
         own previous padded solutions on device."""
+        from repro.engine.registry import route_for  # local: avoid cycle at import
+
         S = np.asarray(S)
-        path = plan_path(S, lambdas, dtype=self.np_dtype)
+        path = plan_path(
+            S, lambdas, dtype=self.np_dtype,
+            classify_structures=self.executor.route,
+        )
         results: list[GlassoResult] = []
         prev: GlassoResult | None = None
         for step in path.steps:
@@ -157,8 +211,16 @@ class Engine:
             )
             warm_W = None
             if warm_start and prev is not None and self.warm_capable:
+                # warm starts only matter for iterative-routed buckets; a
+                # closed-form/chordal block is solved directly regardless
                 fresh = [
-                    b for b in step.plan.buckets if not step.is_reused(b)
+                    b
+                    for b in step.plan.buckets
+                    if not step.is_reused(b)
+                    and (
+                        not self.executor.route
+                        or route_for(b.structure) == "iterative"
+                    )
                 ]
                 if fresh:
                     # dense warm start only for merged buckets: blockwise
@@ -184,7 +246,8 @@ class Engine:
             )
             seconds = time.perf_counter() - t0
             res = _result(
-                step.plan, step.labels, step.screen, Theta, seconds, self.solver, step.lam
+                step.plan, step.labels, step.screen, Theta, seconds, self.solver,
+                step.lam, routed=self.executor.route,
             )
             results.append(res)
             prev = res

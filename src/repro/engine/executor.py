@@ -19,6 +19,17 @@ Design points, each mapped to a paper/ROADMAP concern:
 * **Warm-start donation.**  W0 stacks are donated to the solver call on
   backends that support buffer donation (TPU/GPU), so a lambda path does not
   hold two copies of the largest bucket's iterate.
+
+* **Structure-routed solver ladder.**  Each bucket carries the structure
+  class the planner assigned (``engine.structure``); ``registry.route_for``
+  maps it to a route: "closed_form" (pair/tree — the batched Pallas forest
+  kernel plus an in-jit KKT check), "chordal" (host clique-tree direct
+  solve), or "iterative" (the configured bcd/pg/admm solver).  Non-iterative
+  routes are VERIFIED: the closed forms satisfy the edge KKT by
+  construction, but non-edge dual feasibility can fail on adversarial
+  matrices, so blocks whose residual exceeds ``route_check_tol`` are
+  re-dispatched to the iterative solver (``router.fallback.*`` counters).
+  Routing changes cost, never the answer.
 """
 
 from __future__ import annotations
@@ -35,6 +46,12 @@ from repro.core import blocks as blocks_mod
 from repro.core.instrument import bump, counts
 from repro.core.schedule import lpt_assign
 from repro.core.solvers import SOLVERS, WARM_START_SOLVERS
+from repro.core.solvers.closed_form import (
+    glasso_chordal_host,
+    glasso_forest_stack,
+    kkt_ok_stack,
+    kkt_residual_host,
+)
 
 _CACHE_LOCK = threading.Lock()
 _COMPILED: dict[tuple, Any] = {}
@@ -88,20 +105,116 @@ def compiled_bucket_solver(
 
             def run(blocks, lams, W0):
                 return jax.vmap(
-                    lambda Sb, l, w0: solver_fn(Sb, l, W0=w0, **opts)
+                    lambda Sb, lm, w0: solver_fn(Sb, lm, W0=w0, **opts)
                 )(blocks, lams, W0)
 
             fn = jax.jit(run, donate_argnums=(2,) if _donate_supported() else ())
         else:
 
             def run(blocks, lams):
-                return jax.vmap(lambda Sb, l: solver_fn(Sb, l, **opts))(
+                return jax.vmap(lambda Sb, lm: solver_fn(Sb, lm, **opts))(
                     blocks, lams
                 )
 
             fn = jax.jit(run)
         _COMPILED[key] = fn
         return fn
+
+
+def compiled_closed_form(size: int, dtype, *, tol: float, verify: bool = True):
+    """Fetch-or-build the jitted batched closed-form forest solver + verifier.
+
+    Returned callable: fn(blocks[n,size,size], lams[n]) -> (Theta[n,...],
+    ok[n]) where ok certifies the KKT residual within tol (scaled by max|S|).
+    ``verify=False`` skips the batched-inverse check and returns ok=True —
+    sound ONLY for the "pair" class, where the closed form has no non-edge
+    dual constraints to violate (a 2x2 support is complete), so it is exact
+    by construction.  Shares the process-global compiled cache with the
+    iterative solvers, so serving, paths, and benchmarks reuse one
+    executable per (size, dtype)."""
+    key = (
+        "__closed_form__", int(size), jnp.dtype(dtype).name, float(tol), verify
+    )
+    with _CACHE_LOCK:
+        fn = _COMPILED.get(key)
+        if fn is not None:
+            bump("executor.compiled_hit")
+            return fn
+        bump("executor.compiled_miss")
+
+        def run(blocks, lams):
+            thetas = glasso_forest_stack(blocks, lams)
+            if verify:
+                ok = kkt_ok_stack(blocks, lams, thetas, tol=tol)
+            else:
+                ok = jnp.ones(blocks.shape[0], dtype=bool)
+            return thetas, ok
+
+        fn = jax.jit(run)
+        _COMPILED[key] = fn
+        return fn
+
+
+def dispatch_repair(
+    solver: str,
+    dtype,
+    opts_key: tuple,
+    size: int,
+    blocks: np.ndarray,
+    lams: np.ndarray,
+    candidates,
+):
+    """Async re-dispatch of rejected fast-path blocks to the iterative tail.
+
+    Shared by the executor and the serving batcher so repairs behave
+    identically everywhere: the rejected candidate is PD (the KKT check
+    treats non-PD as an infinite residual), just dual-infeasible — so its
+    inverse is an excellent W iterate to warm-start from, typically cutting
+    the repair to a few sweeps.  ``lams`` is per-block (serving repairs can
+    mix lambdas)."""
+    sub = jnp.asarray(np.asarray(blocks), dtype)
+    lams_d = jnp.asarray(np.asarray(lams), dtype)
+    warm = solver in WARM_START_SOLVERS
+    W0 = None
+    if warm:
+        W0 = jnp.linalg.inv(jnp.asarray(np.asarray(candidates), dtype))
+        # a candidate can be rejected BECAUSE it is singular: those rows
+        # get the cold start W = S + lam*I instead of a NaN iterate
+        finite = jnp.all(jnp.isfinite(W0), axis=(1, 2), keepdims=True)
+        cold = sub + lams_d[:, None, None] * jnp.eye(size, dtype=dtype)
+        W0 = jnp.where(finite, W0, cold)
+    fn = compiled_bucket_solver(solver, size, dtype, warm=warm, opts_key=opts_key)
+    bump("executor.dispatches")
+    return fn(sub, lams_d, W0) if warm else fn(sub, lams_d)
+
+
+def solve_chordal_bucket(
+    bucket: blocks_mod.Bucket, lams: np.ndarray, *, tol: float
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host clique-tree direct solve of one chordal bucket.
+
+    Returns (padded Theta stack, per-block ok).  Cost is sum |C|^3 over
+    maximal cliques per block — the chordal analog of the zero-fill sparse
+    Cholesky — versus hundreds of O(size^3) iterations on the iterative
+    path.  Verification failures are left to the caller's fallback."""
+    n = bucket.blocks.shape[0]
+    thetas = np.empty_like(np.asarray(bucket.blocks))
+    ok = np.zeros(n, dtype=bool)
+    for i, comp in enumerate(bucket.comps):
+        b = len(comp)
+        lam = float(lams[i])
+        blk = np.asarray(bucket.blocks[i][:b, :b])
+        padded = np.eye(bucket.size, dtype=thetas.dtype) / (1.0 + lam)
+        try:
+            theta = glasso_chordal_host(blk, lam)
+            res = kkt_residual_host(blk, lam, theta)
+            scale = max(1.0, float(np.abs(blk).max()))
+            ok[i] = res <= tol * scale
+            padded[:b, :b] = theta
+        except (ValueError, np.linalg.LinAlgError):
+            ok[i] = False
+        thetas[i] = padded
+    return thetas, ok
 
 
 def compiled_cache_stats() -> dict[str, int]:
@@ -115,7 +228,11 @@ def compiled_cache_stats() -> dict[str, int]:
 @dataclass
 class _Pending:
     bucket: blocks_mod.Bucket
-    out: jax.Array
+    out: Any                       # jax array (device routes) or np (chordal)
+    ok: Any = None                 # per-block KKT flags for verified routes
+    stacked: Any = None            # device input stack (reuse cache)
+    key: tuple = ()
+    repair: Any = None             # (row idx, in-flight iterative re-solve)
 
 
 @dataclass
@@ -130,6 +247,8 @@ class BucketExecutor:
     dtype: Any = jnp.float64
     solver_opts: dict = field(default_factory=dict)
     devices: list | None = None
+    route: bool = True             # structure-routed ladder; False = PR-1 path
+    route_check_tol: float = 1e-6  # KKT acceptance for closed-form candidates
     # bucket_key -> previous padded solution / input stacks (device arrays):
     # reused buckets warm-start from their own previous solution and skip the
     # host->device re-upload of their bit-identical padded blocks.
@@ -181,7 +300,6 @@ class BucketExecutor:
         else:
             return None
         # padded diagonal of a W iterate must be 1 + lam (diagonal KKT)
-        n = W0.shape[0]
         idx = jnp.arange(bucket.size)
         pad_mask = jnp.stack(
             [idx >= len(c) for c in bucket.comps]
@@ -208,16 +326,40 @@ class BucketExecutor:
 
         ``reused_keys`` marks buckets whose padded arrays were carried over by
         the planner; their previous solutions (if retained via
-        ``keep_solutions``) seed the warm start without touching the host."""
-        from repro.engine.planner import bucket_key  # local: avoid cycle at import
+        ``keep_solutions``) seed the warm start without touching the host.
 
+        Routing ladder: buckets take the route their structure class maps to
+        (``registry.route_for``), every non-iterative candidate is
+        KKT-verified, and failures are re-dispatched to the iterative solver
+        before assembly — see ``_verify_and_fallback``."""
+        from repro.engine.planner import bucket_key  # local: avoid cycle at import
+        from repro.engine.registry import route_for  # local: avoid cycle at import
+
+        if self.route and len(plan.isolated):
+            bump("router.route.singleton", int(len(plan.isolated)))
         placements = self._place(plan.buckets)
         pending: list[_Pending] = []
-        new_solutions: dict = {}
-        new_blocks: dict = {}
         for bucket, device in zip(plan.buckets, placements):
             key = bucket_key(bucket)
             n = bucket.blocks.shape[0]
+            route = route_for(bucket.structure) if self.route else "iterative"
+            if self.route:
+                bump(f"router.route.{bucket.structure}", n)
+            if route == "chordal":
+                # host direct solve: no device round-trip for the candidate.
+                # KKT failures are known IMMEDIATELY (host), so their repair
+                # dispatches into the same async wave as everything else
+                # instead of serializing after the barrier.
+                out, ok = solve_chordal_bucket(
+                    bucket, np.full(n, lam), tol=self.route_check_tol
+                )
+                p = _Pending(bucket=bucket, out=out, ok=None, key=key)
+                if not ok.all():
+                    idx = np.flatnonzero(~ok)
+                    bump(f"router.fallback.{bucket.structure}", int(idx.size))
+                    p.repair = self._dispatch_repair(bucket, idx, out[idx], lam)
+                pending.append(p)
+                continue
             stacked = self._prev_blocks.get(key) if key in reused_keys else None
             if stacked is None:
                 stacked = jnp.asarray(bucket.blocks, self.dtype)
@@ -228,15 +370,28 @@ class BucketExecutor:
                 # still beats re-uploading from host
                 stacked = jax.device_put(stacked, device)
             lams = jnp.full((n,), lam, self.dtype)
+            if device is not None:
+                lams = jax.device_put(lams, device)
+            if route == "closed_form":
+                fn = compiled_closed_form(
+                    bucket.size,
+                    self.dtype,
+                    tol=self.route_check_tol,
+                    verify=bucket.structure != "pair",
+                )
+                theta, ok = fn(stacked, lams)
+                bump("executor.dispatches")
+                pending.append(
+                    _Pending(bucket=bucket, out=theta, ok=ok, stacked=stacked, key=key)
+                )
+                continue
             if self.solver in WARM_START_SOLVERS:
                 use_key = key if key in reused_keys else None
                 W0 = self._warm_stack(bucket, use_key, lam, warm_W)
             else:
                 W0 = None  # solver discards W0: skip the batched inversions
-            if device is not None:
-                lams = jax.device_put(lams, device)
-                if W0 is not None:
-                    W0 = jax.device_put(W0, device)
+            if device is not None and W0 is not None:
+                W0 = jax.device_put(W0, device)
             fn = compiled_bucket_solver(
                 self.solver,
                 bucket.size,
@@ -246,13 +401,66 @@ class BucketExecutor:
             )
             out = fn(stacked, lams, W0) if W0 is not None else fn(stacked, lams)
             bump("executor.dispatches")
-            pending.append(_Pending(bucket=bucket, out=out))
-            if keep_solutions:
-                new_solutions[key] = out
-                new_blocks[key] = stacked
+            pending.append(_Pending(bucket=bucket, out=out, stacked=stacked, key=key))
 
         # single synchronization point: everything above was async dispatch
-        jax.block_until_ready([p.out for p in pending])
+        jax.block_until_ready(
+            [p.out for p in pending if isinstance(p.out, jax.Array)]
+            + [p.repair[1] for p in pending if p.repair is not None]
+        )
+        for p in pending:
+            if p.repair is not None:
+                idx, fixed = p.repair
+                p.out = np.array(p.out)
+                p.out[idx] = np.asarray(fixed)
+        self._verify_and_fallback(pending, lam)
+
+        new_solutions: dict = {}
+        new_blocks: dict = {}
+        if keep_solutions:
+            for p in pending:
+                new_solutions[p.key] = p.out
+                if p.stacked is not None:
+                    new_blocks[p.key] = p.stacked
         self._prev_solutions = new_solutions
         self._prev_blocks = new_blocks
         return blocks_mod.assemble_dense(plan, [np.asarray(p.out) for p in pending], S)
+
+    def _dispatch_repair(
+        self, bucket: blocks_mod.Bucket, idx: np.ndarray, candidates, lam: float
+    ):
+        """Bucket-shaped wrapper over the shared ``dispatch_repair``."""
+        out = dispatch_repair(
+            self.solver,
+            self.dtype,
+            self._opts_key,
+            bucket.size,
+            np.asarray(bucket.blocks)[idx],
+            np.full(int(idx.size), lam),
+            candidates,
+        )
+        return (idx, out)
+
+    def _verify_and_fallback(self, pending: list[_Pending], lam: float) -> None:
+        """Re-dispatch every closed-form block whose KKT check failed to the
+        iterative solver (the ladder's tail) and splice the repaired rows
+        into the pending stacks.  Rare by design — the fast-path classes
+        satisfy the KKT by construction except for non-edge dual feasibility
+        on adversarial matrices — but this is what makes routing SAFE."""
+        repairs = []
+        for p in pending:
+            if p.ok is None:
+                continue
+            ok = np.asarray(p.ok)
+            if ok.all():
+                continue
+            idx = np.flatnonzero(~ok)
+            bump(f"router.fallback.{p.bucket.structure}", int(idx.size))
+            repairs.append((p, self._dispatch_repair(p.bucket, idx, np.asarray(p.out)[idx], lam)))
+        if not repairs:
+            return
+        jax.block_until_ready([r[1][1] for r in repairs])
+        for p, (idx, fixed) in repairs:
+            out = np.array(p.out)  # copy: np.asarray of a jax array is read-only
+            out[idx] = np.asarray(fixed)
+            p.out = out

@@ -9,6 +9,13 @@ whose (padded size, member components) signature is unchanged keeps its padded
 block stack (no re-gather / re-pad) and is marked reusable so the executor can
 also recycle its previous solution as a warm start.
 
+Each component is also CLASSIFIED (``engine.structure``) so buckets are
+homogeneous in (padded size, structure class) and the executor can route a
+whole bucket down one rung of the solver ladder.  Structure is part of the
+bucket identity: the same membership at a smaller lambda can gain edges
+(components merge OR densify), so a bucket whose subgraph stopped being a
+tree must not inherit the tree route from the previous step.
+
 Counters (repro.core.instrument):
     partition.unionfind_passes   exactly 1 per ``plan_path`` call
     planner.plans_built          one per lambda
@@ -28,14 +35,23 @@ from repro.core.components import component_lists
 from repro.core.instrument import bump
 from repro.core.partition import _sorted_edges, labels_at_thresholds
 from repro.core.screening import ScreenStats
+from repro.engine.structure import classify_component
 
 
 def bucket_key(bucket: blocks_mod.Bucket) -> tuple:
-    """Identity of a bucket across lambdas: padded size + exact membership.
+    """Identity of a bucket across lambdas: padded size + structure class +
+    exact membership.
 
     S is fixed along a path, so equal membership implies bit-identical padded
-    blocks — the invariant that makes reuse sound (DESIGN.md, plan-diff)."""
-    return (bucket.size, tuple(np.asarray(c).tobytes() for c in bucket.comps))
+    blocks — the invariant that makes reuse sound (DESIGN.md, plan-diff).
+    The structure class is lambda-dependent (edges appear as lambda drops
+    even when membership is unchanged), so it is part of the key: a bucket
+    that changed class is re-made rather than re-routed."""
+    return (
+        bucket.size,
+        bucket.structure,
+        tuple(np.asarray(c).tobytes() for c in bucket.comps),
+    )
 
 
 def _screen_stats(labels: np.ndarray, lam: float, sorted_w: np.ndarray, seconds: float) -> ScreenStats:
@@ -80,26 +96,45 @@ def build_plan_incremental(
     *,
     prev: blocks_mod.Plan | None = None,
     dtype=np.float64,
+    classify_structures: bool = True,
 ) -> tuple[blocks_mod.Plan, frozenset]:
     """``blocks.build_plan`` with bucket reuse against a previous plan.
+
+    ``classify_structures=False`` skips structure classification and tags
+    every bucket "general" — the PR-1 plan shape.  Required when routing is
+    off (the classifier's cost and the finer (size, structure) bucket split
+    would distort the unrouted baseline) and when ``labels`` does not come
+    from real screening (screen=False forces one global pseudo-component,
+    which is not connected — the classifier's precondition).
 
     Returns (plan, reused bucket keys)."""
     bump("planner.plans_built")
     comps = component_lists(labels)
-    isolated, by_size = blocks_mod.group_components(comps)
+    classify = (
+        (lambda c: classify_component(S, c, lam)) if classify_structures else None
+    )
+    isolated, by_key = blocks_mod.group_components(comps, classify=classify)
     prev_by_key = (
         {bucket_key(b): b for b in prev.buckets} if prev is not None else {}
     )
     buckets, reused = [], set()
-    for size, members in by_size.items():
-        key = (size, tuple(np.asarray(c).tobytes() for c in members))
+    for (size, structure), members in by_key.items():
+        key = (
+            size,
+            structure,
+            tuple(np.asarray(c).tobytes() for c in members),
+        )
         hit = prev_by_key.get(key)
         if hit is not None:
             buckets.append(hit)
             reused.add(key)
             bump("planner.buckets_reused")
         else:
-            buckets.append(blocks_mod.make_bucket(S, size, members, dtype=dtype))
+            buckets.append(
+                blocks_mod.make_bucket(
+                    S, size, members, dtype=dtype, structure=structure
+                )
+            )
             bump("planner.buckets_padded")
     plan = blocks_mod.Plan(
         p=S.shape[0],
@@ -111,13 +146,15 @@ def build_plan_incremental(
     return plan, frozenset(reused)
 
 
-def plan_path(S: np.ndarray, lambdas, *, dtype=np.float64) -> PathPlan:
+def plan_path(
+    S: np.ndarray, lambdas, *, dtype=np.float64, classify_structures: bool = True
+) -> PathPlan:
     """Plan a whole descending-lambda path with one partition pass.
 
     Every requested lambda gets a PathStep whose ScreenStats are derived from
     the snapshot (no per-lambda thresholding or union-find)."""
     S = np.asarray(S)
-    lams = sorted((float(l) for l in np.asarray(list(lambdas)).ravel()), reverse=True)
+    lams = sorted((float(v) for v in np.asarray(list(lambdas)).ravel()), reverse=True)
     t0 = time.perf_counter()
     edges = _sorted_edges(S)  # shared by the snapshot pass and edge counting
     labels_list = labels_at_thresholds(S, lams, edges=edges)
@@ -129,7 +166,8 @@ def plan_path(S: np.ndarray, lambdas, *, dtype=np.float64) -> PathPlan:
     for lam, labels in zip(lams, labels_list):
         t1 = time.perf_counter()
         plan, reused = build_plan_incremental(
-            S, lam, labels, prev=prev_plan, dtype=dtype
+            S, lam, labels, prev=prev_plan, dtype=dtype,
+            classify_structures=classify_structures,
         )
         stats = _screen_stats(
             labels, lam, sorted_w, snap_seconds + (time.perf_counter() - t1)

@@ -1,4 +1,4 @@
-"""Backend registry for the screening stage (connected-component labeling).
+"""Backend registries for the screening stage and the solver-routing ladder.
 
 One contract for every implementation of the paper's eq.-(4) partition step:
 
@@ -20,11 +20,24 @@ All four provably compute the same partition (strict |S_ij| > lam, Theorem 1);
 tests/test_engine_backends.py property-tests the equivalence, including ties
 |S_ij| == lam.  Register additional backends (e.g. a GPU ECL-CC port) with
 ``@register_cc_backend("name")``.
+
+The second registry is the ROUTING LADDER: structure class (assigned per
+bucket by the planner via ``engine.structure``) -> executor route:
+
+    "singleton" -> "assemble"     closed-form at scatter time, no dispatch
+    "pair"      -> "closed_form"  batched analytic 2x2 (forest kernel)
+    "tree"      -> "closed_form"  batched Fattahi-Sojoudi forest kernel
+    "chordal"   -> "chordal"      host clique-tree direct solve
+    "general"   -> "iterative"    the configured bcd/pg/admm solver
+
+Every non-iterative route is KKT-verified by the executor and falls back to
+"iterative" on failure, so re-routing a class (``set_route``) can change
+cost but never correctness.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Iterable
+from typing import Callable
 
 import numpy as np
 
@@ -68,6 +81,41 @@ def label_components(S, lam: float, *, backend: str = "host", **opts) -> np.ndar
             f"{labels.shape} for p={np.asarray(S).shape[0]}"
         )
     return labels
+
+
+# ---------------------------------------------------------------------------
+# Solver-routing ladder (structure class -> executor route)
+# ---------------------------------------------------------------------------
+
+#: executor routes, cheapest first; "iterative" is the ladder's tail and the
+#: fallback target of every verified fast path
+ROUTES = ("assemble", "closed_form", "chordal", "iterative")
+
+_ROUTE_OF: dict[str, str] = {
+    "singleton": "assemble",
+    "pair": "closed_form",
+    "tree": "closed_form",
+    "chordal": "chordal",
+    "general": "iterative",
+}
+
+
+def route_for(structure: str) -> str:
+    """Executor route for a bucket's structure class (unknown classes take
+    the iterative tail — a forward-compatible default for new classifiers)."""
+    return _ROUTE_OF.get(structure, "iterative")
+
+
+def set_route(structure: str, route: str) -> None:
+    """Re-route a structure class (e.g. force "tree" -> "iterative" to
+    benchmark the ladder against the PR-1 behavior)."""
+    if route not in ROUTES:
+        raise ValueError(f"unknown route {route!r}; available: {ROUTES}")
+    _ROUTE_OF[structure] = route
+
+
+def solver_routes() -> dict[str, str]:
+    return dict(_ROUTE_OF)
 
 
 # ---------------------------------------------------------------------------

@@ -76,8 +76,8 @@ def _kernel(
 
     @pl.when(ik == nk - 1)
     def _finish():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / lse).astype(o_ref.dtype)
 
 
 @functools.partial(

@@ -1,0 +1,55 @@
+"""Reference (pure jnp) closed-form glasso on an acyclic thresholded support.
+
+Fattahi & Sojoudi (arXiv:1708.09479): when the support of the soft-thresholded
+covariance is a forest, the glasso optimum is explicit.  With the full-L1
+convention this repo uses (diagonal penalized, so W_ii = S_ii + lam) define
+
+    d_i  = S_ii + lam
+    a_ij = soft(S_ij, lam)            on edges |S_ij| > lam (strict, eq. (4))
+    D_ij = d_i d_j - a_ij^2
+
+and the optimum is
+
+    Theta_ij = -a_ij / D_ij                          (i, j) an edge
+    Theta_ii = 1/d_i + sum_{j ~ i} a_ij^2 / (d_i D_ij)
+    Theta_ij = 0                                     otherwise.
+
+This is exactly the junction-tree inverse of the max-det completion
+specialized to cliques = edges, separators = vertices with multiplicity
+deg - 1 — O(|E|) work versus hundreds of O(b^3) iterative sweeps.  The 2x2
+"pair" class is the single-edge special case, and padded bucket coordinates
+(identity-padded S, no edges) come out as 1/(1 + lam) on the diagonal —
+precisely the padded glasso solution, so the formula applies verbatim to the
+planner's padded block stacks.
+
+Exactness requires the thresholded/solution supports to coincide (the
+closed-form KKT holds on edges by construction; non-edge dual feasibility
+can fail on adversarial matrices) — the executor verifies the KKT residual
+and falls back to the iterative ladder tail, so routing is always safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def glasso_forest_ref(S: jax.Array, lam, *, eps: float = 0.0) -> jax.Array:
+    """Closed-form glasso for one (b, b) block with forest support.
+
+    Same contract as the iterative solvers: ``solve(S, lam) -> Theta``,
+    jit- and vmap-friendly.  ``eps`` is unused (accepted for option parity).
+    """
+    del eps
+    b = S.shape[0]
+    lam = jnp.asarray(lam, S.dtype)
+    eye = jnp.eye(b, dtype=bool)
+    absS = jnp.abs(S)
+    mask = (absS > lam) & ~eye
+    a = jnp.where(mask, jnp.sign(S) * (absS - lam), 0.0)
+    d = jnp.diag(S) + lam
+    den = jnp.where(mask, d[:, None] * d[None, :] - a * a, 1.0)
+    theta_off = jnp.where(mask, -a / den, 0.0)
+    contrib = jnp.where(mask, (a * a) / (d[:, None] * den), 0.0)
+    theta_diag = 1.0 / d + jnp.sum(contrib, axis=1)
+    return theta_off + jnp.where(eye, theta_diag[:, None], 0.0)

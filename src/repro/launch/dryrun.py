@@ -30,7 +30,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *, microbatches: int = 
              remat: str = "full", fsdp: bool = True, extra_tag: str = "",
              overrides: dict | None = None, batch_replicated: bool = False) -> dict:
     import jax
-    import jax.numpy as jnp
 
     from repro.configs.base import SHAPES, cell_supported, get_arch
     from repro.data.specs import input_specs

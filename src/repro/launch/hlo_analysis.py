@@ -25,7 +25,6 @@ identity on scanned ones.
 
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 
@@ -228,7 +227,7 @@ class HloModule:
         # def-map inside the body; chase convert/bitcast/copy chains — the
         # CPU backend emulates bf16 by wrapping real ops in f32 converts,
         # which must not hide the in-place structure (absent on real TPU).
-        defs = {iname: (t, op, l) for iname, t, op, l in instrs}
+        defs = {iname: (t, op, line) for iname, t, op, line in instrs}
 
         def chase(name):
             seen = 0
@@ -241,9 +240,9 @@ class HloModule:
             return name
 
         ordinal: dict[str, int] = {}
-        for iname, t, op, l in instrs:
+        for iname, t, op, line in instrs:
             if op == "parameter":
-                mo = re.search(r"parameter\((\d+)\)", l)
+                mo = re.search(r"parameter\((\d+)\)", line)
                 if mo:
                     ordinal[iname] = int(mo.group(1))
 
@@ -253,10 +252,10 @@ class HloModule:
         windowed: dict[int, float] = {}
         full_use: set = set()
         aliased: set = set()
-        for iname, t, op, l in instrs:
+        for iname, t, op, line in instrs:
             if op in ("parameter", "convert", "bitcast", "copy"):
                 continue
-            refs = re.findall(r"%[\w\.\-]+", l.split("(", 1)[1] if "(" in l else "")
+            refs = re.findall(r"%[\w\.\-]+", line.split("(", 1)[1] if "(" in line else "")
             if op in ("dynamic-slice", "slice", "gather") and refs:
                 o = as_param(refs[0])
                 if o is not None:
@@ -264,7 +263,7 @@ class HloModule:
                     refs = refs[1:]
             elif op == "dynamic-update-slice" and refs:
                 o = as_param(refs[0])
-                rb = self._operand_bytes_list(l)
+                rb = self._operand_bytes_list(line)
                 win = rb[1] if len(rb) > 1 else 0
                 if o is not None:
                     windowed[o] = windowed.get(o, 0.0) + 2 * win

@@ -6,7 +6,6 @@ dry-run fakes 512 host devices before any jax import)."""
 
 from __future__ import annotations
 
-import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):

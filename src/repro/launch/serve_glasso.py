@@ -12,13 +12,26 @@ different matrices, share executables AND batches.  The compiled cache is the
 executor's process-global one: after warm-up, a steady-state mix of request
 shapes runs with zero compiles (watch ``executor.compiled_hit``).
 
+Structure routing (DESIGN.md Section 9) extends this in two ways.  Inside a
+batch, buckets are coalesced per (padded size, route): closed-form buckets
+share one batched forest-kernel call, chordal buckets are solved directly on
+the host, and only the iterative remainder pays solver iterations — all
+verified with iterative fallback, exactly like the engine executor.  And at
+ADMISSION, a request whose plan is entirely fast-path (no "general" bucket)
+is solved synchronously on the caller's thread and NEVER ENTERS the dispatch
+queue: a microseconds-cheap closed-form solve should not wait out the
+batching window behind an iterative co-traveller.
+
     PYTHONPATH=src python -m repro.launch.serve_glasso --requests 8 --p 60
 
 Counters (repro.core.instrument):
     serve.requests            requests admitted
     serve.batches             batcher iterations that dispatched work
-    serve.dispatches          coalesced solver calls (one per padded size)
+    serve.dispatches          coalesced solver calls (one per size x route)
     serve.coalesced_blocks    blocks that shared a call with ANOTHER request
+    serve.fastpath_requests   requests solved at admission (queue skipped)
+    serve.fastpath_blocks     blocks that took a non-iterative route
+    serve.fallback_blocks     closed-form candidates repaired iteratively
 """
 
 from __future__ import annotations
@@ -40,6 +53,11 @@ class GlassoRequest:
     S: np.ndarray
     lam: float
     future: Future = field(default_factory=Future)
+    # screen/plan results computed at fast-path admission; reused by the
+    # batcher so a queued request is never planned twice
+    labels: np.ndarray | None = None
+    stats: object = None
+    plan: object = None
 
 
 @dataclass
@@ -65,12 +83,15 @@ class GlassoServer:
         cc_backend: str = "host",
         max_delay: float = 0.005,
         max_batch: int = 64,
+        route: bool = True,
+        fast_path: bool = True,
+        route_check_tol: float = 1e-6,
         **solver_opts,
     ):
         import jax.numpy as jnp
 
         from repro.core.solvers import SOLVERS
-        from repro.engine.executor import _validate_solver_opts
+        from repro.engine.executor import BucketExecutor, _validate_solver_opts
 
         if solver not in SOLVERS:
             raise ValueError(
@@ -82,8 +103,21 @@ class GlassoServer:
         self.cc_backend = cc_backend
         self.max_delay = max_delay
         self.max_batch = max_batch
+        self.route = route
+        self.fast_path = fast_path and route
+        self.route_check_tol = route_check_tol
         self.solver_opts = solver_opts
         self._opts_key = tuple(sorted(solver_opts.items()))
+        # admission-time fast-path solver: a stateless ladder executor (the
+        # compiled cache underneath is process-global and shared with the
+        # batcher's dispatches)
+        self._fast_executor = BucketExecutor(
+            solver=solver,
+            dtype=self.dtype,
+            solver_opts=dict(solver_opts),
+            route=True,
+            route_check_tol=route_check_tol,
+        )
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -128,12 +162,58 @@ class GlassoServer:
             req.future.set_exception(RuntimeError("GlassoServer stopped"))
             return req.future
         bump("serve.requests")
+        if self.fast_path and self._try_fast_path(req):
+            return req.future
         self._queue.put(req)
         if self._stop.is_set():
             # lost the race against stop(): its drain may have run before our
             # put landed, so sweep the queue ourselves
             self._fail_pending()
         return req.future
+
+    def _try_fast_path(self, req: GlassoRequest) -> bool:
+        """Solve entirely-fast-path requests at admission, skipping the
+        dispatch queue.
+
+        Screens and plans on the caller's thread (cheap, O(p^2)); if every
+        bucket ROUTES non-iteratively (``registry.route_for``, so
+        ``set_route`` re-routing is honored), the ladder executor solves it
+        synchronously — including the rare KKT-fallback re-dispatch — and
+        the future resolves with zero queueing delay.  Returns False
+        (request not handled) when any bucket needs the iterative solver;
+        the screen/plan results are stashed on the request so the batcher
+        does not redo them."""
+        from repro.core.screening import thresholded_components
+        from repro.engine.api import _result
+        from repro.engine.planner import build_plan_incremental
+        from repro.engine.registry import route_for
+
+        try:
+            labels, stats = thresholded_components(
+                req.S, req.lam, backend=self.cc_backend
+            )
+            plan, _ = build_plan_incremental(req.S, req.lam, labels)
+            if any(route_for(b.structure) == "iterative" for b in plan.buckets):
+                req.labels, req.stats, req.plan = labels, stats, plan
+                return False
+            t0 = time.perf_counter()
+            Theta = self._fast_executor.solve_plan(plan, req.lam, req.S)
+            seconds = time.perf_counter() - t0
+            bump("serve.fastpath_requests")
+            bump(
+                "serve.fastpath_blocks",
+                int(len(plan.isolated) + sum(len(b.comps) for b in plan.buckets)),
+            )
+            req.future.set_result(
+                _result(
+                    plan, labels, stats, Theta, seconds, self.solver, req.lam,
+                    routed=True,
+                )
+            )
+            return True
+        except Exception as e:  # pragma: no cover - defensive
+            req.future.set_exception(e)
+            return True
 
     # -- batcher -----------------------------------------------------------
 
@@ -170,66 +250,146 @@ class GlassoServer:
 
     def solve_batch(self, requests: list[GlassoRequest]) -> None:
         """Screen+plan each request, coalesce same-size buckets across ALL
-        requests into one solver dispatch per padded size, scatter back."""
+        requests into one solver dispatch per (padded size, route), scatter
+        back.  Closed-form groups carry their KKT flags through the same
+        verify-then-iterative-fallback contract as the engine executor."""
         import jax
         import jax.numpy as jnp
 
         from repro.core import blocks as blocks_mod
         from repro.core.screening import thresholded_components
         from repro.engine.api import _result
-        from repro.engine.executor import compiled_bucket_solver
+        from repro.engine.executor import (
+            compiled_bucket_solver,
+            compiled_closed_form,
+            dispatch_repair,
+            solve_chordal_bucket,
+        )
         from repro.engine.planner import build_plan_incremental
+        from repro.engine.registry import route_for
 
         t0 = time.perf_counter()
         per_req: list[tuple[GlassoRequest, np.ndarray, object, object]] = []
-        by_size: dict[int, list[_PlacedBucket]] = {}
+        groups: dict[tuple[int, str], list[_PlacedBucket]] = {}
         for req in requests:
-            labels, stats = thresholded_components(
-                req.S, req.lam, backend=self.cc_backend
-            )
-            plan, _ = build_plan_incremental(req.S, req.lam, labels)
+            if req.plan is not None:  # planned at fast-path admission
+                labels, stats, plan = req.labels, req.stats, req.plan
+            else:
+                labels, stats = thresholded_components(
+                    req.S, req.lam, backend=self.cc_backend
+                )
+                plan, _ = build_plan_incremental(
+                    req.S, req.lam, labels, classify_structures=self.route
+                )
             per_req.append((req, labels, stats, plan))
             for bucket in plan.buckets:
-                by_size.setdefault(bucket.size, []).append(
+                route = route_for(bucket.structure) if self.route else "iterative"
+                groups.setdefault((bucket.size, route), []).append(
                     _PlacedBucket(request=req, plan=plan, bucket=bucket)
                 )
 
         bump("serve.batches")
-        # one dispatch per padded size, blocks + per-block lambda stacked
-        # across requests; all dispatched before any blocking
-        outs: dict[int, object] = {}
-        for size, placed in sorted(by_size.items()):
-            stacked = jnp.concatenate(
-                [jnp.asarray(pb.bucket.blocks, self.dtype) for pb in placed]
-            )
-            lams = jnp.concatenate(
+        # one dispatch per (padded size, route), blocks + per-block lambda
+        # stacked across requests; all dispatched before any blocking
+        outs: dict[tuple[int, str], object] = {}
+        oks: dict[tuple[int, str], object] = {}
+        for (size, route), placed in sorted(groups.items()):
+            n_blocks = sum(pb.bucket.blocks.shape[0] for pb in placed)
+            lams_h = np.concatenate(
                 [
-                    jnp.full((pb.bucket.blocks.shape[0],), pb.request.lam, self.dtype)
+                    np.full(pb.bucket.blocks.shape[0], pb.request.lam)
                     for pb in placed
                 ]
             )
-            fn = compiled_bucket_solver(
-                self.solver, size, self.dtype, warm=False, opts_key=self._opts_key
-            )
-            outs[size] = fn(stacked, lams)
-            bump("serve.dispatches")
+            if route == "chordal":
+                solved = [
+                    solve_chordal_bucket(
+                        pb.bucket,
+                        np.full(pb.bucket.blocks.shape[0], pb.request.lam),
+                        tol=self.route_check_tol,
+                    )
+                    for pb in placed
+                ]
+                outs[(size, route)] = np.concatenate([s[0] for s in solved])
+                oks[(size, route)] = np.concatenate([s[1] for s in solved])
+                bump("serve.fastpath_blocks", n_blocks)
+                bump("serve.dispatches")  # one solver group, host-executed
+            else:
+                stacked = jnp.concatenate(
+                    [jnp.asarray(pb.bucket.blocks, self.dtype) for pb in placed]
+                )
+                lams = jnp.asarray(lams_h, self.dtype)
+                if route == "closed_form":
+                    fn = compiled_closed_form(
+                        size,
+                        self.dtype,
+                        tol=self.route_check_tol,
+                        verify=any(
+                            pb.bucket.structure != "pair" for pb in placed
+                        ),
+                    )
+                    theta, ok = fn(stacked, lams)
+                    outs[(size, route)] = theta
+                    oks[(size, route)] = ok
+                    bump("serve.fastpath_blocks", n_blocks)
+                else:
+                    fn = compiled_bucket_solver(
+                        self.solver,
+                        size,
+                        self.dtype,
+                        warm=False,
+                        opts_key=self._opts_key,
+                    )
+                    outs[(size, route)] = fn(stacked, lams)
+                bump("serve.dispatches")
             n_reqs = len({id(pb.request) for pb in placed})
             if n_reqs > 1:
-                bump("serve.coalesced_blocks", int(stacked.shape[0]))
-        jax.block_until_ready(list(outs.values()))
+                bump("serve.coalesced_blocks", n_blocks)
+        jax.block_until_ready(
+            [v for v in outs.values() if isinstance(v, jax.Array)]
+        )
 
-        # scatter solutions back per request
-        cursors = {size: 0 for size in outs}
-        sols_by_req: dict[int, dict[int, list]] = {}
-        for size, placed in sorted(by_size.items()):
-            sols = np.asarray(outs[size])
+        # verify fast-path groups; repair failures via the shared iterative
+        # repair (warm-started from the rejected candidates, same as the
+        # engine executor) — only the failed rows are gathered
+        for gkey, ok in sorted(oks.items()):
+            okh = np.asarray(ok)
+            if okh.all():
+                continue
+            size, _ = gkey
+            idx = np.flatnonzero(~okh)
+            bump("serve.fallback_blocks", int(idx.size))
+            rows = [
+                (pb, i)
+                for pb in groups[gkey]
+                for i in range(pb.bucket.blocks.shape[0])
+            ]
+            blocks_failed = np.stack(
+                [np.asarray(rows[k][0].bucket.blocks)[rows[k][1]] for k in idx]
+            )
+            lams_failed = np.array([rows[k][0].request.lam for k in idx])
+            fixed = dispatch_repair(
+                self.solver,
+                self.dtype,
+                self._opts_key,
+                size,
+                blocks_failed,
+                lams_failed,
+                np.asarray(outs[gkey])[idx],
+            )
+            out = np.array(outs[gkey])  # copy: jax arrays view as read-only
+            out[idx] = np.asarray(fixed)
+            outs[gkey] = out
+
+        # scatter solutions back per bucket (stacks are in `placed` order)
+        sols_by_bucket: dict[int, np.ndarray] = {}
+        for gkey, placed in sorted(groups.items()):
+            sols = np.asarray(outs[gkey])
+            k = 0
             for pb in placed:
                 n = pb.bucket.blocks.shape[0]
-                k = cursors[size]
-                sols_by_req.setdefault(id(pb.request), {}).setdefault(
-                    size, []
-                ).append(sols[k : k + n])
-                cursors[size] = k + n
+                sols_by_bucket[id(pb.bucket)] = sols[k : k + n]
+                k += n
 
         seconds = time.perf_counter() - t0
         # attribute batch wall time to requests by their b^3 solve-cost share
@@ -242,12 +402,14 @@ class GlassoServer:
         }
         total_cost = sum(costs.values())
         for req, labels, stats, plan in per_req:
-            chunks = sols_by_req.get(id(req), {})
-            bucket_sols = [chunks[b.size].pop(0) for b in plan.buckets]
+            bucket_sols = [sols_by_bucket[id(b)] for b in plan.buckets]
             Theta = blocks_mod.assemble_dense(plan, bucket_sols, req.S)
             share = costs[id(req)] / total_cost if total_cost > 0 else 1.0 / len(per_req)
             req.future.set_result(
-                _result(plan, labels, stats, Theta, seconds * share, self.solver, req.lam)
+                _result(
+                    plan, labels, stats, Theta, seconds * share, self.solver,
+                    req.lam, routed=self.route,
+                )
             )
 
 

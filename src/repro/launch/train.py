@@ -22,7 +22,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import signal
-import sys
 import time
 
 import jax

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, swiglu_apply, swiglu_init, truncnorm_init
+from repro.models.layers import swiglu_apply, swiglu_init, truncnorm_init
 
 
 def moe_init(

@@ -176,7 +176,6 @@ def mamba2_apply(
 def rwkv6_init(key, d_model, *, head_dim, d_ff, lora_rank, dtype):
     from repro.models.layers import layernorm_init
 
-    H = d_model // head_dim
     ks = jax.random.split(key, 12)
     p, s = {}, {}
     p["ln1"], s["ln1"] = layernorm_init(d_model, dtype)

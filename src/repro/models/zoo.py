@@ -3,10 +3,9 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -37,14 +36,14 @@ def build_model(cfg: ArchConfig) -> Model:
 
 
 def count_params(params) -> int:
-    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+    return int(sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(params)))
 
 
 def count_params_abstract(cfg: ArchConfig) -> int:
     shapes = jax.eval_shape(
         lambda k: tfm.init_params(k, cfg)[0], jax.random.key(0)
     )
-    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+    return int(sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(shapes)))
 
 
 def active_params(cfg: ArchConfig) -> int:

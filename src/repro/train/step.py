@@ -11,7 +11,6 @@ updates its KV cache in place — no per-token cache copy)."""
 
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
@@ -55,11 +54,11 @@ def make_train_step(
             return tree
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        def leaf(l):
-            spec = sharding_policy.batch_pspec(l.shape[1:] if stacked else l.shape)
+        def leaf(x):
+            spec = sharding_policy.batch_pspec(x.shape[1:] if stacked else x.shape)
             parts = (None, *spec) if stacked else tuple(spec)
             return jax.lax.with_sharding_constraint(
-                l, NamedSharding(sharding_policy.mesh, P(*parts))
+                x, NamedSharding(sharding_policy.mesh, P(*parts))
             )
 
         return jax.tree.map(leaf, tree)

@@ -12,7 +12,7 @@ import pytest
 from repro.configs.base import ShapeConfig, get_arch, list_archs
 from repro.data.specs import make_batch
 from repro.models.transformer import padded_vocab
-from repro.models.zoo import active_params, build_model, count_params
+from repro.models.zoo import active_params, build_model
 
 SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
 

@@ -1,6 +1,5 @@
 """Chunked (XLA-flash) attention must match the materialized reference."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -63,7 +63,6 @@ def test_paper_synthetic_calibration():
     """sigma is calibrated so 1.25 * max off-block |noise| == 1 (Section 4.1)."""
     K, p1 = 3, 8
     S = paper_synthetic(K, p1, seed=0)
-    p = K * p1
     block_id = np.repeat(np.arange(K), p1)
     off = block_id[:, None] != block_id[None, :]
     np.testing.assert_allclose(np.abs(S[off]).max(), 0.8, atol=1e-12)

@@ -1,13 +1,10 @@
 """Fault tolerance: checkpoint roundtrip, atomicity, bit-exact restart,
 elastic re-shard, preemption save, optimizer + data-pipeline determinism."""
 
-import dataclasses
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
 from repro.checkpoint.io import latest_step

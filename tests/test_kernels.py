@@ -15,6 +15,8 @@ from repro.kernels.prox_l1.ops import prox_step
 from repro.kernels.prox_l1.ref import prox_step_ref
 from repro.kernels.threshold_cc.ops import connected_components_kernel, labelprop_step
 from repro.kernels.threshold_cc.ref import labelprop_step_ref
+from repro.kernels.tree_glasso.ref import glasso_forest_ref
+from repro.kernels.tree_glasso.tree_glasso import glasso_forest_pallas
 
 
 # ---------------------------------------------------------------- covgram
@@ -143,3 +145,37 @@ def test_flash_attention_property(sq, d, group, seed):
     out = flash_attention(q, k, v, causal=True, block_q=8, block_k=8)
     ref = attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- tree_glasso
+@pytest.mark.parametrize("B,b", [(1, 8), (7, 8), (3, 16), (2, 32)])
+def test_tree_glasso_kernel_matches_ref(B, b):
+    """Pallas forest closed form (interpret mode) == jnp reference, with
+    per-block lambdas (the serving mixed-lambda batch layout)."""
+    rng = np.random.default_rng(0)
+    blocks = rng.standard_normal((B, b, b))
+    blocks = 0.5 * (blocks + blocks.transpose(0, 2, 1))
+    blocks += (np.abs(blocks).sum(axis=2).max(axis=1)[:, None, None]) * np.eye(b)
+    lams = rng.uniform(0.1, 0.6, size=B)
+    out = glasso_forest_pallas(
+        jnp.asarray(blocks), jnp.asarray(lams)[:, None], interpret=True
+    )
+    ref = jax.vmap(glasso_forest_ref)(jnp.asarray(blocks), jnp.asarray(lams))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(2, 12), seed=st.integers(0, 500))
+def test_tree_glasso_kernel_property(b, seed):
+    """Padded shapes: ops-level zero padding must not change the sliced
+    result (zero padding adds no |S_ij| > lam edges)."""
+    from repro.kernels.tree_glasso.ops import glasso_forest_stack
+
+    rng = np.random.default_rng(seed)
+    S = rng.standard_normal((b, b))
+    S = 0.5 * (S + S.T)
+    np.fill_diagonal(S, 1.0 + np.abs(S).sum(axis=1))
+    lam = float(rng.uniform(0.05, 0.5))
+    out = glasso_forest_stack(jnp.asarray(S)[None], jnp.asarray([lam]))[0]
+    ref = glasso_forest_ref(jnp.asarray(S), lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-12)

@@ -47,7 +47,6 @@ def test_grad_clip():
     state = opt.init(params)
     big = {"w": jnp.full((2,), 1e6)}
     p1, s1 = opt.update(big, state, params, jnp.asarray(0))
-    small = {"w": jnp.full((2,), 1e6 * 1e-12)}
     assert np.all(np.isfinite(np.asarray(p1["w"])))
 
 
@@ -58,8 +57,8 @@ def test_adafactor_state_is_factored():
     assert state["w"]["vr"].shape == (64,)
     assert state["w"]["vc"].shape == (32,)
     assert state["b"]["v"].shape == (32,)
-    n_state = sum(np.prod(l.shape) for l in jax.tree.leaves(state))
-    n_adam = 2 * sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+    n_state = sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(state))
+    n_adam = 2 * sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(params))
     assert n_state < 0.1 * n_adam
 
 

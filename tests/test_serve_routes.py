@@ -1,0 +1,94 @@
+"""Serving x routing ladder: all-fast-path requests are solved at admission
+(the dispatch queue is skipped entirely), mixed batches coalesce per
+(size, route), and every served Theta matches a direct engine solve."""
+
+import numpy as np
+import pytest
+
+from repro.core import glasso
+from repro.core.instrument import count, reset
+from repro.covariance import lambda_interval_for_k, paper_synthetic
+from repro.launch.serve_glasso import GlassoRequest, GlassoServer
+
+
+def _tree_request(seed, p=12, lam=0.3):
+    """Tridiagonal S: one path-graph component -> pure closed-form plan."""
+    rng = np.random.default_rng(seed)
+    S = np.eye(p) * 2.0
+    for i in range(p - 1):
+        v = rng.uniform(0.5, 0.8) * (1 if rng.random() < 0.5 else -1)
+        S[i, i + 1] = S[i + 1, i] = v
+    return S, lam
+
+
+def _dense_request(seed):
+    S = paper_synthetic(3, 8, seed=seed)
+    lam_min, lam_max = lambda_interval_for_k(S, 3)
+    return S, float(0.4 * lam_min + 0.6 * lam_max)
+
+
+def test_fast_path_requests_skip_the_queue():
+    reqs = [_tree_request(seed=i) for i in range(4)]
+    reset("serve")
+    with GlassoServer(solver="bcd", max_delay=0.25, tol=1e-8) as server:
+        futures = [server.submit(S, lam) for S, lam in reqs]
+        results = [f.result(timeout=300) for f in futures]
+    assert count("serve.fastpath_requests") == len(reqs)
+    assert count("serve.batches") == 0  # nothing ever reached the batcher
+    assert count("serve.fastpath_blocks") >= len(reqs)
+    for (S, lam), res in zip(reqs, results):
+        direct = glasso(S, lam, solver="bcd", tol=1e-8)
+        np.testing.assert_allclose(res.Theta, direct.Theta, atol=1e-6)
+        assert res.route_mix.get("tree", 0) == 1
+
+
+def test_mixed_admission_splits_fast_and_queued():
+    tree_S, tree_lam = _tree_request(seed=11)
+    dense_S, dense_lam = _dense_request(seed=200)
+    reset("serve")
+    with GlassoServer(solver="bcd", max_delay=0.05, tol=1e-8) as server:
+        f_tree = server.submit(tree_S, tree_lam)
+        f_dense = server.submit(dense_S, dense_lam)
+        r_tree = f_tree.result(timeout=300)
+        r_dense = f_dense.result(timeout=300)
+    assert count("serve.fastpath_requests") == 1
+    assert count("serve.requests") == 2
+    np.testing.assert_allclose(
+        r_tree.Theta, glasso(tree_S, tree_lam, tol=1e-8).Theta, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        r_dense.Theta, glasso(dense_S, dense_lam, tol=1e-8).Theta, atol=1e-6
+    )
+
+
+def test_fast_path_disabled_still_correct():
+    S, lam = _tree_request(seed=3)
+    reset("serve")
+    with GlassoServer(solver="bcd", fast_path=False, tol=1e-8) as server:
+        res = server.submit(S, lam).result(timeout=300)
+    assert count("serve.fastpath_requests") == 0
+    assert count("serve.batches") >= 1  # went through the batcher
+    assert count("serve.fastpath_blocks") >= 1  # ...but still routed fast
+    np.testing.assert_allclose(res.Theta, glasso(S, lam, tol=1e-8).Theta, atol=1e-6)
+
+
+def test_batch_coalesces_per_size_and_route():
+    """A synchronous mixed batch: tree requests share one closed-form
+    dispatch; dense requests share the iterative dispatch; results match
+    unrouted direct solves."""
+    reqs = [GlassoRequest(*_tree_request(seed=i, p=8)) for i in range(3)]
+    reqs += [GlassoRequest(*_dense_request(seed=i)) for i in range(2)]
+    server = GlassoServer(solver="bcd", tol=1e-8)
+    reset("serve")
+    server.solve_batch(reqs)
+    # >= 3: the three tree requests are certainly fast-path; a planted
+    # "dense" block may legitimately classify chordal at its lambda too
+    assert count("serve.fastpath_blocks") >= 3
+    for req in reqs:
+        res = req.future.result(timeout=0)
+        ref = glasso(req.S, req.lam, route=False, solver="bcd", tol=1e-8)
+        np.testing.assert_allclose(res.Theta, ref.Theta, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

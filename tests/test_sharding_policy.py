@@ -3,8 +3,6 @@ layout chains, activation constraints — on both production mesh shapes
 (structural only; no 512-device runtime needed because PartitionSpec
 resolution is pure)."""
 
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 

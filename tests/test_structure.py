@@ -1,0 +1,147 @@
+"""Structure classifier invariants: exact class per known graph, MCS/PEO
+chordality agreement with networkx, clique-tree identities, and the strict
+tie convention |S_ij| == lam -> not an edge."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.engine.structure import (
+    STRUCTURES,
+    classify_adjacency,
+    classify_component,
+    clique_tree,
+    component_adjacency,
+    mcs_elimination_order,
+    peo_or_none,
+)
+
+
+def _adj(b, edges):
+    A = np.zeros((b, b), dtype=bool)
+    for i, j in edges:
+        A[i, j] = A[j, i] = True
+    return A
+
+
+def _random_connected(rng, b, extra_edges):
+    """Random connected graph: random recursive tree + extra random edges."""
+    edges = [(i, int(rng.integers(0, i))) for i in range(1, b)]
+    for _ in range(extra_edges):
+        i, j = rng.integers(0, b, size=2)
+        if i != j:
+            edges.append((int(min(i, j)), int(max(i, j))))
+    return _adj(b, edges)
+
+
+# ------------------------------------------------------------ known graphs
+
+
+def test_known_classes():
+    assert classify_adjacency(_adj(1, [])) == "singleton"
+    assert classify_adjacency(_adj(2, [(0, 1)])) == "pair"
+    # path and star are trees
+    assert classify_adjacency(_adj(4, [(0, 1), (1, 2), (2, 3)])) == "tree"
+    assert classify_adjacency(_adj(4, [(0, 1), (0, 2), (0, 3)])) == "tree"
+    # triangle and chorded 4-cycle are chordal (cyclic, so not trees)
+    assert classify_adjacency(_adj(3, [(0, 1), (1, 2), (0, 2)])) == "chordal"
+    assert (
+        classify_adjacency(_adj(4, [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]))
+        == "chordal"
+    )
+    # chordless 4- and 5-cycles are the smallest non-chordal graphs
+    assert classify_adjacency(_adj(4, [(0, 1), (1, 2), (2, 3), (3, 0)])) == "general"
+    assert (
+        classify_adjacency(_adj(5, [(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)]))
+        == "general"
+    )
+    # complete graph is chordal (one clique)
+    K5 = ~np.eye(5, dtype=bool)
+    assert classify_adjacency(K5) == "chordal"
+
+
+def test_structures_tuple_is_the_ladder():
+    assert STRUCTURES == ("singleton", "pair", "tree", "chordal", "general")
+
+
+# ------------------------------------------------------------ vs networkx
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(3, 14), extra=st.integers(0, 12), seed=st.integers(0, 10_000))
+def test_chordality_matches_networkx(b, extra, seed):
+    nx = pytest.importorskip("networkx")
+    rng = np.random.default_rng(seed)
+    A = _random_connected(rng, b, extra)
+    G = nx.from_numpy_array(A)
+    cls = classify_adjacency(A)
+    if nx.is_chordal(G):
+        assert cls in ("pair", "tree", "chordal")
+    else:
+        assert cls == "general"
+    # tree <=> acyclic (connected)
+    assert (cls == "tree") == (int(A.sum()) // 2 == b - 1 and b > 2)
+
+
+# ------------------------------------------------------------ clique tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(3, 14), extra=st.integers(0, 12), seed=st.integers(0, 10_000))
+def test_clique_tree_identities(b, extra, seed):
+    """On any connected chordal graph: cliques cover all edges, every clique
+    is complete, and the junction-tree identity sum|C| - sum|Sep| = b."""
+    rng = np.random.default_rng(seed)
+    A = _random_connected(rng, b, extra)
+    order = peo_or_none(A)
+    if order is None:
+        return  # not chordal, nothing to check
+    cliques, seps = clique_tree(A, order)
+    assert len(seps) == len(cliques) - 1
+    covered = np.zeros_like(A)
+    for C in cliques:
+        sub = A[np.ix_(C, C)]
+        assert sub[~np.eye(len(C), dtype=bool)].all(), "clique not complete"
+        covered[np.ix_(C, C)] = True
+    assert covered[A].all(), "some edge not covered by a clique"
+    assert sum(len(C) for C in cliques) - sum(len(s) for s in seps) == b
+    assert all(len(s) > 0 for s in seps), "connected graph, empty separator"
+
+
+def test_mcs_order_is_permutation():
+    rng = np.random.default_rng(3)
+    A = _random_connected(rng, 9, 5)
+    order = mcs_elimination_order(A)
+    assert sorted(order.tolist()) == list(range(9))
+
+
+# ------------------------------------------------------------ ties
+
+
+def test_tie_is_not_an_edge():
+    """|S_ij| == lam exactly: strict eq. (4) thresholding, so the pair is
+    disconnected — the classifier must agree with the screening backends."""
+    lam = 0.25
+    S = np.eye(3)
+    S[0, 1] = S[1, 0] = lam        # tie: NOT an edge
+    S[1, 2] = S[2, 1] = 2 * lam    # edge
+    A = component_adjacency(S, np.arange(3), lam)
+    assert not A[0, 1] and A[1, 2]
+    # component {1, 2} is a pair; vertex 0 is a singleton
+    assert classify_component(S, np.array([1, 2]), lam) == "pair"
+    assert classify_component(S, np.array([0]), lam) == "singleton"
+
+
+def test_classify_component_matches_adjacency():
+    rng = np.random.default_rng(0)
+    S = np.eye(6) + rng.uniform(-0.4, 0.4, (6, 6))
+    S = 0.5 * (S + S.T)
+    comp = np.arange(6)
+    lam = 0.15
+    assert classify_component(S, comp, lam) == classify_adjacency(
+        component_adjacency(S, comp, lam)
+    )
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
