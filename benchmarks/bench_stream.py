@@ -1,0 +1,250 @@
+"""Streaming-vs-dense screening benchmark: peak RSS + tile-skip rate.
+
+The out-of-core screener's acceptance claims are MEMORY claims, so each arm
+runs in its own subprocess and reports ``ru_maxrss`` — the OS's answer, not
+our own accounting (the ``stream.bytes_peak`` watermark rides along as the
+self-reported cross-check).  Per p in {8k, 16k}:
+
+  * ``dense``   materialize S = (X-mu)'(X-mu)/n (the (p, p) allocation the
+                streamer exists to avoid), then the dense planner's
+                screening pass (``labels_at_thresholds``) over the grid;
+  * ``stream``  ``stream_screen(X, grid)`` — tiled Gram, compacted edges,
+                materialized blocks; plus a second screen over the TOP HALF
+                of the grid, where the higher lambda floor must make the
+                Cauchy-Schwarz tile-skip fire (the acceptance's "nonzero
+                skip fraction on the top half").
+
+The workload plants factor-correlated column groups in the leading tiles
+(real edges at the grid lambdas) over power-law column scales (most tile
+pairs bounded below the grid floor — the skippable mass).  Columns arrive
+scale-sorted; that is the favorable case for a per-tile max bound and is the
+regime the bench tracks.
+
+``--json FILE`` writes the record; ``--check BASELINE`` fails (exit 1) when
+the stream/dense peak-RSS ratio regresses >20% over the committed baseline,
+the top-half skip rate drops >20% below it (or to zero), or the streamed
+partition stops matching the dense one.  ``--smoke`` is the fast in-process
+equivalence arm (p=1536) for the CI gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] \
+        [--json BENCH_stream.json] [--check benchmarks/baseline_stream.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import resource
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+N_ROWS = 192
+TILE = 512
+GRID = (0.30, 0.26, 0.22, 0.18, 0.14, 0.10, 0.075, 0.05)  # descending
+
+
+def _workload(p: int, seed: int = 0) -> np.ndarray:
+    """(n, p) data: planted correlated groups up front, power-law scales."""
+    rng = np.random.default_rng(seed)
+    n = N_ROWS
+    scales = 0.04 + 0.96 * (1.0 - np.arange(p) / p) ** 4
+    X = rng.standard_normal((n, p)) * scales
+    # factor groups of 8 columns across the leading tiles: |S_ij| ~ 0.5 there
+    n_groups = max(2, p // 400)
+    f = rng.standard_normal((n, n_groups))
+    for g in range(n_groups):
+        cols = slice(g * 8, g * 8 + 8)
+        X[:, cols] = 0.75 * f[:, [g]] + 0.66 * X[:, cols] / scales[cols]
+    return X
+
+
+def _grid(p: int) -> list[float]:
+    return [float(v) for v in GRID]
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_arm(arm: str, p: int, seed: int = 0) -> dict:
+    """One screening arm in THIS process; returns its record (the parent
+    launches each arm in a subprocess so ru_maxrss is per-arm)."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    X = _workload(p, seed)
+    lams = _grid(p)
+    t0 = time.perf_counter()
+    if arm == "dense":
+        from repro.core.partition import labels_at_thresholds
+
+        Xc = X - X.mean(axis=0)
+        S = Xc.T @ Xc / X.shape[0]  # the (p, p) allocation
+        labels = labels_at_thresholds(S, lams)
+        rec = {
+            # component counts per lambda: a cheap cross-process partition
+            # fingerprint (full label equality is the smoke arm's job)
+            "labels_checksum": [int(np.unique(lab).size) for lab in labels],
+        }
+    elif arm == "stream":
+        from repro.core.instrument import counts, reset
+
+        from repro.stream import stream_screen
+
+        reset("stream")
+        sc = stream_screen(X, lams, config={"tile": TILE, "chunk": 64})
+        top = stream_screen(
+            X, lams[: len(lams) // 2], config={"tile": TILE, "chunk": 64},
+            materialize=False,
+        )
+        c = counts("stream.")
+        rec = {
+            "labels_checksum": [int(np.unique(lab).size) for lab in sc.labels],
+            "tiles_total": sc.tiles_total,
+            "tiles_skipped": sc.tiles_skipped,
+            "skip_rate": round(sc.tiles_skipped / max(sc.tiles_total, 1), 4),
+            "skip_rate_top_half": round(
+                top.tiles_skipped / max(top.tiles_total, 1), 4
+            ),
+            "edges_emitted": int(sc.stats[0].edges_emitted),
+            "bytes_peak_mb": round(c.get("stream.bytes_peak", 0) / 2**20, 1),
+        }
+    else:
+        raise ValueError(arm)
+    rec.update(
+        {"arm": arm, "p": p, "seconds": round(time.perf_counter() - t0, 2),
+         "rss_mb": round(_rss_mb(), 1)}
+    )
+    return rec
+
+
+def _spawn_arm(arm: str, p: int) -> dict:
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_stream", "--arm", arm,
+         "--p", str(p)],
+        capture_output=True, text=True, check=True,
+    )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(ps=(8000, 16000), log=print) -> dict:
+    per_p = []
+    for p in ps:
+        dense = _spawn_arm("dense", p)
+        stream = _spawn_arm("stream", p)
+        assert dense["labels_checksum"] == stream["labels_checksum"], (
+            f"streamed partition diverged from dense at p={p}"
+        )
+        row = {
+            "p": p,
+            "dense_rss_mb": dense["rss_mb"],
+            "stream_rss_mb": stream["rss_mb"],
+            "rss_ratio": round(stream["rss_mb"] / max(dense["rss_mb"], 1e-9), 4),
+            "dense_seconds": dense["seconds"],
+            "stream_seconds": stream["seconds"],
+            "skip_rate": stream["skip_rate"],
+            "skip_rate_top_half": stream["skip_rate_top_half"],
+            "edges_emitted": stream["edges_emitted"],
+            "bytes_peak_mb": stream["bytes_peak_mb"],
+        }
+        per_p.append(row)
+        log(
+            f"p={p}: dense rss {row['dense_rss_mb']}MB / {row['dense_seconds']}s"
+            f"  vs  stream rss {row['stream_rss_mb']}MB / "
+            f"{row['stream_seconds']}s (ratio {row['rss_ratio']}), "
+            f"skip {row['skip_rate']:.1%} (top-half {row['skip_rate_top_half']:.1%}), "
+            f"{row['edges_emitted']} edges, "
+            f"stream.bytes_peak {row['bytes_peak_mb']}MB"
+        )
+    return {"n_rows": N_ROWS, "tile": TILE, "grid": list(GRID), "per_p": per_p}
+
+
+def smoke(log=print) -> None:
+    """In-process equivalence gate: streamed == dense partitions + stats."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.components import partitions_equal
+    from repro.core.partition import labels_at_thresholds
+    from repro.stream import stream_screen
+
+    p = 1536
+    X = _workload(p, seed=3)
+    lams = _grid(p)
+    Xc = X - X.mean(axis=0)
+    S = Xc.T @ Xc / X.shape[0]
+    dense = labels_at_thresholds(S, lams)
+    sc = stream_screen(X, lams, config={"tile": 256, "chunk": 64})
+    for lam, dl, sl in zip(lams, dense, sc.labels):
+        assert partitions_equal(dl, sl), f"smoke: partitions differ at {lam}"
+    iu, ju = np.triu_indices(p, 1)
+    w = np.abs(S[iu, ju])
+    for lam, st in zip(lams, sc.stats):
+        assert st.n_edges == int((w > lam).sum()), f"smoke: edges at {lam}"
+    assert sc.tiles_skipped > 0, "smoke: no tiles skipped"
+    log(
+        f"stream smoke OK: {len(lams)} lambdas at p={p}, "
+        f"{sc.tiles_skipped}/{sc.tiles_total} tiles skipped, "
+        f"{sc.stats[0].edges_emitted} edges"
+    )
+
+
+def check(rec: dict, baseline_path: str, log=print) -> int:
+    """CI gate: >20% RSS-ratio or skip-rate regression vs baseline fails."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_by_p = {row["p"]: row for row in base["per_p"]}
+    failures = []
+    for row in rec["per_p"]:
+        b = base_by_p.get(row["p"])
+        if b is None:
+            continue
+        max_ratio = b["rss_ratio"] * 1.2
+        if row["rss_ratio"] > max_ratio:
+            failures.append(
+                f"p={row['p']}: stream/dense RSS ratio {row['rss_ratio']} > "
+                f"{max_ratio:.3f} (baseline {b['rss_ratio']} + 20%)"
+            )
+        min_skip = b["skip_rate_top_half"] * 0.8
+        if row["skip_rate_top_half"] < min_skip or row["skip_rate_top_half"] == 0:
+            failures.append(
+                f"p={row['p']}: top-half skip rate {row['skip_rate_top_half']} "
+                f"< {min_skip:.3f} (baseline {b['skip_rate_top_half']} - 20%)"
+            )
+    for msg in failures:
+        log(f"REGRESSION: {msg}")
+    if not failures:
+        log(f"stream bench within baseline ({baseline_path})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arm", choices=("dense", "stream"), default=None)
+    ap.add_argument("--p", type=int, default=8000)
+    ap.add_argument("--ps", type=int, nargs="+", default=[8000, 16000])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--check", default=None)
+    args = ap.parse_args()
+
+    if args.arm:  # subprocess mode: one arm, JSON on stdout
+        print(json.dumps(run_arm(args.arm, args.p)))
+        return
+    if args.smoke:
+        smoke()
+        return
+    rec = run(tuple(args.ps))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        sys.exit(check(rec, args.check))
+
+
+if __name__ == "__main__":
+    main()

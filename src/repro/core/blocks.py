@@ -87,6 +87,27 @@ def pad_block(S_block: np.ndarray, size: int) -> np.ndarray:
     return out
 
 
+def gather_submatrix(S, idx: np.ndarray, *, dtype=None) -> np.ndarray:
+    """S[np.ix_(idx, idx)] through the covariance gather protocol.
+
+    Dense arrays index directly; objects exposing ``gather_block`` (the
+    streaming screener's ``MaterializedCovariance``) serve the same entries
+    from per-component blocks — the planner/executor/classifier never learn
+    which input modality produced S."""
+    if hasattr(S, "gather_block"):
+        blk = S.gather_block(idx)
+    else:
+        blk = np.asarray(S)[np.ix_(idx, idx)]
+    return blk if dtype is None else blk.astype(dtype, copy=False)
+
+
+def gather_diag(S, idx) -> np.ndarray:
+    """S[idx, idx] (diagonal gather) through the same protocol."""
+    if hasattr(S, "diag_at"):
+        return S.diag_at(idx)
+    return np.asarray(S)[idx, idx]
+
+
 @dataclass
 class Bucket:
     size: int                                  # padded block size
@@ -127,7 +148,7 @@ def make_bucket(
     bucket stacks are constructed — build_plan and the engine planner both
     delegate here, so the padding convention cannot desynchronize)."""
     blocks = np.stack(
-        [pad_block(np.asarray(S, dtype)[np.ix_(c, c)], size) for c in members]
+        [pad_block(gather_submatrix(S, c, dtype=dtype), size) for c in members]
     )
     return Bucket(size=size, comps=members, blocks=blocks, structure=structure)
 
@@ -175,10 +196,9 @@ def assemble_dense(
     whole solve stage."""
     p = plan.p
     Theta = np.zeros((p, p), dtype=np.asarray(bucket_solutions[0]).dtype if bucket_solutions else np.float64)
-    Sd = np.asarray(S)
     if len(plan.isolated):
         Theta[plan.isolated, plan.isolated] = 1.0 / (
-            Sd[plan.isolated, plan.isolated] + plan.lam
+            gather_diag(S, plan.isolated) + plan.lam
         )
     for bucket, sols in zip(plan.buckets, bucket_solutions):
         sols = np.asarray(sols)

@@ -29,9 +29,12 @@ __all__ = ["GlassoResult", "glasso", "glasso_path"]
 
 
 def glasso(
-    S: np.ndarray,
-    lam: float,
+    S: np.ndarray | None = None,
+    lam: float | None = None,
     *,
+    X: np.ndarray | None = None,
+    from_data: bool = False,
+    stream=None,
     solver: str = "bcd",
     screen: bool = True,
     p_max: int | None = None,
@@ -43,17 +46,41 @@ def glasso(
 ) -> GlassoResult:
     """``route=False`` disables the structure-routed solver ladder (every
     block takes the iterative solver — the pre-router baseline; used by the
-    equivalence gates and the route-mix benchmark)."""
+    equivalence gates and the route-mix benchmark).
+
+    ``glasso(X=X, lam=lam, from_data=True)`` solves from the (n, p) DATA
+    matrix instead of a covariance: screening runs out-of-core through
+    ``repro.stream`` (the dense (p, p) S is never materialized — only the
+    per-component blocks the solvers consume), exactness unchanged.
+    ``stream`` passes a ``repro.stream.StreamConfig`` (or kwargs dict);
+    ``screen``/``cc_backend`` do not apply on this path (the streamed screen
+    IS the screening stage)."""
     engine = Engine(
         solver=solver, dtype=dtype, cc_backend=cc_backend, route=route, **solver_opts
     )
+    data = X if X is not None else (S if from_data else None)
+    if from_data or X is not None:
+        if data is None:
+            raise ValueError("from_data=True needs the data matrix (X=...)")
+        if X is not None and S is not None:
+            raise ValueError("pass either S or X=, not both")
+        if lam is None:
+            raise ValueError("glasso needs lam")
+        return engine.run_from_data(
+            data, lam, stream=stream, p_max=p_max, warm_W=warm_W
+        )
+    if S is None or lam is None:
+        raise ValueError("glasso needs (S, lam) — or X=/from_data=True")
     return engine.run(S, lam, screen=screen, p_max=p_max, warm_W=warm_W)
 
 
 def glasso_path(
-    S: np.ndarray,
-    lambdas,
+    S: np.ndarray | None = None,
+    lambdas=None,
     *,
+    X: np.ndarray | None = None,
+    from_data: bool = False,
+    stream=None,
     solver: str = "bcd",
     warm_start: bool = True,
     dtype=jnp.float64,
@@ -73,9 +100,28 @@ def glasso_path(
     planner), which produces the identical partition.  ``screen=False`` is the
     paper's unscreened baseline column: no planner, one dense solve per
     lambda.
+
+    ``glasso_path(X=X, lambdas=lams, from_data=True)`` plans the whole grid
+    from the data matrix via the out-of-core streaming screener: ONE tiled
+    pass over X (edges above the grid minimum determine every partition,
+    Theorem 2), materialized per-component blocks, the same diffed plans and
+    warm starts — and never a (p, p) allocation in the screening stage.
     """
     del cc_backend  # see docstring
     engine = Engine(solver=solver, dtype=dtype, route=route, **solver_opts)
+    data = X if X is not None else (S if from_data else None)
+    if from_data or X is not None:
+        if data is None:
+            raise ValueError("from_data=True needs the data matrix (X=...)")
+        if X is not None and S is not None:
+            raise ValueError("pass either S or X=, not both")
+        if lambdas is None:
+            raise ValueError("glasso_path needs lambdas")
+        return engine.run_path_from_data(
+            data, lambdas, stream=stream, warm_start=warm_start, p_max=p_max
+        )
+    if S is None or lambdas is None:
+        raise ValueError("glasso_path needs (S, lambdas) — or X=/from_data=True")
     if not screen:
         lams = sorted((float(v) for v in np.asarray(list(lambdas)).ravel()), reverse=True)
         return [engine.run(S, lam, screen=False, p_max=p_max) for lam in lams]

@@ -21,6 +21,17 @@ def bump(name: str, n: int = 1) -> None:
         _COUNTS[name] += n
 
 
+def set_peak(name: str, value: int) -> None:
+    """Raise a high-watermark counter to ``value`` if it is larger.
+
+    Watermarks (e.g. ``stream.bytes_peak``) share the counter namespace so
+    they appear in ``counts()``/``serve_stats()`` like any other counter, but
+    they record a maximum, not a sum."""
+    with _LOCK:
+        if value > _COUNTS[name]:
+            _COUNTS[name] = int(value)
+
+
 def count(name: str) -> int:
     with _LOCK:
         return _COUNTS[name]

@@ -119,12 +119,23 @@ def labels_at_thresholds(S: np.ndarray, lambdas, *, edges=None) -> list[np.ndarr
     path-planner's only partition pass, counted in
     ``instrument.count("partition.unionfind_passes")``.
     """
+    S = np.asarray(S)
+    edges = _sorted_edges(S) if edges is None else edges
+    return labels_at_thresholds_from_edges(S.shape[0], lambdas, edges)
+
+
+def labels_at_thresholds_from_edges(
+    p: int, lambdas, edges
+) -> list[np.ndarray]:
+    """The snapshot pass of ``labels_at_thresholds`` on a pre-sorted edge
+    list (iu, ju, w descending), without a dense S — the entry point the
+    streaming screener shares: its compacted edges (all |S_ij| above the
+    grid minimum, which bounds every requested lambda from below) produce
+    the same nested partitions as a dense edge sort."""
     from repro.core.components import canonicalize_labels
 
     bump("partition.unionfind_passes")
-    S = np.asarray(S)
-    p = S.shape[0]
-    iu, ju, w = _sorted_edges(S) if edges is None else edges
+    iu, ju, w = edges
 
     parent = np.arange(p)
 

@@ -5,6 +5,10 @@ threshold |S| at lambda (strict, off-diagonal — eq. (4)), take connected
 components, and the returned vertex partition is *exactly* the partition of
 the glasso solution's concentration graph.  Everything downstream (bucketing,
 scheduling, solving) consumes only this partition.
+
+The streaming screener (``repro.stream``) produces the same ScreenStats from
+X without a dense S; its extra counters (tiles scheduled/skipped, edges
+emitted, peak bytes) ride along in the optional stream fields.
 """
 
 from __future__ import annotations
@@ -23,6 +27,11 @@ class ScreenStats:
     n_isolated: int
     n_edges: int
     seconds: float      # the paper's "graph partition" column
+    # streaming-screener provenance (zero for dense screens):
+    tiles_total: int = 0     # upper-triangular tile pairs in the schedule
+    tiles_skipped: int = 0   # pairs the Cauchy-Schwarz bound pruned
+    edges_emitted: int = 0   # compacted edges streamed (|S_ij| > grid min)
+    bytes_peak: int = 0      # screening-stage high-watermark (bytes)
 
 
 def thresholded_components(
@@ -49,19 +58,46 @@ def thresholded_components(
     return labels, screen_stats_from_labels(S, lam, labels, seconds=dt)
 
 
-def screen_stats_from_labels(
-    S: np.ndarray, lam: float, labels: np.ndarray, *, seconds: float
-) -> ScreenStats:
+def count_edges(S: np.ndarray, lam: float, *, row_chunk: int = 2048) -> int:
+    """Strict upper-triangle edge count of |S| > lam, chunked over row
+    blocks so the only temporaries are (row_chunk, p) — no dense p x p
+    boolean mask, no p^2 fancy-index copy (the orchestration host runs this
+    at the same p the screening backends stream)."""
+    if hasattr(S, "gather_block"):
+        raise TypeError(
+            "count_edges needs a dense S; streamed covariances carry their "
+            "edge counts (pass n_edges= to screen_stats_from_labels)"
+        )
     Sd = np.asarray(S)
     p = Sd.shape[0]
-    off = ~np.eye(p, dtype=bool)
-    n_edges = int((np.abs(Sd)[off] > lam).sum() // 2)
+    cols = np.arange(p)
+    n_edges = 0
+    for r0 in range(0, p, row_chunk):
+        blk = Sd[r0 : r0 + row_chunk]
+        upper = cols[None, :] > np.arange(r0, r0 + blk.shape[0])[:, None]
+        n_edges += int(((np.abs(blk) > lam) & upper).sum())
+    return n_edges
+
+
+def screen_stats_from_labels(
+    S: np.ndarray,
+    lam: float,
+    labels: np.ndarray,
+    *,
+    seconds: float,
+    n_edges: int | None = None,
+) -> ScreenStats:
+    """``n_edges``, when the caller already knows it (streamed edge counts,
+    the planner's sorted-edge searchsorted), skips touching S entirely —
+    required for materialized (block-only) covariances, cheaper everywhere."""
+    if n_edges is None:
+        n_edges = count_edges(S, lam)
     _, counts = np.unique(labels, return_counts=True)
     return ScreenStats(
         lam=float(lam),
         n_components=int(counts.size),
         max_comp=int(counts.max()),
         n_isolated=int((counts == 1).sum()),
-        n_edges=n_edges,
+        n_edges=int(n_edges),
         seconds=seconds,
     )

@@ -20,28 +20,61 @@ def _center(X: jax.Array, dtype) -> jax.Array:
     return X - jnp.mean(X, axis=0, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("ddof",))
-def sample_covariance(X: jax.Array, *, ddof: int = 0) -> jax.Array:
+def _mean_chunked(X: jax.Array, acc, *, chunk: int) -> jax.Array:
+    """Column means accumulated over row chunks, each chunk upcast in the
+    scan body — the (n, p) full-precision copy never exists."""
+    n, p = X.shape
+    pad = (-n) % chunk
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    chunks = Xp.reshape(-1, chunk, p)
+
+    def body(s, xc):
+        return s + xc.astype(acc).sum(axis=0), None
+
+    s, _ = jax.lax.scan(body, jnp.zeros((p,), acc), chunks)
+    return s / n
+
+
+@functools.partial(jax.jit, static_argnames=("ddof", "chunk"))
+def sample_covariance(
+    X: jax.Array, *, ddof: int = 0, chunk: int = 1024
+) -> jax.Array:
     """S = (X - mean)' (X - mean) / (n - ddof).
 
     The paper's experiments use the maximum-likelihood normalization (ddof=0);
     the estimator is exposed for both conventions.
+
+    bf16/f16 inputs really are upcast tile-by-tile: the mean and the Gram
+    accumulate over ``chunk``-row slabs through ``stream.tiler``'s shared
+    scan (each slab upcast inside the scan body), so the f32 copy of X never
+    materializes — f32/f64 inputs keep the direct one-shot product.
     """
-    acc = jnp.float32 if X.dtype in (jnp.bfloat16, jnp.float16) else X.dtype
+    from repro.stream.tiler import centered_gram_chunked
+
     n = X.shape[0]
-    Xc = _center(X, acc)
-    S = (Xc.T @ Xc) / jnp.asarray(max(n - ddof, 1), acc)
+    denom = max(n - ddof, 1)
+    if X.dtype in (jnp.bfloat16, jnp.float16):
+        acc = jnp.float32
+        mu = _mean_chunked(X, acc, chunk=chunk)
+        S = centered_gram_chunked(X, mu, acc, chunk=chunk) / denom
+    else:
+        acc = X.dtype
+        Xc = _center(X, acc)
+        S = (Xc.T @ Xc) / jnp.asarray(denom, acc)
     return 0.5 * (S + S.T)
 
 
-@jax.jit
-def sample_correlation(X: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("ddof",))
+def sample_correlation(X: jax.Array, *, ddof: int = 0) -> jax.Array:
     """Correlation matrix — what the paper uses for the microarray examples.
 
     With a correlation input every |S_ij| <= 1 (i != j), so all nodes isolate
-    at lambda >= 1 (paper Section 4.2).
+    at lambda >= 1 (paper Section 4.2).  ``ddof`` is exposed for convention
+    parity with ``sample_covariance`` (the normalization cancels in exact
+    arithmetic — S/(d d') is scale-free — so this is API symmetry, not a
+    numerically different estimator).
     """
-    S = sample_covariance(X)
+    S = sample_covariance(X, ddof=ddof)
     d = jnp.sqrt(jnp.clip(jnp.diag(S), 1e-12, None))
     R = S / jnp.outer(d, d)
     R = jnp.where(jnp.eye(S.shape[0], dtype=bool), 1.0, R)

@@ -70,6 +70,32 @@ class GlassoResult:
         return 1.0 - iterative / total
 
 
+def _as_cov_operand(S):
+    """Dense arrays pass through np.asarray; materialized streamed
+    covariances (the gather protocol: ``gather_block``/``diag_at``) are used
+    as-is — wrapping them in an object array would defeat the point."""
+    return S if hasattr(S, "gather_block") else np.asarray(S)
+
+
+def blockwise_inverse(
+    labels: np.ndarray, Theta: np.ndarray, needed: np.ndarray | None = None
+) -> np.ndarray:
+    """Dense W = inv(Theta) computed block-by-block over ``labels``'
+    components (Theta is block-diagonal over them by Theorem 1).
+
+    ``needed`` (bool mask over vertices) restricts the work to components
+    that intersect it.  Shared by the path warm start (merged components:
+    the restriction of the old Theta is block-diagonal over its old
+    sub-components, hence PD — a valid W iterate) and the serving data
+    sessions (rank-k updates warm-start every surviving component)."""
+    W = np.zeros_like(Theta)
+    for comp in component_lists(labels):
+        if needed is not None and not needed[comp].any():
+            continue
+        W[np.ix_(comp, comp)] = np.linalg.inv(Theta[np.ix_(comp, comp)])
+    return W
+
+
 def _result(
     plan, labels, screen_stats, Theta, seconds, solver, lam, *, routed: bool = True
 ) -> GlassoResult:
@@ -141,18 +167,31 @@ class Engine:
         p_max: int | None = None,
         warm_W: np.ndarray | None = None,
         labels: np.ndarray | None = None,
+        screen_stats: ScreenStats | None = None,
     ) -> GlassoResult:
         """``labels`` short-circuits the screening stage with a precomputed
         canonical partition (callers that already screened, e.g. to report
-        stage timings, should not pay for the partition twice)."""
-        S = np.asarray(S)
+        stage timings, should not pay for the partition twice);
+        ``screen_stats`` rides along when the caller has them (the streaming
+        screener's stats carry tile counters a dense recount would lose).
+        ``S`` may be a materialized streamed covariance (gather protocol) —
+        then ``labels`` is required, since dense screening needs dense S."""
+        S = _as_cov_operand(S)
         p = S.shape[0]
         screened = True
         if labels is not None:
-            from repro.core.screening import screen_stats_from_labels
-
             labels = np.asarray(labels)
-            screen_stats = screen_stats_from_labels(S, lam, labels, seconds=0.0)
+            if screen_stats is None:
+                from repro.core.screening import screen_stats_from_labels
+
+                screen_stats = screen_stats_from_labels(
+                    S, lam, labels, seconds=0.0
+                )
+        elif hasattr(S, "gather_block"):
+            raise ValueError(
+                "materialized covariances cannot be re-screened densely; "
+                "pass the streamed labels (see Engine.run_from_data)"
+            )
         elif screen:
             labels, screen_stats = self.screen(S, lam)
         else:
@@ -196,13 +235,20 @@ class Engine:
         sub-components — a valid PD warm start.  Buckets unchanged between
         consecutive lambdas skip re-padding entirely and warm-start from their
         own previous padded solutions on device."""
-        from repro.engine.registry import route_for  # local: avoid cycle at import
-
-        S = np.asarray(S)
+        S = _as_cov_operand(S)
         path = plan_path(
             S, lambdas, dtype=self.np_dtype,
             classify_structures=self.executor.route,
         )
+        return self._execute_path(S, path, warm_start=warm_start, p_max=p_max)
+
+    def _execute_path(
+        self, S, path, *, warm_start: bool, p_max: int | None
+    ) -> list[GlassoResult]:
+        """Run an already-planned path (dense or streamed) through the
+        executor with bucket-level reuse and warm starts."""
+        from repro.engine.registry import route_for  # local: avoid cycle at import
+
         results: list[GlassoResult] = []
         prev: GlassoResult | None = None
         for step in path.steps:
@@ -225,16 +271,11 @@ class Engine:
                 if fresh:
                     # dense warm start only for merged buckets: blockwise
                     # inverse of the previous Theta over its old components
-                    warm_W = np.zeros_like(prev.Theta)
                     needed = np.zeros(S.shape[0], dtype=bool)
                     for b in fresh:
                         for c in b.comps:
                             needed[c] = True
-                    for comp in component_lists(prev.labels):
-                        if not needed[comp].any():
-                            continue
-                        blk = prev.Theta[np.ix_(comp, comp)]
-                        warm_W[np.ix_(comp, comp)] = np.linalg.inv(blk)
+                    warm_W = blockwise_inverse(prev.labels, prev.Theta, needed)
             t0 = time.perf_counter()
             Theta = self.executor.solve_plan(
                 step.plan,
@@ -252,3 +293,56 @@ class Engine:
             results.append(res)
             prev = res
         return results
+
+    # -- data-matrix input (out-of-core screening) -------------------------
+
+    def run_from_data(
+        self,
+        X: np.ndarray,
+        lam: float,
+        *,
+        stream=None,
+        p_max: int | None = None,
+        warm_W: np.ndarray | None = None,
+    ) -> GlassoResult:
+        """One solve screened straight from the (n, p) data matrix.
+
+        The dense S never exists: ``repro.stream`` screens tile-by-tile,
+        materializes only the per-component blocks, and the solve proceeds
+        through the ordinary plan/execute stages (``stream`` takes a
+        ``StreamConfig`` or kwargs dict)."""
+        from repro.stream import stream_screen
+
+        sc = stream_screen(X, [lam], config=stream)
+        return self.run(
+            sc.S,
+            lam,
+            labels=sc.labels[0],
+            screen_stats=sc.stats[0],
+            p_max=p_max,
+            warm_W=warm_W,
+        )
+
+    def run_path_from_data(
+        self,
+        X: np.ndarray,
+        lambdas,
+        *,
+        stream=None,
+        warm_start: bool = True,
+        p_max: int | None = None,
+    ) -> list[GlassoResult]:
+        """A descending lambda path screened straight from X: one streaming
+        screen covers the whole grid (Theorem 2 — the compacted edges above
+        the grid minimum determine every partition), then the standard
+        diffed-plan execution runs over materialized blocks."""
+        from repro.stream import plan_path_streaming
+
+        path, sc = plan_path_streaming(
+            X,
+            lambdas,
+            config=stream,
+            dtype=self.np_dtype,
+            classify_structures=self.executor.route,
+        )
+        return self._execute_path(sc.S, path, warm_start=warm_start, p_max=p_max)

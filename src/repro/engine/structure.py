@@ -45,8 +45,12 @@ def component_adjacency(S: np.ndarray, comp: np.ndarray, lam: float) -> np.ndarr
     """Boolean adjacency of one component's thresholded subgraph.
 
     Strict inequality (eq. (4)): ties |S_ij| == lam are NOT edges — the same
-    convention every screening backend and closed-form solver uses."""
-    blk = np.abs(np.asarray(S)[np.ix_(comp, comp)]) > lam
+    convention every screening backend and closed-form solver uses.  Goes
+    through the gather protocol (``blocks.gather_submatrix``) so materialized
+    streamed covariances classify identically to dense ones."""
+    from repro.core.blocks import gather_submatrix
+
+    blk = np.abs(gather_submatrix(S, np.asarray(comp))) > lam
     np.fill_diagonal(blk, False)
     return blk
 

@@ -7,6 +7,9 @@ Layout per kernel: <name>/<name>.py (pl.pallas_call + BlockSpec tiling),
 Kernels:
   covgram          tiled centered Gram matrix  S = (X-mu)'(X-mu)/n — the
                    O(n p^2) covariance front-end (paper Section 3)
+  covgram_screen   fused Gram-tile + threshold + edge-emit for the
+                   out-of-core streaming screener (compacted edge lists and
+                   per-tile |S_ij| bounds instead of dense tiles)
   threshold_cc     fused |S|>lambda masking + one min-label-propagation hook
                    step — the TPU adaptation of the paper's graph-partition
                    stage (the p x p adjacency never materializes in HBM)

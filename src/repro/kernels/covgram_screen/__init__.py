@@ -1,0 +1,7 @@
+from repro.kernels.covgram_screen.ops import (
+    compact_edges,
+    covgram_screen_tiles,
+    pad_for_screen,
+)
+
+__all__ = ["covgram_screen_tiles", "compact_edges", "pad_for_screen"]

@@ -1,0 +1,53 @@
+"""Numpy oracle for the covgram_screen kernel.
+
+Matches the kernel's contract bit-for-bit in spirit (same centered-product
+arithmetic, same strict threshold) but computes in the INPUT dtype — under
+f64 inputs the emitted tile values agree exactly with a dense
+``(X-mu)'(X-mu)/n`` estimator on exactly-representable data, which is what
+the streamed-vs-dense tie property tests rely on.  This is also the off-TPU
+dispatch target: interpret-mode Pallas pays per-grid-step emulation overhead
+on precisely the many-small-tile pattern this kernel exists for (same
+trade-off as ``kernels/tree_glasso``)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def covgram_screen_ref(
+    x: np.ndarray,
+    mu: np.ndarray,
+    i_idx: np.ndarray,
+    j_idx: np.ndarray,
+    lam: float,
+    *,
+    n_true: int,
+    p_true: int,
+    block_p: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Same (vals, counts, stats) contract as ``covgram_screen_pallas``, in
+    x's dtype.  x: (N, P) padded, mu: (P,)."""
+    npairs = len(i_idx)
+    dt = x.dtype
+    vals = np.zeros((npairs, block_p, block_p), dtype=dt)
+    counts = np.zeros((npairs, 1), dtype=np.int32)
+    stats = np.zeros((npairs, 2), dtype=dt)
+    iota = np.arange(block_p)
+    for t, (ti, tj) in enumerate(zip(i_idx, j_idx)):
+        a = x[:, ti * block_p : (ti + 1) * block_p] - mu[
+            ti * block_p : (ti + 1) * block_p
+        ]
+        b = x[:, tj * block_p : (tj + 1) * block_p] - mu[
+            tj * block_p : (tj + 1) * block_p
+        ]
+        S = (a.T @ b) / n_true
+        rows = ti * block_p + iota[:, None]
+        cols = tj * block_p + iota[None, :]
+        valid = (rows < p_true) & (cols < p_true) & (rows != cols)
+        absS = np.abs(S)
+        mask = valid & (absS > lam)
+        vals[t] = np.where(mask, S, 0.0)
+        counts[t, 0] = int(mask.sum())
+        stats[t, 0] = np.where(valid, absS, 0.0).max(initial=0.0)
+        stats[t, 1] = np.where(valid & ~mask, absS, 0.0).max(initial=0.0)
+    return vals, counts, stats

@@ -24,6 +24,16 @@ batching window behind an iterative co-traveller.
 
     PYTHONPATH=src python -m repro.launch.serve_glasso --requests 8 --p 60
 
+DATA-MATRIX ADMISSION (``submit_data``) accepts the raw (n, p) X instead of
+a covariance: screening runs out-of-core through ``repro.stream`` (the dense
+S never exists — materialized per-component blocks flow through the same
+planner/batcher), and a named ``session`` pins the screen state so
+``append_rows`` can absorb rank-k data updates INCREMENTALLY: only tiles
+whose perturbation certificate broke are re-screened, affected components
+merge/split, and the fresh solve warm-starts from the session's previous
+solution (untouched components start essentially converged — the serving
+analog of the path warm start).
+
 Counters (repro.core.instrument):
     serve.requests            requests admitted
     serve.batches             batcher iterations that dispatched work
@@ -32,6 +42,10 @@ Counters (repro.core.instrument):
     serve.fastpath_requests   requests solved at admission (queue skipped)
     serve.fastpath_blocks     blocks that took a non-iterative route
     serve.fallback_blocks     closed-form candidates repaired iteratively
+    serve.data_requests       submit_data admissions (streamed screening)
+    serve.session_updates     append_rows incremental re-screens
+(``serve_stats()`` also surfaces the stream.* counters backing the data
+path: tiles scheduled/skipped/rescreened, edges emitted, bytes peak.)
 """
 
 from __future__ import annotations
@@ -50,7 +64,9 @@ from repro.core.instrument import bump, counts
 
 @dataclass
 class GlassoRequest:
-    S: np.ndarray
+    # dense ndarray, or a stream.MaterializedCovariance for data requests
+    # (both satisfy the blocks.py gather protocol the batcher uses)
+    S: object
     lam: float
     future: Future = field(default_factory=Future)
     # screen/plan results computed at fast-path admission; reused by the
@@ -58,6 +74,16 @@ class GlassoRequest:
     labels: np.ndarray | None = None
     stats: object = None
     plan: object = None
+
+
+@dataclass
+class _SessionEntry:
+    session: object                # stream.DataSession
+    last: Future | None = None     # most recent solve (warm-start source)
+    # serializes append_rows per session: the warm-start read and the
+    # `last` write must be one transaction, and DataSession state must not
+    # interleave between concurrent appends
+    lock: threading.Lock = field(default_factory=threading.Lock)
 
 
 @dataclass
@@ -118,6 +144,18 @@ class GlassoServer:
             route=True,
             route_check_tol=route_check_tol,
         )
+        # data sessions: named streaming-screen states for append_rows; the
+        # session executor honors the server's route setting (the admission
+        # fast-path executor is route=True by definition)
+        self._session_executor = BucketExecutor(
+            solver=solver,
+            dtype=self.dtype,
+            solver_opts=dict(solver_opts),
+            route=route,
+            route_check_tol=route_check_tol,
+        )
+        self._sessions: dict[str, _SessionEntry] = {}
+        self._sessions_lock = threading.Lock()
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -171,6 +209,117 @@ class GlassoServer:
             self._fail_pending()
         return req.future
 
+    def submit_data(
+        self, X: np.ndarray, lam: float, *, session: str | None = None, stream=None
+    ) -> Future:
+        """Admit a request from the raw (n, p) DATA matrix.
+
+        Screening runs out-of-core on the caller's thread (``repro.stream``:
+        tiled Gram + compacted edges + materialized per-component blocks —
+        the dense S never exists), then the request takes the normal
+        admission path: solved synchronously if every bucket routes
+        non-iteratively, queued for the coalescing batcher otherwise.
+
+        ``session="name"`` pins the streaming screen state so later
+        ``append_rows("name", Y)`` calls re-screen incrementally; without it
+        the screen runs stateless (no per-tile records, no retained X —
+        nothing a one-shot request would ever use).  ``stream`` is a
+        ``repro.stream.StreamConfig`` (or kwargs dict)."""
+        from repro.engine.planner import build_plan_incremental
+        from repro.stream import DataSession, stream_screen
+
+        req = GlassoRequest(S=None, lam=float(lam))
+        if self._stop.is_set():
+            req.future.set_exception(RuntimeError("GlassoServer stopped"))
+            return req.future
+        bump("serve.requests")
+        bump("serve.data_requests")
+        try:
+            if session is not None:
+                ses = DataSession(X, lam, config=stream)
+                req.S, req.labels, req.stats = ses.S, ses.labels, ses.stats
+                with self._sessions_lock:
+                    self._sessions[session] = _SessionEntry(
+                        session=ses, last=req.future
+                    )
+            else:
+                sc = stream_screen(X, [float(lam)], config=stream)
+                req.S, req.labels, req.stats = sc.S, sc.labels[0], sc.stats[0]
+            req.plan, _ = build_plan_incremental(
+                req.S, req.lam, req.labels, classify_structures=self.route
+            )
+        except Exception as e:
+            req.future.set_exception(e)
+            return req.future
+        if self.fast_path:
+            try:
+                if self._solve_if_fastpath(req):
+                    return req.future
+            except Exception as e:  # pragma: no cover - defensive
+                req.future.set_exception(e)
+                return req.future
+        self._queue.put(req)
+        if self._stop.is_set():
+            self._fail_pending()
+        return req.future
+
+    def append_rows(self, session: str, Y: np.ndarray) -> Future:
+        """Absorb k new data rows into a named session and re-solve.
+
+        The re-screen is INCREMENTAL (``stream.DataSession``): only tiles
+        whose perturbation certificate broke are recomputed
+        (``stream.tiles_rescreened`` vs ``stream.tiles_revalidated``),
+        affected components merge/split, blocks re-materialize exactly from
+        the updated X.  The solve runs synchronously on the caller's thread
+        — updates are latency-sensitive and warm-start from the session's
+        previous solution (all surviving components begin essentially
+        converged), so they never wait out the batching window."""
+        from repro.core.solvers import WARM_START_SOLVERS
+        from repro.engine.api import _result, blockwise_inverse
+        from repro.engine.planner import build_plan_incremental
+
+        with self._sessions_lock:
+            entry = self._sessions.get(session)
+        if entry is None:
+            raise KeyError(
+                f"unknown data session {session!r}; open one with "
+                "submit_data(..., session=...)"
+            )
+        bump("serve.session_updates")
+        fut: Future = Future()
+        with entry.lock:  # appends on one session are a serial history
+            try:
+                prev = None
+                if (
+                    entry.last is not None
+                    and entry.last.done()
+                    and entry.last.exception() is None
+                ):
+                    prev = entry.last.result()
+                up = entry.session.append_rows(Y)
+                plan, _ = build_plan_incremental(
+                    up.S, entry.session.lam, up.labels,
+                    classify_structures=self.route,
+                )
+                warm_W = None
+                if prev is not None and self.solver in WARM_START_SOLVERS:
+                    warm_W = blockwise_inverse(prev.labels, prev.Theta)
+                t0 = time.perf_counter()
+                Theta = self._session_executor.solve_plan(
+                    plan, entry.session.lam, up.S, warm_W=warm_W
+                )
+                seconds = time.perf_counter() - t0
+                fut.set_result(
+                    _result(
+                        plan, up.labels, up.stats, Theta, seconds, self.solver,
+                        entry.session.lam, routed=self.route,
+                    )
+                )
+            except Exception as e:
+                fut.set_exception(e)
+            entry.last = fut
+        return fut
+
     def _try_fast_path(self, req: GlassoRequest) -> bool:
         """Solve entirely-fast-path requests at admission, skipping the
         dispatch queue.
@@ -184,36 +333,45 @@ class GlassoServer:
         the screen/plan results are stashed on the request so the batcher
         does not redo them."""
         from repro.core.screening import thresholded_components
-        from repro.engine.api import _result
         from repro.engine.planner import build_plan_incremental
-        from repro.engine.registry import route_for
 
         try:
             labels, stats = thresholded_components(
                 req.S, req.lam, backend=self.cc_backend
             )
             plan, _ = build_plan_incremental(req.S, req.lam, labels)
-            if any(route_for(b.structure) == "iterative" for b in plan.buckets):
-                req.labels, req.stats, req.plan = labels, stats, plan
-                return False
-            t0 = time.perf_counter()
-            Theta = self._fast_executor.solve_plan(plan, req.lam, req.S)
-            seconds = time.perf_counter() - t0
-            bump("serve.fastpath_requests")
-            bump(
-                "serve.fastpath_blocks",
-                int(len(plan.isolated) + sum(len(b.comps) for b in plan.buckets)),
-            )
-            req.future.set_result(
-                _result(
-                    plan, labels, stats, Theta, seconds, self.solver, req.lam,
-                    routed=True,
-                )
-            )
-            return True
+            req.labels, req.stats, req.plan = labels, stats, plan
+            return self._solve_if_fastpath(req)
         except Exception as e:  # pragma: no cover - defensive
             req.future.set_exception(e)
             return True
+
+    def _solve_if_fastpath(self, req: GlassoRequest) -> bool:
+        """Admission-time synchronous solve of an already-planned request
+        whose every bucket routes non-iteratively; False = needs the queue."""
+        from repro.engine.api import _result
+        from repro.engine.registry import route_for
+
+        if any(route_for(b.structure) == "iterative" for b in req.plan.buckets):
+            return False
+        t0 = time.perf_counter()
+        Theta = self._fast_executor.solve_plan(req.plan, req.lam, req.S)
+        seconds = time.perf_counter() - t0
+        bump("serve.fastpath_requests")
+        bump(
+            "serve.fastpath_blocks",
+            int(
+                len(req.plan.isolated)
+                + sum(len(b.comps) for b in req.plan.buckets)
+            ),
+        )
+        req.future.set_result(
+            _result(
+                req.plan, req.labels, req.stats, Theta, seconds, self.solver,
+                req.lam, routed=True,
+            )
+        )
+        return True
 
     # -- batcher -----------------------------------------------------------
 
@@ -414,7 +572,9 @@ class GlassoServer:
 
 
 def serve_stats() -> dict[str, int]:
-    return counts("serve.")
+    """serve.* counters plus the stream.* counters behind the data-matrix
+    admission path (tiles scheduled/skipped/rescreened, edges, bytes peak)."""
+    return {**counts("serve."), **counts("stream.")}
 
 
 # ---------------------------------------------------------------------------

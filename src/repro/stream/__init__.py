@@ -1,0 +1,32 @@
+"""Out-of-core streaming screener: Theorem-1 partitions straight from X.
+
+The dense pipeline starts from a (p, p) covariance; this package starts from
+the (n, p) data matrix and never materializes S — tiles of the centered Gram
+stream through the fused ``kernels/covgram_screen`` kernel, compacted edges
+feed an incremental union-find, and only the per-component sub-blocks the
+solvers actually consume are gathered (DESIGN.md Section 10).
+
+    stream_screen          screen (X, lambda grid) out-of-core
+    plan_path_streaming    whole-path planning from X (engine-compatible)
+    DataSession            incremental re-screen for appended data rows
+    StreamConfig           tile/batch/memory-budget knobs
+"""
+
+from repro.stream.config import StreamConfig, as_config
+from repro.stream.materialize import MaterializedCovariance, materialize_components
+from repro.stream.path import plan_path_from_screen, plan_path_streaming
+from repro.stream.screen import StreamScreen, stream_screen
+from repro.stream.session import DataSession, SessionUpdate
+
+__all__ = [
+    "StreamConfig",
+    "as_config",
+    "MaterializedCovariance",
+    "materialize_components",
+    "plan_path_from_screen",
+    "plan_path_streaming",
+    "StreamScreen",
+    "stream_screen",
+    "DataSession",
+    "SessionUpdate",
+]

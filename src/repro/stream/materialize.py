@@ -1,0 +1,111 @@
+"""Component materializer: the only covariance entries the solvers ever see.
+
+Theorem 1 reduces the glasso solve to independent blocks over the screened
+components, and Theorem 2 nests every partition of a descending lambda grid
+inside the partition at the grid minimum — so the union of all covariance
+entries any plan on the grid can request is exactly the per-component
+sub-blocks S[C, C] of that COARSEST partition.  ``materialize_components``
+gathers them straight from X (centered column gather + one small Gram per
+component, the same arithmetic as the dense estimator), and
+``MaterializedCovariance`` serves them through the two-method gather
+protocol (``gather_block`` / ``diag_at``) that ``core.blocks`` and
+``engine.structure`` dispatch on — the planner, executor, classifier, and
+assembler consume materialized blocks UNCHANGED, never a (p, p) array.
+
+Memory: sum of block sizes squared (what the solve stage holds anyway) plus
+an O(n * max_comp) gather scratch per component.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.instrument import set_peak
+
+
+class MaterializedCovariance:
+    """Per-component covariance blocks + diagonal, masquerading as S.
+
+    Supports exactly the access patterns the Plan->Execute pipeline uses:
+    ``shape``, ``gather_block(idx)`` for same-component index sets (bucket
+    padding, structure classification), and ``diag_at(idx)`` (isolated-vertex
+    assembly).  Cross-component off-block entries do not exist — by
+    Theorem 1 they are never needed; asking for them is a bug and raises.
+    """
+
+    def __init__(
+        self, p: int, diag: np.ndarray, blocks: dict[int, np.ndarray],
+        root_of: np.ndarray, pos_in: np.ndarray,
+    ):
+        self.p = int(p)
+        self._diag = diag
+        self._blocks = blocks          # component root -> (b, b) block
+        self._root_of = root_of        # vertex -> component root
+        self._pos_in = pos_in          # vertex -> row within its block
+        self.dtype = diag.dtype
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.p, self.p)
+
+    def gather_block(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        roots = self._root_of[idx]
+        root = int(roots[0])
+        if not (roots == root).all():
+            raise ValueError(
+                "gather_block called across components — Theorem 1 says no "
+                "stage should ever need those entries"
+            )
+        blk = self._blocks.get(root)
+        if blk is None:  # all-isolated gather (diagonal only)
+            out = np.zeros((idx.size, idx.size), dtype=self.dtype)
+            np.fill_diagonal(out, self._diag[idx])
+            return out
+        pos = self._pos_in[idx]
+        return blk[np.ix_(pos, pos)]
+
+    def diag_at(self, idx) -> np.ndarray:
+        return self._diag[idx]
+
+    def nbytes(self) -> int:
+        return self._diag.nbytes + sum(b.nbytes for b in self._blocks.values())
+
+
+def materialize_components(
+    X: np.ndarray,
+    mu: np.ndarray,
+    diag: np.ndarray,
+    labels: np.ndarray,
+    *,
+    dtype=np.float64,
+) -> MaterializedCovariance:
+    """Gather S[C, C] for every non-singleton component of ``labels``.
+
+    Blocks are computed as (X[:, C] - mu[C])'(X[:, C] - mu[C]) / n — the
+    dense estimator's arithmetic restricted to C, so streamed and dense
+    pipelines solve numerically identical subproblems (bit-identical on
+    exactly-representable data).  The (p,) ``diag`` comes from the moments
+    pass; block diagonals are overwritten with it so isolated-vertex
+    assembly and block solves see one consistent S_ii."""
+    from repro.core.components import component_lists
+
+    X = np.asarray(X)
+    n, p = X.shape
+    root_of = np.asarray(labels, dtype=np.int64)
+    pos_in = np.zeros(p, dtype=np.int64)
+    blocks: dict[int, np.ndarray] = {}
+    for comp in component_lists(labels):
+        pos_in[comp] = np.arange(comp.size)
+        if comp.size == 1:
+            continue
+        Xc = X[:, comp].astype(dtype, copy=False) - mu[comp].astype(dtype)
+        B = (Xc.T @ Xc) / n
+        B = 0.5 * (B + B.T)
+        np.fill_diagonal(B, diag[comp].astype(dtype))
+        blocks[int(root_of[comp[0]])] = B
+    mat = MaterializedCovariance(
+        p, diag.astype(dtype), blocks, root_of, pos_in
+    )
+    set_peak("stream.bytes_peak", mat.nbytes())
+    return mat

@@ -1,0 +1,66 @@
+"""Path adapter: a whole descending-lambda plan straight from X.
+
+``plan_path_streaming`` is the streamed twin of ``engine.planner.plan_path``:
+one ``stream_screen`` call replaces the dense sort+union-find pass, then
+every lambda's plan is built by the SAME ``build_plan_incremental`` — with
+``S`` being the materialized per-component blocks — so PR-1's nested-lambda
+diffing (bucket reuse by (padded size, structure, membership) key, counted
+in ``planner.buckets_reused``) and PR-2's structure routing work unchanged
+against streamed edge weights.  The executor consumes the resulting
+``PathPlan`` exactly as a dense one.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.planner import PathPlan, PathStep, build_plan_incremental
+from repro.stream.screen import StreamScreen, stream_screen
+
+
+def plan_path_from_screen(
+    sc: StreamScreen, *, dtype=np.float64, classify_structures: bool = True
+) -> PathPlan:
+    """Build the per-lambda plans over an existing streamed screen."""
+    if sc.S is None:
+        raise ValueError(
+            "plan_path_from_screen needs a materialized screen "
+            "(stream_screen(..., materialize=True))"
+        )
+    path = PathPlan(p=sc.p, lambdas=list(sc.lambdas))
+    prev_plan = None
+    for lam, labels, stats in zip(sc.lambdas, sc.labels, sc.stats):
+        plan, reused = build_plan_incremental(
+            sc.S, lam, labels, prev=prev_plan, dtype=dtype,
+            classify_structures=classify_structures,
+        )
+        path.steps.append(
+            PathStep(
+                lam=lam, labels=labels, plan=plan, screen=stats,
+                reused_keys=reused,
+            )
+        )
+        prev_plan = plan
+    return path
+
+
+def plan_path_streaming(
+    X: np.ndarray,
+    lambdas,
+    *,
+    config=None,
+    dtype=np.float64,
+    classify_structures: bool = True,
+) -> tuple[PathPlan, StreamScreen]:
+    """Screen X out-of-core at every lambda and plan the whole path.
+
+    Returns (path, screen) — the screen carries the streamed edges, moments,
+    and counters for callers that want them (serving sessions, benchmarks).
+    """
+    sc = stream_screen(X, lambdas, config=config)
+    return (
+        plan_path_from_screen(
+            sc, dtype=dtype, classify_structures=classify_structures
+        ),
+        sc,
+    )

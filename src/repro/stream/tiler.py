@@ -1,0 +1,138 @@
+"""Tiled moment/Gram accumulation and the tile-pair schedule.
+
+Two consumers share the row-chunked accumulation idiom defined here:
+
+* the streaming screener's MOMENTS PASS (``column_moments``): one numpy
+  sweep over row chunks of X yields the column means, the centered diagonal
+  S_ii, and the uncentered column norms — O(p) state, chunk-at-a-time
+  upcast, never an (n, p) copy;
+* ``covariance.estimators.sample_covariance`` for low-precision inputs
+  (``centered_gram_chunked``): the jnp twin, a ``lax.scan`` over row chunks
+  that upcasts INSIDE the scan body so the promised "upcast tile-by-tile"
+  is what actually happens — the full-precision (n, p) copy never exists.
+
+The tile-pair schedule implements the screener's early skip.  By
+Cauchy-Schwarz, |S_ij| <= sqrt(S_ii * S_jj), so a pair of column tiles
+(I, J) with  max_I sqrt(S_ii) * max_J sqrt(S_jj) * (1 + slack) <= lam  can
+contain no edge of eq. (4) at any lambda >= lam and is never computed — the
+paper's large-lambda regime turns most of the p^2/(2*tile^2) pairs into
+zero-cost skips (``stream.tiles_skipped``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class Moments:
+    """O(p) sufficient statistics of one pass over X."""
+
+    n: int
+    mu: np.ndarray        # column means, f64
+    diag: np.ndarray      # centered S_ii = sum((x_i - mu_i)^2) / n
+    sqsum: np.ndarray     # uncentered sum x_i^2 — sqrt(G_ii) feeds the
+                          # session layer's rank-k perturbation bounds
+
+    @property
+    def norms(self) -> np.ndarray:
+        """sqrt(S_ii) — the per-column Cauchy-Schwarz factors."""
+        return np.sqrt(np.maximum(self.diag, 0.0))
+
+    @property
+    def gram_norms(self) -> np.ndarray:
+        """sqrt(G_ii) = uncentered column 2-norms (session delta bounds)."""
+        return np.sqrt(np.maximum(self.sqsum, 0.0))
+
+
+def column_moments(X: np.ndarray, *, chunk: int = 4096) -> Moments:
+    """Two chunked passes (mean, then centered square) in f64 accumulation.
+
+    The second pass centers each chunk against the final mean, so ``diag``
+    matches a dense  diag((X-mu)'(X-mu))/n  estimator to f64 roundoff (and
+    exactly, on exactly-representable data)."""
+    X = np.asarray(X)
+    n, p = X.shape
+    colsum = np.zeros(p, dtype=np.float64)
+    sqsum = np.zeros(p, dtype=np.float64)
+    for r0 in range(0, n, chunk):
+        c = X[r0 : r0 + chunk].astype(np.float64, copy=False)
+        colsum += c.sum(axis=0)
+        sqsum += (c * c).sum(axis=0)
+    mu = colsum / n
+    css = np.zeros(p, dtype=np.float64)
+    for r0 in range(0, n, chunk):
+        c = X[r0 : r0 + chunk].astype(np.float64, copy=False) - mu
+        css += (c * c).sum(axis=0)
+    return Moments(n=n, mu=mu, diag=css / n, sqsum=sqsum)
+
+
+def tile_maxima(values: np.ndarray, tile: int) -> np.ndarray:
+    """Per-column-tile maximum of a (p,) vector (last tile may be short)."""
+    p = values.shape[0]
+    nt = -(-p // tile)
+    out = np.empty(nt, dtype=np.float64)
+    for t in range(nt):
+        out[t] = values[t * tile : (t + 1) * tile].max(initial=0.0)
+    return out
+
+
+def pair_skippable(
+    norms_max: np.ndarray, ti, tj, lam: float, *, slack: float
+) -> np.ndarray:
+    """THE skip predicate (one definition site — the screen schedule and the
+    session re-validation must never drift apart):  a tile pair holds no
+    strict eq.-(4) edge at any lambda >= lam iff
+    norms_max[ti] * norms_max[tj] * (1 + slack) <= lam."""
+    return norms_max[ti] * norms_max[tj] * (1.0 + slack) <= lam
+
+
+def tile_pair_schedule(
+    norms_max: np.ndarray, lam_min: float, *, slack: float
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Upper-triangular tile pairs with the Cauchy-Schwarz skip applied.
+
+    Returns (ti, tj, keep) over ALL pairs, ti <= tj: ``keep`` marks pairs
+    that must be computed; ~keep pairs are provably edge-free for every
+    lambda on a grid whose smallest value is lam_min (``pair_skippable``)."""
+    nt = norms_max.shape[0]
+    ti, tj = np.triu_indices(nt)
+    keep = ~pair_skippable(norms_max, ti, tj, lam_min, slack=slack)
+    return ti, tj, keep
+
+
+# ---------------------------------------------------------------------------
+# jnp twin shared with covariance.estimators
+# ---------------------------------------------------------------------------
+
+
+def centered_gram_chunked(X, mu, acc_dtype, *, chunk: int = 1024):
+    """S_raw = (X - mu)'(X - mu) accumulated over row chunks, upcasting each
+    chunk to ``acc_dtype`` inside the scan body (jnp; jit-safe).
+
+    X: (n, p) any dtype; mu: (p,) in acc_dtype.  Rows pad with zeros and a
+    validity mask zeroes the padded rows' centered contribution exactly
+    (padding with cast(mu) would NOT be exact for bf16 — mu need not
+    round-trip the input dtype).  Callers divide by the true n; returns the
+    (p, p) accumulator (no normalization)."""
+    import jax
+    import jax.numpy as jnp
+
+    n, p = X.shape
+    pad = (-n) % chunk
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    valid = jnp.pad(jnp.ones((n,), acc_dtype), (0, pad))
+    chunks = Xp.reshape(-1, chunk, p)
+    masks = valid.reshape(-1, chunk)
+
+    def body(gram, xc_mask):
+        xc, m = xc_mask
+        c = (xc.astype(acc_dtype) - mu) * m[:, None]
+        return gram + c.T @ c, None
+
+    gram, _ = jax.lax.scan(
+        body, jnp.zeros((p, p), acc_dtype), (chunks, masks)
+    )
+    return gram

@@ -54,6 +54,13 @@ def floats(min_value, max_value):
     )
 
 
+def booleans():
+    return _Strategy(
+        lambda: False,
+        lambda rng: bool(rng.integers(2)),
+    )
+
+
 def sampled_from(seq):
     seq = list(seq)
     return _Strategy(
@@ -122,7 +129,7 @@ def install(sys_modules):
     """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
     mod = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "sampled_from", "lists"):
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists"):
         setattr(st, name, globals()[name])
     mod.given = given
     mod.settings = settings

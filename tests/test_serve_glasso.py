@@ -94,5 +94,62 @@ def test_server_propagates_per_request_stats():
     assert counts("serve")  # counters populated
 
 
+def test_submit_data_matches_dense_submit(rng):
+    """The data-matrix admission path (streamed screening, materialized
+    blocks) must resolve to the same solution as submitting the dense S."""
+    from conftest import lambda_between_edges
+
+    X = rng.standard_normal((40, 60)) * (0.1 + rng.random(60))
+    Xc = X - X.mean(axis=0)
+    S = Xc.T @ Xc / X.shape[0]
+    lam = lambda_between_edges(S, 0.6)
+    reset("serve")
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        rd = server.submit_data(
+            X, lam, stream={"tile": 32, "chunk": 16}
+        ).result(timeout=300)
+        rs = server.submit(S, lam).result(timeout=300)
+    np.testing.assert_allclose(rd.Theta, rs.Theta, atol=1e-6)
+    assert count("serve.data_requests") == 1
+    assert count("serve.requests") == 2
+    assert rd.screen.tiles_total > 0  # streamed provenance rode along
+
+
+def test_append_rows_incremental_session(rng):
+    """append_rows re-screens incrementally and matches a from-scratch dense
+    solve of the grown dataset; unknown sessions are an error."""
+    from conftest import lambda_between_edges
+
+    p = 64
+    scales = np.where(np.arange(p) < 24, 1.0, 0.05)
+    X = rng.standard_normal((40, p)) * scales
+    Xc = X - X.mean(axis=0)
+    S = Xc.T @ Xc / X.shape[0]
+    lam = lambda_between_edges(S, 0.8)
+    reset("serve")
+    reset("stream")
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        server.submit_data(
+            X, lam, session="s0", stream={"tile": 32, "chunk": 16}
+        ).result(timeout=300)
+        Y = 0.02 * rng.standard_normal((3, p)) * scales
+        res = server.append_rows("s0", Y).result(timeout=300)
+        with pytest.raises(KeyError, match="unknown data session"):
+            server.append_rows("nope", Y)
+    X2 = np.vstack([X, Y])
+    Xc2 = X2 - X2.mean(axis=0)
+    S2 = Xc2.T @ Xc2 / X2.shape[0]
+    direct = glasso(S2, lam, solver="bcd", tol=1e-8)
+    np.testing.assert_allclose(res.Theta, direct.Theta, atol=1e-5)
+    assert count("serve.session_updates") == 1
+    # the tiny perturbation must leave certificates standing somewhere
+    assert count("stream.tiles_revalidated") > 0
+    # counters surface through serve_stats (streamed + serving in one view)
+    from repro.launch.serve_glasso import serve_stats
+
+    st = serve_stats()
+    assert "stream.tiles_revalidated" in st and "serve.session_updates" in st
+
+
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])
