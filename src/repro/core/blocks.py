@@ -48,6 +48,26 @@ def plan_bucket_size(b: int, *, single_block: bool = False, min_bucket: int = 2)
     return min(p2, ((b + 127) // 128) * 128)
 
 
+#: working-set multiplier for a SINGLE-DEVICE iterative solve of one (b, b)
+#: block: S, the solver pair (Z/U or Theta/W), the eigh/Cholesky workspace
+#: and the result — the memory model behind the oversize threshold
+SINGLE_DEVICE_BUFFERS = 8
+
+
+def oversize_threshold(budget_mb: float, dtype=np.float64) -> int:
+    """Largest block size a single device's memory budget can solve.
+
+    Components LARGER than this are classed "oversize" by the planner and
+    routed to the mesh-spanning sharded solver.  The model is
+    ``SINGLE_DEVICE_BUFFERS`` resident (b, b) buffers:
+
+        b_max = sqrt(budget_bytes / (SINGLE_DEVICE_BUFFERS * itemsize))
+    """
+    budget_bytes = float(budget_mb) * 2**20
+    itemsize = np.dtype(dtype).itemsize
+    return max(1, int(np.sqrt(budget_bytes / (SINGLE_DEVICE_BUFFERS * itemsize))))
+
+
 def group_components(
     comps: list[np.ndarray], classify=None
 ) -> tuple[np.ndarray, dict[tuple[int, str], list[np.ndarray]]]:
@@ -108,11 +128,28 @@ def gather_diag(S, idx) -> np.ndarray:
     return np.asarray(S)[idx, idx]
 
 
+def gather_submatrix_rows(S, rows: np.ndarray, cols: np.ndarray, *, dtype=None) -> np.ndarray:
+    """S[np.ix_(rows, cols)] through the gather protocol (both index sets
+    inside ONE component).  The rectangular sibling of ``gather_submatrix``:
+    the sharded oversize route fetches a giant block one row-chunk at a time
+    (``stream.materialize.shard_gather``), so no stage ever holds the whole
+    (b, b) block on the host."""
+    if hasattr(S, "gather_block_rows"):
+        blk = S.gather_block_rows(rows, cols)
+    else:
+        blk = np.asarray(S)[np.ix_(rows, cols)]
+    return blk if dtype is None else blk.astype(dtype, copy=False)
+
+
 @dataclass
 class Bucket:
     size: int                                  # padded block size
     comps: list[np.ndarray]                    # member-vertex arrays
-    blocks: np.ndarray                         # (n_blocks, size, size) padded S
+    blocks: np.ndarray | None                  # (n_blocks, size, size) padded S;
+                                               # None for "oversize" buckets —
+                                               # the sharded route gathers
+                                               # straight into device shards,
+                                               # never a host stack
     structure: str = "general"                 # routing ladder class
 
 
@@ -146,7 +183,15 @@ def make_bucket(
 ) -> Bucket:
     """Pad and stack one size-group of components (the ONLY place padded
     bucket stacks are constructed — build_plan and the engine planner both
-    delegate here, so the padding convention cannot desynchronize)."""
+    delegate here, so the padding convention cannot desynchronize).
+
+    "oversize" buckets carry NO host block stack: their blocks exceed the
+    single-device budget by definition, so the executor's sharded route
+    gathers each one row-chunk by row-chunk straight into device shards
+    (``stream.materialize.shard_gather``) — a padded host copy here would
+    reintroduce exactly the allocation the route exists to avoid."""
+    if structure == "oversize":
+        return Bucket(size=size, comps=members, blocks=None, structure=structure)
     blocks = np.stack(
         [pad_block(gather_submatrix(S, c, dtype=dtype), size) for c in members]
     )

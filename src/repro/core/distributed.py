@@ -126,3 +126,76 @@ def put_sharded_blocks(blocks: np.ndarray, mesh, *, axis: str = "data"):
     return jax.device_put(
         jnp.asarray(blocks), NamedSharding(mesh, P(axis, None, None))
     )
+
+
+# ---------------------------------------------------------------------------
+# Row-sharded matrix primitives (the sharded oversize solver's vocabulary)
+# ---------------------------------------------------------------------------
+#
+# All three helpers run INSIDE a shard_map body: operands are the local
+# (rows_local, p) shard of a row-sharded square matrix, and — crucially for
+# the oversize memory model — none of them ever materializes a full (p, p)
+# operand on any one device.  Peak per-device scratch is one extra shard.
+
+
+def ring_matmul(a_rows: jax.Array, b_rows: jax.Array, *, axis: str, n_shards: int):
+    """C = A @ B with A, B, C all row-sharded over ``axis``.
+
+    Classic 1-D ring algorithm: at step k each device multiplies its local
+    column slab A[:, rows-of-shard-s] (s = my_index + k) by the B shard
+    currently in its ring buffer, then passes the buffer along the ring.
+    n_shards steps of (rl, rl) @ (rl, p) work — the same b^3 / d FLOPs as the
+    gathered product, but the only extra buffer is one (rl, p) shard instead
+    of the full (p, p) all-gather."""
+    if n_shards == 1:
+        return a_rows @ b_rows
+    rl = a_rows.shape[0]
+    idx = jax.lax.axis_index(axis)
+    perm = [(j, (j - 1) % n_shards) for j in range(n_shards)]
+
+    def step(k, carry):
+        acc, b_cur = carry
+        s = jax.lax.rem((idx + k).astype(jnp.int32), jnp.int32(n_shards))
+        col0 = (s * rl).astype(jnp.int32)
+        a_cols = jax.lax.dynamic_slice(a_rows, (jnp.int32(0), col0), (rl, rl))
+        acc = acc + a_cols @ b_cur
+        b_cur = jax.lax.ppermute(b_cur, axis, perm)
+        return acc, b_cur
+
+    acc0 = jnp.zeros_like(b_rows)
+    acc, _ = jax.lax.fori_loop(0, n_shards, step, (acc0, b_rows))
+    return acc
+
+
+def transpose_rowsharded(a_rows: jax.Array, *, axis: str, n_shards: int):
+    """(A^T) row-sharded from A row-sharded, via one all_to_all.
+
+    Device i sends its column block j to device j and receives every
+    device's column block i — i.e. the full column slab A[:, cols_i] —
+    whose transpose is exactly the rows of A^T this device owns.  Per-device
+    traffic and scratch are one shard, never the full matrix."""
+    if n_shards == 1:
+        return a_rows.T
+    col_slab = jax.lax.all_to_all(
+        a_rows, axis, split_axis=1, concat_axis=0, tiled=True
+    )  # (p, rows_local) — global rows arrive in shard order, already aligned
+    return col_slab.T
+
+
+def matvec_rowsharded(a_rows: jax.Array, v: jax.Array, *, axis: str, n_shards: int):
+    """(A @ v) replicated, from A row-sharded and v replicated."""
+    if n_shards == 1:
+        return a_rows @ v
+    return jax.lax.all_gather(a_rows @ v, axis, tiled=True)
+
+
+def device_memory_budget_mb() -> float | None:
+    """Per-device accelerator memory in MB, or None when the backend does
+    not report it (CPU).  The planner's ``oversize_budget_mb="auto"`` hook."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except (RuntimeError, AttributeError, TypeError):
+        return None
+    if not stats or "bytes_limit" not in stats:
+        return None
+    return float(stats["bytes_limit"]) / 2**20

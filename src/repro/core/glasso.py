@@ -42,21 +42,33 @@ def glasso(
     cc_backend: str = "host",
     warm_W: np.ndarray | None = None,
     route: bool = True,
+    oversize_threshold: int | None = None,
+    oversize_budget_mb: float | str | None = None,
     **solver_opts,
 ) -> GlassoResult:
     """``route=False`` disables the structure-routed solver ladder (every
     block takes the iterative solver — the pre-router baseline; used by the
     equivalence gates and the route-mix benchmark).
 
+    ``oversize_threshold`` (block-size cap) or ``oversize_budget_mb``
+    (per-device memory budget; ``"auto"`` asks the backend) enable the
+    SHARDED route: components too large for one device solve across the
+    whole mesh (row-sharded iterate, no eigh — DESIGN.md Section 11), with
+    ``GlassoResult.oversize`` counting dispatches/inner iterations/
+    fallbacks.
+
     ``glasso(X=X, lam=lam, from_data=True)`` solves from the (n, p) DATA
     matrix instead of a covariance: screening runs out-of-core through
     ``repro.stream`` (the dense (p, p) S is never materialized — only the
-    per-component blocks the solvers consume), exactness unchanged.
+    per-component blocks the solvers consume), exactness unchanged; an
+    oversize component then streams from X STRAIGHT into device shards.
     ``stream`` passes a ``repro.stream.StreamConfig`` (or kwargs dict);
     ``screen``/``cc_backend`` do not apply on this path (the streamed screen
     IS the screening stage)."""
     engine = Engine(
-        solver=solver, dtype=dtype, cc_backend=cc_backend, route=route, **solver_opts
+        solver=solver, dtype=dtype, cc_backend=cc_backend, route=route,
+        oversize_threshold=oversize_threshold,
+        oversize_budget_mb=oversize_budget_mb, **solver_opts
     )
     data = X if X is not None else (S if from_data else None)
     if from_data or X is not None:
@@ -88,6 +100,8 @@ def glasso_path(
     cc_backend: str = "host",
     p_max: int | None = None,
     route: bool = True,
+    oversize_threshold: int | None = None,
+    oversize_budget_mb: float | str | None = None,
     **solver_opts,
 ) -> list[GlassoResult]:
     """Solve along a descending lambda path (one planning pass, warm starts).
@@ -108,7 +122,11 @@ def glasso_path(
     warm starts — and never a (p, p) allocation in the screening stage.
     """
     del cc_backend  # see docstring
-    engine = Engine(solver=solver, dtype=dtype, route=route, **solver_opts)
+    engine = Engine(
+        solver=solver, dtype=dtype, route=route,
+        oversize_threshold=oversize_threshold,
+        oversize_budget_mb=oversize_budget_mb, **solver_opts
+    )
     data = X if X is not None else (S if from_data else None)
     if from_data or X is not None:
         if data is None:

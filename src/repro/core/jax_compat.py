@@ -37,6 +37,19 @@ def make_mesh(axis_shapes, axis_names, *, auto_axes: bool = True):
     return jax.make_mesh(axis_shapes, axis_names)
 
 
+_LOCAL_MESHES: dict[tuple, object] = {}
+
+
 def local_device_mesh(axis: str = "data"):
-    """1-D mesh over every local device (the engine's default placement)."""
-    return make_mesh((jax.device_count(),), (axis,))
+    """1-D mesh over every local device (the engine's default placement).
+
+    Cached per (axis, device count): the device set is fixed for a process
+    lifetime, and re-building the mesh per call both wastes time (tests that
+    emulate 8 host devices re-init it hundreds of times) and defeats any
+    compiled-function cache keyed on mesh identity."""
+    key = (axis, jax.device_count())
+    mesh = _LOCAL_MESHES.get(key)
+    if mesh is None:
+        mesh = make_mesh((jax.device_count(),), (axis,))
+        _LOCAL_MESHES[key] = mesh
+    return mesh

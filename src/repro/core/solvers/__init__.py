@@ -1,22 +1,35 @@
-"""Graphical-lasso block solvers.
+"""Graphical-lasso block solvers behind the Solver protocol.
 
-The paper is solver-agnostic (its contribution wraps *any* solver); we ship
-three with one contract — ``solve(S, lam, **opts) -> Theta`` on a (b, b)
-block, jit- and vmap-friendly so same-size component buckets batch onto the
-MXU:
+The paper is solver-agnostic (its contribution wraps *any* solver); every
+solver here is registered as a capability-tagged ``SolverSpec``
+(``protocol.py``, re-exported through ``engine.registry``) and the executor
+consults the spec — batched? warm-startable? sharded? — instead of
+hard-coded name sets.  The single-device contract is
+``solve(S, lam, **opts) -> Theta`` on a (b, b) block, jit- and vmap-friendly
+so same-size component buckets batch onto the MXU:
 
-``bcd``   GLASSO block coordinate descent [Friedman et al. 2007] — the
-          paper-faithful baseline.  Row/column sweeps with an inner cyclic
-          coordinate-descent lasso; includes the eq.-(10) node-screening check
-          the paper points out GLASSO 1.4 was missing.
-``pg``    G-ISTA-style proximal gradient — the first-order stand-in for SMACS
-          [Lu 2010] (same O(p^3)-per-iteration complexity class; DESIGN.md
-          Section 3 records the adaptation).
-``admm``  ADMM [Boyd et al. 2011] — eigh-based, the most robust on
-          ill-conditioned blocks; used as the cross-check oracle in tests.
+``bcd``      GLASSO block coordinate descent [Friedman et al. 2007] — the
+             paper-faithful baseline.  Row/column sweeps with an inner cyclic
+             coordinate-descent lasso; includes the eq.-(10) node-screening
+             check the paper points out GLASSO 1.4 was missing.  Consumes a
+             W0 covariance warm start.
+``pg``       G-ISTA-style proximal gradient — the first-order stand-in for
+             SMACS [Lu 2010] (same O(p^3)-per-iteration complexity class;
+             DESIGN.md Section 3 records the adaptation).  Warm-starts from
+             Theta0, not W0.
+``admm``     ADMM [Boyd et al. 2011] — eigh-based, the most robust on
+             ill-conditioned blocks; the cross-check oracle in tests.
+             Consumes W0: Z0 = W0^{-1}, U0 = (W0 - S)/rho (see admm.py).
+``sharded``  mesh-spanning ADMM for OVERSIZE blocks (``sharded.py``): the
+             (b, b) iterate stays row-sharded, the eigh is replaced by
+             matmul-only Newton-Schulz + CG inner iterations.  Different
+             calling convention (mesh kwargs, ShardedSolve result) — reached
+             through the executor's "sharded" route, never vmapped.
 """
 
-from repro.core.solvers.admm import glasso_admm
+from collections.abc import Mapping as _Mapping, Set as _Set
+
+from repro.core.solvers.admm import glasso_admm, glasso_admm_info
 from repro.core.solvers.bcd import glasso_bcd
 from repro.core.solvers.closed_form import (
     glasso_chordal_host,
@@ -25,12 +38,97 @@ from repro.core.solvers.closed_form import (
 )
 from repro.core.solvers.kkt import kkt_residual
 from repro.core.solvers.pg import glasso_pg
+from repro.core.solvers.protocol import (
+    SolverSpec,
+    available_solvers,
+    block_solvers,
+    register_solver,
+    solver_spec,
+    warm_start_solvers,
+)
+from repro.core.solvers.sharded import ShardedSolve, glasso_sharded
 
-SOLVERS = {
-    "bcd": glasso_bcd,
-    "pg": glasso_pg,
-    "admm": glasso_admm,
-}
+register_solver(
+    SolverSpec(
+        name="bcd",
+        fn=glasso_bcd,
+        batched=True,
+        warm_startable=True,
+        description="GLASSO block coordinate descent (paper baseline)",
+    )
+)
+register_solver(
+    SolverSpec(
+        name="pg",
+        fn=glasso_pg,
+        batched=True,
+        warm_startable=False,  # accepts W0 for parity; warm-starts via Theta0
+        description="G-ISTA proximal gradient (SMACS stand-in)",
+    )
+)
+register_solver(
+    SolverSpec(
+        name="admm",
+        fn=glasso_admm,
+        batched=True,
+        warm_startable=True,
+        description="ADMM (eigh Theta-update); the test oracle",
+        # consumes the Theta-side seed alongside W0: callers holding the
+        # Theta iterate (repairs, path reuse) skip admm's inv(W0)
+        meta={"theta_warm": True},
+    )
+)
+register_solver(
+    SolverSpec(
+        name="sharded",
+        fn=glasso_sharded,
+        batched=False,
+        warm_startable=True,
+        sharded=True,
+        description="mesh-spanning ADMM for oversize blocks (no eigh)",
+        meta={"warm_kwarg": "Theta0"},
+    )
+)
+
+class _BlockSolversView(_Mapping):
+    """LIVE name -> fn view of the registry's user-pickable block solvers.
+
+    A plain ``dict`` snapshot taken at import time would make
+    ``register_solver`` a dead extension point — a solver registered later
+    would never be visible to the executor/serving admission checks that
+    consult ``SOLVERS``.  This view re-derives from the specs on every
+    access, so registration works at any time."""
+
+    def __getitem__(self, name):
+        return block_solvers()[name]
+
+    def __iter__(self):
+        return iter(block_solvers())
+
+    def __len__(self):
+        return len(block_solvers())
+
+
+class _WarmStartView(_Set):
+    """LIVE view of batched solvers that genuinely consume a W0 warm start
+    (same rationale as ``_BlockSolversView``; the sharded solver's Theta0
+    warm start rides its own dispatch path)."""
+
+    def _names(self):
+        return available_solvers(batched=True, warm_startable=True)
+
+    def __contains__(self, name):
+        return name in self._names()
+
+    def __iter__(self):
+        return iter(self._names())
+
+    def __len__(self):
+        return len(self._names())
+
+
+#: user-pickable single-device block solvers (live registry view)
+SOLVERS = _BlockSolversView()
 
 # Closed-form direct solvers are NOT in SOLVERS: they are exact only on the
 # structure classes the planner certifies, so they are reachable through the
@@ -41,19 +139,27 @@ CLOSED_FORM_SOLVERS = {
     "chordal": glasso_chordal_host,
 }
 
-# solvers that actually consume a W0 covariance warm start (pg/admm accept
-# the kwarg for API parity but discard it — the engine skips building W0
-# stacks for them entirely)
-WARM_START_SOLVERS = frozenset({"bcd"})
+#: batched solvers whose W0 covariance warm start is genuinely consumed
+#: (live view; the engine skips building W0 stacks for the others)
+WARM_START_SOLVERS = _WarmStartView()
 
 __all__ = [
     "glasso_bcd",
     "glasso_pg",
     "glasso_admm",
+    "glasso_admm_info",
     "glasso_forest",
     "glasso_forest_stack",
     "glasso_chordal_host",
+    "glasso_sharded",
+    "ShardedSolve",
     "kkt_residual",
+    "SolverSpec",
+    "register_solver",
+    "solver_spec",
+    "available_solvers",
+    "block_solvers",
+    "warm_start_solvers",
     "SOLVERS",
     "CLOSED_FORM_SOLVERS",
     "WARM_START_SOLVERS",

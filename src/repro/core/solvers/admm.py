@@ -15,6 +15,29 @@ rho is adapted online (Boyd Section 3.4.1: x2 when the primal residual runs
 10x ahead of the dual, /2 in the opposite case, with the scaled dual variable
 U rescaled accordingly) — fixed rho=1 stalls far from the optimum on
 ill-conditioned blocks well inside the default iteration budget.
+
+WARM STARTS: ``W0`` (a covariance iterate, W ~= Theta*^{-1} — the executor's
+path/repair currency) seeds BOTH halves of the splitting:
+
+    Z0 = W0^{-1}                 the primal candidate
+    U0 = (W0 - S) / rho          the scaled dual — from the Theta-update
+                                 optimality rho*Theta - Theta^{-1} = rho*(Z-U)-S
+                                 at the fixed point Theta = Z
+
+Seeding Z alone is nearly worthless: ADMM then spends as many iterations
+rebuilding U from zero as a cold start spends on everything (the dual IS the
+memory of the splitting).  With both seeded, an exact W0 is a fixed point —
+the KKT conditions (11)/(12) make soft(Z0 + U0, lam/rho) return Z0 exactly —
+and a near-solution W0 (path step, executor repair, serving re-solve)
+converges in a handful of sweeps.  A singular/non-finite W0 falls back to the
+cold start inside the jit.
+
+Callers that HOLD the Theta-side iterate (executor repairs hold the rejected
+candidate, the path warm start holds the previous padded solution) pass it
+as ``Theta0`` alongside W0: Z0 then comes straight from Theta0 and the
+``inv(W0)`` above is skipped — they already paid one O(b^3) inversion to
+build W0 from it, and inverting back would waste a second one (plus
+precision on ill-conditioned blocks).
 """
 
 from __future__ import annotations
@@ -30,15 +53,18 @@ def _soft(x, t):
 
 
 @functools.partial(jax.jit, static_argnames=("max_iter",))
-def glasso_admm(
+def glasso_admm_info(
     S: jax.Array,
     lam: jax.Array,
     *,
     rho: float = 1.0,
     max_iter: int = 2000,
     tol: float = 1e-7,
-    W0: jax.Array | None = None,  # accepted for API parity; unused
-) -> jax.Array:
+    W0: jax.Array | None = None,
+    Theta0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """ADMM returning (Theta, iterations) — the iteration count backs the
+    warm-start acceptance tests and the executor's repair accounting."""
     b = S.shape[0]
     dtype = S.dtype
     lam = jnp.asarray(lam, dtype)
@@ -72,15 +98,41 @@ def glasso_admm(
             jnp.logical_or(r_prim > eps, r_dual > eps), it < max_iter
         )
 
-    Z0 = jnp.where(jnp.eye(b, dtype=bool), 1.0 / (jnp.diag(S) + lam), jnp.zeros_like(S))
+    cold_Z = jnp.where(
+        jnp.eye(b, dtype=bool), 1.0 / (jnp.diag(S) + lam), jnp.zeros_like(S)
+    )
+    if W0 is None:
+        Z0, U0 = cold_Z, jnp.zeros_like(S)
+    else:
+        Z0c = Theta0 if Theta0 is not None else jnp.linalg.inv(W0)
+        Z0c = 0.5 * (Z0c + Z0c.T)
+        usable = jnp.all(jnp.isfinite(Z0c)) & jnp.all(jnp.isfinite(W0))
+        Z0 = jnp.where(usable, Z0c, cold_Z)
+        U0 = jnp.where(usable, (W0 - S) / rho0, jnp.zeros_like(S))
     init = (
         Z0,
-        jnp.zeros_like(S),
+        U0,
         rho0,
         jnp.asarray(jnp.inf, dtype),
         jnp.asarray(jnp.inf, dtype),
         jnp.int32(0),
     )
-    Z, U, _, _, _, _ = jax.lax.while_loop(cond, body, init)
-    del W0
-    return 0.5 * (Z + Z.T)
+    Z, U, _, _, _, it = jax.lax.while_loop(cond, body, init)
+    return 0.5 * (Z + Z.T), it
+
+
+def glasso_admm(
+    S: jax.Array,
+    lam: jax.Array,
+    *,
+    rho: float = 1.0,
+    max_iter: int = 2000,
+    tol: float = 1e-7,
+    W0: jax.Array | None = None,
+    Theta0: jax.Array | None = None,
+) -> jax.Array:
+    """Single-block solver contract ``solve(S, lam, **opts) -> Theta``."""
+    Theta, _ = glasso_admm_info(
+        S, lam, rho=rho, max_iter=max_iter, tol=tol, W0=W0, Theta0=Theta0
+    )
+    return Theta

@@ -1,0 +1,93 @@
+"""The Solver protocol: capability-tagged specs behind one registry.
+
+Before this module the solver layer's contracts lived in three parallel
+ad-hoc structures — a name->fn dict (``SOLVERS``), a warm-start name set
+(``WARM_START_SOLVERS``), and special-cased closed forms — and a new solver
+meant editing every consumer (executor, engine, serving) by hand.  A
+``SolverSpec`` states the contract ONCE:
+
+    fn              solve(S, lam, **opts) -> Theta for single-device specs
+                    (jit/vmap-friendly: same-size blocks batch onto the MXU);
+                    sharded specs take ``glasso_sharded``'s mesh-spanning
+                    signature instead
+    batched         the executor may vmap it over a padded bucket stack
+    warm_startable  genuinely consumes a W0 covariance warm start (the
+                    executor skips building W0 stacks otherwise)
+    sharded         spans the device mesh; dispatched per-block down the
+                    executor's oversize route, never vmapped
+    iterative       eligible as the routing ladder's tail (closed forms are
+                    exact only on certified structure classes, so they are
+                    reachable through routes, not as user-picked solvers)
+
+``engine.registry`` re-exports the registration surface next to the
+screening-backend and route registries, so all three extension points live
+in one place; ``core.solvers`` keeps the legacy ``SOLVERS`` /
+``WARM_START_SOLVERS`` names as views derived from the specs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+_SPECS: dict[str, "SolverSpec"] = {}
+
+
+@dataclass(frozen=True)
+class SolverSpec:
+    """One solver's contract; see the module docstring for the fields."""
+
+    name: str
+    fn: Callable
+    batched: bool = True
+    warm_startable: bool = False
+    sharded: bool = False
+    iterative: bool = True
+    description: str = ""
+    # extra per-solver facts (e.g. which kwarg carries the warm start)
+    meta: dict = field(default_factory=dict)
+
+
+def register_solver(spec: SolverSpec) -> SolverSpec:
+    """Register (or replace) a solver spec; returns it for chaining."""
+    if spec.sharded and spec.batched:
+        raise ValueError(
+            f"solver {spec.name!r}: sharded solvers span the mesh and cannot "
+            "also be vmapped over a bucket stack (batched=True)"
+        )
+    _SPECS[spec.name] = spec
+    return spec
+
+
+def solver_spec(name: str) -> SolverSpec:
+    try:
+        return _SPECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; available: {available_solvers()}"
+        ) from None
+
+
+def available_solvers(**caps: bool) -> tuple[str, ...]:
+    """Registered solver names, optionally filtered by capability flags,
+    e.g. ``available_solvers(batched=True, warm_startable=True)``."""
+    names = []
+    for name, spec in sorted(_SPECS.items()):
+        if all(getattr(spec, cap) == want for cap, want in caps.items()):
+            names.append(name)
+    return tuple(names)
+
+
+def block_solvers() -> dict[str, Callable]:
+    """name -> fn for the user-pickable single-device block solvers (the
+    legacy ``SOLVERS`` view: batched, iterative, not sharded)."""
+    return {
+        name: spec.fn
+        for name, spec in sorted(_SPECS.items())
+        if spec.batched and spec.iterative and not spec.sharded
+    }
+
+
+def warm_start_solvers() -> frozenset[str]:
+    """The legacy ``WARM_START_SOLVERS`` view."""
+    return frozenset(n for n, s in _SPECS.items() if s.warm_startable)

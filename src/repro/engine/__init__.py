@@ -2,9 +2,11 @@
 
 Layers (DESIGN.md):
     registry   screening backends behind one ``backend=`` string + the
-               structure -> solver routing ladder
+               structure -> solver routing ladder + the capability-tagged
+               Solver protocol (``SolverSpec``/``register_solver``)
     structure  component subgraph classification (singleton/pair/tree/
-               chordal/general) feeding the ladder
+               chordal/general, plus the planner-assigned "oversize" class
+               behind the mesh-spanning sharded route) feeding the ladder
     planner    incremental lambda-path planning (one union-find pass, diffed
                bucket plans, per-bucket structure tags)
     executor   async multi-device bucket dispatch + process-global compiled
@@ -13,13 +15,17 @@ Layers (DESIGN.md):
 """
 
 from repro.engine.registry import (
+    SolverSpec,
     available_cc_backends,
+    available_solvers,
     get_cc_backend,
     label_components,
     register_cc_backend,
+    register_solver,
     route_for,
     set_route,
     solver_routes,
+    solver_spec,
 )
 from repro.engine.structure import STRUCTURES, classify_component
 from repro.engine.planner import (
@@ -43,7 +49,11 @@ __all__ = [
     "PathPlan",
     "PathStep",
     "STRUCTURES",
+    "SolverSpec",
     "available_cc_backends",
+    "available_solvers",
+    "register_solver",
+    "solver_spec",
     "bucket_key",
     "build_plan_incremental",
     "classify_component",

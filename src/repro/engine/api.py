@@ -40,6 +40,10 @@ class GlassoResult:
     block_sizes: list[int] = field(default_factory=list)
     route_mix: dict = field(default_factory=dict)  # structure class -> #blocks
     routed: bool = True            # was the routing ladder enabled?
+    # sharded-route accounting for THIS solve: {dispatched, inner_iters,
+    # fallbacks} (empty when no block took the oversize route); the
+    # process-wide view is instrument counts("solver.oversize.")
+    oversize: dict = field(default_factory=dict)
 
     @property
     def support(self) -> np.ndarray:
@@ -70,6 +74,38 @@ class GlassoResult:
         return 1.0 - iterative / total
 
 
+def resolve_oversize(
+    threshold: int | None, budget_mb: float | str | None, np_dtype, *,
+    route: bool = True,
+) -> int | None:
+    """Resolve the single-device block-size cap for the oversize route.
+
+    An explicit ``threshold`` wins; otherwise it is derived from a per-device
+    memory budget in MB (``blocks.oversize_threshold``), where ``"auto"``
+    asks the backend for its HBM size (``distributed.
+    device_memory_budget_mb`` — None on CPU, disabling the route).  Returns
+    None when oversize routing is off.  Oversize is a ROUTE, so it requires
+    the routing ladder."""
+    if threshold is None and budget_mb is None:
+        return None
+    if not route:
+        raise ValueError(
+            "oversize_threshold / oversize_budget_mb require route=True "
+            "(the oversize class is a routing-ladder rung)"
+        )
+    if threshold is not None:
+        return int(threshold)
+    if budget_mb == "auto":
+        from repro.core.distributed import device_memory_budget_mb
+
+        budget_mb = device_memory_budget_mb()
+        if budget_mb is None:
+            return None
+    from repro.core.blocks import oversize_threshold as _threshold_from_budget
+
+    return _threshold_from_budget(float(budget_mb), np_dtype)
+
+
 def _as_cov_operand(S):
     """Dense arrays pass through np.asarray; materialized streamed
     covariances (the gather protocol: ``gather_block``/``diag_at``) are used
@@ -97,7 +133,8 @@ def blockwise_inverse(
 
 
 def _result(
-    plan, labels, screen_stats, Theta, seconds, solver, lam, *, routed: bool = True
+    plan, labels, screen_stats, Theta, seconds, solver, lam, *,
+    routed: bool = True, oversize: dict | None = None,
 ) -> GlassoResult:
     route_mix = {"singleton": len(plan.isolated)} if len(plan.isolated) else {}
     for b in plan.buckets:
@@ -114,6 +151,7 @@ def _result(
         ),
         route_mix=route_mix,
         routed=routed,
+        oversize=dict(oversize or {}),
     )
 
 
@@ -133,6 +171,8 @@ class Engine:
         devices=None,
         route: bool = True,
         route_check_tol: float = 1e-6,
+        oversize_threshold: int | None = None,
+        oversize_budget_mb: float | str | None = None,
         **solver_opts,
     ):
         from repro.core.solvers import WARM_START_SOLVERS
@@ -142,6 +182,9 @@ class Engine:
         self.np_dtype = np.dtype(jnp.dtype(dtype).name)  # host-side twin
         self.cc_backend = cc_backend
         self.warm_capable = solver in WARM_START_SOLVERS
+        self.oversize = resolve_oversize(
+            oversize_threshold, oversize_budget_mb, self.np_dtype, route=route
+        )
         self.executor = BucketExecutor(
             solver=solver,
             dtype=dtype,
@@ -205,6 +248,7 @@ class Engine:
         plan, _ = build_plan_incremental(
             S, lam, labels, dtype=self.np_dtype,
             classify_structures=self.executor.route and screened,
+            oversize=self.oversize if screened else None,
         )
         schedule_mod.check_capacity(
             [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
@@ -214,7 +258,7 @@ class Engine:
         seconds = time.perf_counter() - t0
         return _result(
             plan, labels, screen_stats, Theta, seconds, self.solver, lam,
-            routed=self.executor.route,
+            routed=self.executor.route, oversize=self.executor.last_oversize,
         )
 
     # -- lambda path -------------------------------------------------------
@@ -238,7 +282,7 @@ class Engine:
         S = _as_cov_operand(S)
         path = plan_path(
             S, lambdas, dtype=self.np_dtype,
-            classify_structures=self.executor.route,
+            classify_structures=self.executor.route, oversize=self.oversize,
         )
         return self._execute_path(S, path, warm_start=warm_start, p_max=p_max)
 
@@ -289,6 +333,7 @@ class Engine:
             res = _result(
                 step.plan, step.labels, step.screen, Theta, seconds, self.solver,
                 step.lam, routed=self.executor.route,
+                oversize=self.executor.last_oversize,
             )
             results.append(res)
             prev = res
@@ -313,7 +358,7 @@ class Engine:
         ``StreamConfig`` or kwargs dict)."""
         from repro.stream import stream_screen
 
-        sc = stream_screen(X, [lam], config=stream)
+        sc = stream_screen(X, [lam], config=stream, oversize=self.oversize)
         return self.run(
             sc.S,
             lam,
@@ -344,5 +389,6 @@ class Engine:
             config=stream,
             dtype=self.np_dtype,
             classify_structures=self.executor.route,
+            oversize=self.oversize,
         )
         return self._execute_path(sc.S, path, warm_start=warm_start, p_max=p_max)

@@ -82,17 +82,34 @@ def _validate_solver_opts(solver: str, opts: dict) -> None:
         )
 
 
+def _theta_warm(solver: str) -> bool:
+    """Does this solver consume a Theta-side seed alongside W0?  (Spec meta;
+    saves the solver re-inverting a W0 the caller derived from a Theta it
+    already held.)"""
+    from repro.core.solvers import solver_spec
+
+    return bool(solver_spec(solver).meta.get("theta_warm"))
+
+
 def compiled_bucket_solver(
-    solver: str, size: int, dtype, *, warm: bool, opts_key: tuple = ()
+    solver: str, size: int, dtype, *, warm: bool, warm_theta: bool = False,
+    opts_key: tuple = ()
 ):
     """Fetch-or-build the jitted batched solver for one bucket shape family.
 
     Signature of the returned callable:
-        fn(blocks[n,size,size], lams[n])            when warm=False
-        fn(blocks[n,size,size], lams[n], W0[n,...]) when warm=True (W0 donated
-                                                    off-CPU)
+        fn(blocks[n,size,size], lams[n])                 warm=False
+        fn(blocks[n,size,size], lams[n], W0[n,...])      warm=True (W0 donated
+                                                         off-CPU)
+        fn(blocks[n,size,size], lams[n], W0, Theta0)     warm_theta=True too —
+                                                         solvers whose spec
+                                                         consumes the Theta
+                                                         seed directly
     """
-    key = (solver, int(size), jnp.dtype(dtype).name, bool(warm), opts_key)
+    key = (
+        solver, int(size), jnp.dtype(dtype).name, bool(warm), bool(warm_theta),
+        opts_key,
+    )
     with _CACHE_LOCK:
         fn = _COMPILED.get(key)
         if fn is not None:
@@ -101,7 +118,17 @@ def compiled_bucket_solver(
         bump("executor.compiled_miss")
         solver_fn = SOLVERS[solver]
         opts = dict(opts_key)
-        if warm:
+        if warm and warm_theta:
+
+            def run(blocks, lams, W0, T0):
+                return jax.vmap(
+                    lambda Sb, lm, w0, t0: solver_fn(
+                        Sb, lm, W0=w0, Theta0=t0, **opts
+                    )
+                )(blocks, lams, W0, T0)
+
+            fn = jax.jit(run, donate_argnums=(2,) if _donate_supported() else ())
+        elif warm:
 
             def run(blocks, lams, W0):
                 return jax.vmap(
@@ -175,17 +202,110 @@ def dispatch_repair(
     sub = jnp.asarray(np.asarray(blocks), dtype)
     lams_d = jnp.asarray(np.asarray(lams), dtype)
     warm = solver in WARM_START_SOLVERS
-    W0 = None
+    theta_warm = warm and _theta_warm(solver)
+    W0 = T0 = None
     if warm:
-        W0 = jnp.linalg.inv(jnp.asarray(np.asarray(candidates), dtype))
+        cand = jnp.asarray(np.asarray(candidates), dtype)
+        W0 = jnp.linalg.inv(cand)
         # a candidate can be rejected BECAUSE it is singular: those rows
         # get the cold start W = S + lam*I instead of a NaN iterate
         finite = jnp.all(jnp.isfinite(W0), axis=(1, 2), keepdims=True)
         cold = sub + lams_d[:, None, None] * jnp.eye(size, dtype=dtype)
         W0 = jnp.where(finite, W0, cold)
-    fn = compiled_bucket_solver(solver, size, dtype, warm=warm, opts_key=opts_key)
+        if theta_warm:
+            # the candidate IS the Theta seed — passing it spares the solver
+            # inverting W0 right back (a second O(size^3) for nothing);
+            # fallen-back rows get the matching cold Theta seed
+            eye = jnp.eye(size, dtype=bool)
+            diag = jnp.diagonal(sub, axis1=1, axis2=2)
+            cold_T = jnp.where(
+                eye[None], (1.0 / (diag + lams_d[:, None]))[:, :, None], 0.0
+            )
+            T0 = jnp.where(finite, cand, cold_T)
+    fn = compiled_bucket_solver(
+        solver, size, dtype, warm=warm, warm_theta=theta_warm, opts_key=opts_key
+    )
     bump("executor.dispatches")
+    if theta_warm:
+        return fn(sub, lams_d, W0, T0)
     return fn(sub, lams_d, W0) if warm else fn(sub, lams_d)
+
+
+def solve_sharded_bucket(
+    bucket: blocks_mod.Bucket,
+    lams: np.ndarray,
+    S,
+    *,
+    solver: str,
+    dtype,
+    opts_key: tuple,
+    tol: float,
+    warm_thetas: list | None = None,
+) -> tuple[np.ndarray, dict]:
+    """Mesh-spanning solve of one oversize bucket (route "sharded").
+
+    Per block: shard-direct gather (``stream.materialize.shard_gather`` —
+    the (b, b) block streams row-chunk by row-chunk into device shards, a
+    full host copy never exists), the sharded ADMM
+    (``core.solvers.glasso_sharded``), and its distributed KKT verdict.
+    Blocks whose residual exceeds ``tol * max(1, max|S|)`` fall back to a
+    SINGLE-DEVICE iterative solve warm-started from the rejected candidate
+    (the shared ``dispatch_repair``) — correct, but memory-bound, so it is
+    counted loudly: ``solver.oversize.fallbacks`` + ``router.fallback.
+    oversize``.  Returns (padded (n, size, size) Theta stack, info dict
+    {dispatched, inner_iters, fallbacks} for ``GlassoResult.oversize``).
+
+    Shared by the engine executor and the serving batcher, like
+    ``dispatch_repair`` — oversize admission behaves identically everywhere.
+    """
+    from repro.core.jax_compat import local_device_mesh
+    from repro.core.solvers.sharded import glasso_sharded
+    from repro.stream.materialize import shard_gather
+
+    mesh = local_device_mesh()
+    np_dtype = np.dtype(jnp.dtype(dtype).name)
+    n = len(bucket.comps)
+    out = np.zeros((n, bucket.size, bucket.size), dtype=np_dtype)
+    info = {"dispatched": 0, "inner_iters": 0, "fallbacks": 0}
+    failed: list[int] = []
+    for i, comp in enumerate(bucket.comps):
+        b = len(comp)
+        lam = float(lams[i])
+        S_sh = shard_gather(S, comp, mesh, dtype=np_dtype)
+        theta0 = None if warm_thetas is None else warm_thetas[i]
+        res = glasso_sharded(
+            S_sh, lam, mesh=mesh, b=b, Theta0=theta0, kkt_target=tol
+        )
+        info["dispatched"] += 1
+        info["inner_iters"] += res.inner_iters
+        padded = np.eye(bucket.size, dtype=np_dtype) / (1.0 + lam)
+        padded[:b, :b] = res.Theta
+        out[i] = padded
+        scale = max(1.0, res.s_max)
+        if not res.kkt_residual <= tol * scale:  # NaN-safe: not (nan <= x)
+            failed.append(i)
+    if failed:
+        idx = np.asarray(failed)
+        info["fallbacks"] = int(idx.size)
+        bump("solver.oversize.fallbacks", int(idx.size))
+        bump(f"router.fallback.{bucket.structure}", int(idx.size))
+        blocks = np.stack(
+            [
+                blocks_mod.pad_block(
+                    blocks_mod.gather_submatrix(
+                        S, bucket.comps[k], dtype=np_dtype
+                    ),
+                    bucket.size,
+                )
+                for k in idx
+            ]
+        )
+        fixed = dispatch_repair(
+            solver, dtype, opts_key, bucket.size, blocks,
+            np.asarray(lams)[idx], out[idx],
+        )
+        out[idx] = np.asarray(jax.block_until_ready(fixed))
+    return out, info
 
 
 def solve_chordal_bucket(
@@ -254,6 +374,9 @@ class BucketExecutor:
     # host->device re-upload of their bit-identical padded blocks.
     _prev_solutions: dict = field(default_factory=dict)
     _prev_blocks: dict = field(default_factory=dict)
+    # oversize accounting of the MOST RECENT solve_plan call (dispatched /
+    # inner_iters / fallbacks) — surfaced as GlassoResult.oversize
+    last_oversize: dict = field(default_factory=dict)
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -267,11 +390,30 @@ class BucketExecutor:
 
     # -- placement ---------------------------------------------------------
 
+    def _bucket_cost(self, bucket: blocks_mod.Bucket) -> float:
+        """Estimated DEVICE solve cost of one bucket: count x size^3 scaled
+        by the structure class's route, not just padded size.  A chordal
+        bucket solves on the HOST (zero device time — placing it as if it
+        cost n*b^3 starves a device for nothing), a closed-form bucket is
+        one fused elementwise pass (~b^2 per block), only the iterative tail
+        actually pays b^3-per-sweep on its device.  Sharded buckets span the
+        whole mesh and are not LPT-placed at all (cost 0 here; their device
+        time is accounted by the sharded dispatch itself)."""
+        from repro.engine.registry import route_for  # local: avoid cycle
+
+        route = route_for(bucket.structure) if self.route else "iterative"
+        n = len(bucket.comps)
+        if route in ("chordal", "sharded", "assemble"):
+            return 0.0
+        if route == "closed_form":
+            return n * float(bucket.size) ** 2
+        return n * float(bucket.size) ** 3
+
     def _place(self, buckets: list[blocks_mod.Bucket]) -> list:
-        """LPT assignment of buckets to local devices (b^3 * n_blocks cost)."""
+        """LPT assignment of buckets to local devices by estimated cost."""
         if len(self.devices) <= 1 or not buckets:
             return [None] * len(buckets)
-        cost = [b.blocks.shape[0] * float(b.size) ** 3 for b in buckets]
+        cost = [self._bucket_cost(b) for b in buckets]
         assign = lpt_assign(cost, len(self.devices), cost=float)
         return [self.devices[w] for w in assign.worker_of]
 
@@ -280,17 +422,22 @@ class BucketExecutor:
     def _warm_stack(
         self, bucket: blocks_mod.Bucket, key, lam: float, warm_W: np.ndarray | None
     ):
-        """W0 stack for one bucket, or None.
+        """(W0 stack, Theta0 stack or None) for one bucket, or (None, None).
 
         Reused bucket with a cached previous solution: W0 = inv(prev Theta)
         batched on device (the padded block of Theta is blkdiag, so its
-        inverse's padded diagonal is finite; it is then reset to 1+lam).
+        inverse's padded diagonal is finite; it is then reset to 1+lam), and
+        the previous Theta itself rides along as the Theta0 seed for solvers
+        whose spec consumes it (no second inversion inside the solver).
         Otherwise fall back to gathering from the dense warm_W (merged
         components: block-diagonal of the old sub-components, valid PD warm
-        start by Theorem 2)."""
+        start by Theorem 2) — no Theta stack there."""
+        T0 = None
         prev = self._prev_solutions.get(key)
         if prev is not None:
+            prev = jnp.asarray(prev, self.dtype)
             W0 = jnp.linalg.inv(prev)
+            T0 = prev
         elif warm_W is not None:
             stacks = []
             for c in bucket.comps:
@@ -298,7 +445,7 @@ class BucketExecutor:
                 stacks.append(blocks_mod.pad_block(blk, bucket.size))
             W0 = jnp.asarray(np.stack(stacks), self.dtype)
         else:
-            return None
+            return None, None
         # padded diagonal of a W iterate must be 1 + lam (diagonal KKT)
         idx = jnp.arange(bucket.size)
         pad_mask = jnp.stack(
@@ -308,7 +455,7 @@ class BucketExecutor:
         fix = pad_mask[:, :, None] & eye[None, :, :]
         W0 = jnp.where(fix, jnp.asarray(1.0 + lam, W0.dtype), W0)
         off = pad_mask[:, :, None] ^ pad_mask[:, None, :]
-        return jnp.where(off, jnp.zeros((), W0.dtype), W0)
+        return jnp.where(off, jnp.zeros((), W0.dtype), W0), T0
 
     # -- solve -------------------------------------------------------------
 
@@ -337,14 +484,23 @@ class BucketExecutor:
 
         if self.route and len(plan.isolated):
             bump("router.route.singleton", int(len(plan.isolated)))
+        self.last_oversize = {}
         placements = self._place(plan.buckets)
         pending: list[_Pending] = []
+        sharded_pending: list[_Pending] = []
         for bucket, device in zip(plan.buckets, placements):
             key = bucket_key(bucket)
-            n = bucket.blocks.shape[0]
+            n = len(bucket.comps)
             route = route_for(bucket.structure) if self.route else "iterative"
             if self.route:
                 bump(f"router.route.{bucket.structure}", n)
+            if route == "sharded":
+                # mesh-spanning blocking solve: queued after the async small
+                # buckets below so their dispatches are in flight first
+                p = _Pending(bucket=bucket, out=None, key=key)
+                pending.append(p)
+                sharded_pending.append(p)
+                continue
             if route == "chordal":
                 # host direct solve: no device round-trip for the candidate.
                 # KKT failures are known IMMEDIATELY (host), so their repair
@@ -387,21 +543,66 @@ class BucketExecutor:
                 continue
             if self.solver in WARM_START_SOLVERS:
                 use_key = key if key in reused_keys else None
-                W0 = self._warm_stack(bucket, use_key, lam, warm_W)
+                W0, T0 = self._warm_stack(bucket, use_key, lam, warm_W)
             else:
-                W0 = None  # solver discards W0: skip the batched inversions
+                W0 = T0 = None  # solver discards W0: skip the inversions
+            if not (T0 is not None and _theta_warm(self.solver)):
+                T0 = None
             if device is not None and W0 is not None:
                 W0 = jax.device_put(W0, device)
+                if T0 is not None:
+                    T0 = jax.device_put(T0, device)
             fn = compiled_bucket_solver(
                 self.solver,
                 bucket.size,
                 self.dtype,
                 warm=W0 is not None,
+                warm_theta=T0 is not None,
                 opts_key=self._opts_key,
             )
-            out = fn(stacked, lams, W0) if W0 is not None else fn(stacked, lams)
+            if T0 is not None:
+                out = fn(stacked, lams, W0, T0)
+            elif W0 is not None:
+                out = fn(stacked, lams, W0)
+            else:
+                out = fn(stacked, lams)
             bump("executor.dispatches")
             pending.append(_Pending(bucket=bucket, out=out, stacked=stacked, key=key))
+
+        # oversize buckets: mesh-spanning sharded solves, one blocking call
+        # per giant block, while the small async dispatches above are already
+        # in flight.  Warm start: a bucket reused from the previous lambda
+        # seeds Theta0 from its own previous padded solution (the dense
+        # warm_W path would require inverting a giant block on the host —
+        # exactly the allocation the route avoids).
+        totals = {"dispatched": 0, "inner_iters": 0, "fallbacks": 0}
+        for p in sharded_pending:
+            bucket = p.bucket
+            prev = (
+                self._prev_solutions.get(p.key) if p.key in reused_keys else None
+            )
+            warm_thetas = None
+            if prev is not None:
+                prev = np.asarray(prev)
+                warm_thetas = [
+                    prev[i][: len(c), : len(c)]
+                    for i, c in enumerate(bucket.comps)
+                ]
+            n = len(bucket.comps)
+            p.out, info = solve_sharded_bucket(
+                bucket,
+                np.full(n, lam),
+                S,
+                solver=self.solver,
+                dtype=self.dtype,
+                opts_key=self._opts_key,
+                tol=self.route_check_tol,
+                warm_thetas=warm_thetas,
+            )
+            for k in totals:
+                totals[k] += info[k]
+        if totals["dispatched"]:
+            self.last_oversize = totals
 
         # single synchronization point: everything above was async dispatch
         jax.block_until_ready(

@@ -89,6 +89,21 @@ class PathPlan:
     steps: list[PathStep] = field(default_factory=list)
 
 
+def _classifier(S, lam: float, oversize: int | None):
+    """Structure classifier with the oversize short-circuit.
+
+    The size check runs BEFORE graph classification: an oversize component
+    is sharded regardless of its subgraph shape, and running MCS/PEO on a
+    near-p component would cost more than any route it could unlock."""
+    def classify(c):
+        if oversize is not None and len(c) > oversize:
+            bump("structure.classified.oversize")
+            return "oversize"
+        return classify_component(S, c, lam)
+
+    return classify
+
+
 def build_plan_incremental(
     S: np.ndarray,
     lam: float,
@@ -97,6 +112,7 @@ def build_plan_incremental(
     prev: blocks_mod.Plan | None = None,
     dtype=np.float64,
     classify_structures: bool = True,
+    oversize: int | None = None,
 ) -> tuple[blocks_mod.Plan, frozenset]:
     """``blocks.build_plan`` with bucket reuse against a previous plan.
 
@@ -107,12 +123,15 @@ def build_plan_incremental(
     from real screening (screen=False forces one global pseudo-component,
     which is not connected — the classifier's precondition).
 
+    ``oversize`` is the single-device block-size cap (``blocks.
+    oversize_threshold``): larger components are classed "oversize" and
+    carry no host block stack — the executor's sharded route gathers them
+    straight into device shards.
+
     Returns (plan, reused bucket keys)."""
     bump("planner.plans_built")
     comps = component_lists(labels)
-    classify = (
-        (lambda c: classify_component(S, c, lam)) if classify_structures else None
-    )
+    classify = _classifier(S, lam, oversize) if classify_structures else None
     isolated, by_key = blocks_mod.group_components(comps, classify=classify)
     prev_by_key = (
         {bucket_key(b): b for b in prev.buckets} if prev is not None else {}
@@ -147,7 +166,12 @@ def build_plan_incremental(
 
 
 def plan_path(
-    S: np.ndarray, lambdas, *, dtype=np.float64, classify_structures: bool = True
+    S: np.ndarray,
+    lambdas,
+    *,
+    dtype=np.float64,
+    classify_structures: bool = True,
+    oversize: int | None = None,
 ) -> PathPlan:
     """Plan a whole descending-lambda path with one partition pass.
 
@@ -167,7 +191,7 @@ def plan_path(
         t1 = time.perf_counter()
         plan, reused = build_plan_incremental(
             S, lam, labels, prev=prev_plan, dtype=dtype,
-            classify_structures=classify_structures,
+            classify_structures=classify_structures, oversize=oversize,
         )
         stats = _screen_stats(
             labels, lam, sorted_w, snap_seconds + (time.perf_counter() - t1)

@@ -29,10 +29,22 @@ bucket by the planner via ``engine.structure``) -> executor route:
     "tree"      -> "closed_form"  batched Fattahi-Sojoudi forest kernel
     "chordal"   -> "chordal"      host clique-tree direct solve
     "general"   -> "iterative"    the configured bcd/pg/admm solver
+    "oversize"  -> "sharded"      mesh-spanning solve for blocks past the
+                                  per-device memory budget (planner class,
+                                  assigned by size threshold before any
+                                  graph classification)
 
 Every non-iterative route is KKT-verified by the executor and falls back to
 "iterative" on failure, so re-routing a class (``set_route``) can change
-cost but never correctness.
+cost but never correctness.  (The sharded route's fallback solves the block
+on ONE device — correct but memory-bound, counted in
+``solver.oversize.fallbacks``.)
+
+The third registry is the SOLVER protocol (``core.solvers.protocol``,
+re-exported here so all three extension points share one import):
+capability-tagged ``SolverSpec``s — batched / warm_startable / sharded —
+that the executor consults instead of hard-coded name sets.  Register a new
+solver with ``register_solver(SolverSpec(name=..., fn=..., ...))``.
 """
 
 from __future__ import annotations
@@ -42,6 +54,12 @@ from typing import Callable
 import numpy as np
 
 from repro.core.instrument import bump
+from repro.core.solvers.protocol import (  # noqa: F401  (re-export surface)
+    SolverSpec,
+    available_solvers,
+    register_solver,
+    solver_spec,
+)
 
 CCBackend = Callable[..., np.ndarray]
 
@@ -88,8 +106,9 @@ def label_components(S, lam: float, *, backend: str = "host", **opts) -> np.ndar
 # ---------------------------------------------------------------------------
 
 #: executor routes, cheapest first; "iterative" is the ladder's tail and the
-#: fallback target of every verified fast path
-ROUTES = ("assemble", "closed_form", "chordal", "iterative")
+#: fallback target of every verified fast path ("sharded" blocks fall back
+#: to a single-device iterative solve — correct, but memory-bound)
+ROUTES = ("assemble", "closed_form", "chordal", "iterative", "sharded")
 
 _ROUTE_OF: dict[str, str] = {
     "singleton": "assemble",
@@ -97,6 +116,7 @@ _ROUTE_OF: dict[str, str] = {
     "tree": "closed_form",
     "chordal": "chordal",
     "general": "iterative",
+    "oversize": "sharded",
 }
 
 

@@ -37,8 +37,12 @@ import numpy as np
 
 from repro.core.instrument import bump
 
-#: the routing ladder's structure classes, fastest solver first
-STRUCTURES = ("singleton", "pair", "tree", "chordal", "general")
+#: the routing ladder's structure classes, fastest solver first.  "oversize"
+#: is assigned by the PLANNER (size threshold from the device memory budget,
+#: checked before any graph classification — running MCS on a giant
+#: component would cost more than it could ever save), never by
+#: ``classify_component``; it routes to the mesh-spanning sharded solver.
+STRUCTURES = ("singleton", "pair", "tree", "chordal", "general", "oversize")
 
 
 def component_adjacency(S: np.ndarray, comp: np.ndarray, lam: float) -> np.ndarray:

@@ -1,0 +1,5 @@
+from repro.kernels.shard_prox.ops import fused_prox_residual
+from repro.kernels.shard_prox.ref import fused_prox_ref
+from repro.kernels.shard_prox.shard_prox import fused_prox_pallas
+
+__all__ = ["fused_prox_residual", "fused_prox_ref", "fused_prox_pallas"]

@@ -1,0 +1,36 @@
+"""Reference (pure jnp) fused prox step for the sharded oversize solver.
+
+One linearized-ADMM iteration ends with four elementwise passes over the
+local (rows_local, b) shard of the iterate:
+
+    A      = X_new + U                       (prox argument)
+    Z_new  = soft(A, lam / rho)              (diagonal penalized too — the
+                                              full-L1 convention of eq. (1))
+    U_new  = A - Z_new                       (scaled-dual update, algebraically
+                                              identical to U + X_new - Z_new)
+    rp2    = sum((X_new - Z_new)^2)          (local primal-residual partial)
+    rd2    = sum((Z_new - Z_old)^2)          (local dual-residual partial,
+                                              scaled by rho at the call site)
+
+The Pallas kernel fuses all four into one read and one write of the shard;
+this module is the semantics — the off-TPU dispatch target and the
+pallas-vs-ref test oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_prox_ref(
+    x_new: jax.Array, u: jax.Array, z_old: jax.Array, t
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Returns (Z_new, U_new, rp2_partial, rd2_partial) for one shard."""
+    t = jnp.asarray(t, x_new.dtype)
+    a = x_new + u
+    z_new = jnp.sign(a) * jnp.maximum(jnp.abs(a) - t, 0.0)
+    u_new = a - z_new
+    rp2 = jnp.sum((x_new - z_new) ** 2)
+    rd2 = jnp.sum((z_new - z_old) ** 2)
+    return z_new, u_new, rp2, rd2

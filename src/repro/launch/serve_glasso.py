@@ -45,7 +45,17 @@ Counters (repro.core.instrument):
     serve.data_requests       submit_data admissions (streamed screening)
     serve.session_updates     append_rows incremental re-screens
 (``serve_stats()`` also surfaces the stream.* counters backing the data
-path: tiles scheduled/skipped/rescreened, edges emitted, bytes peak.)
+path — tiles scheduled/skipped/rescreened, edges emitted, bytes peak — and
+the solver.oversize.* counters backing sharded giant-component admission.)
+
+OVERSIZE ADMISSION (``oversize_threshold`` / ``oversize_budget_mb``): a
+request whose screen leaves a component past the single-device block cap is
+still admitted — the planner classes it "oversize", the admission fast path
+declines it (a mesh-wide solve is not microseconds-cheap), and the batcher
+dispatches it down the executor's sharded route: shard-direct gather, the
+mesh-spanning no-eigh ADMM, distributed KKT verification, single-device
+iterative fallback on rejection.  ``GlassoResult.oversize`` carries the
+per-request {dispatched, inner_iters, fallbacks}.
 """
 
 from __future__ import annotations
@@ -112,11 +122,15 @@ class GlassoServer:
         route: bool = True,
         fast_path: bool = True,
         route_check_tol: float = 1e-6,
+        oversize_threshold: int | None = None,
+        oversize_budget_mb: float | str | None = None,
         **solver_opts,
     ):
         import jax.numpy as jnp
+        import numpy as _np
 
         from repro.core.solvers import SOLVERS
+        from repro.engine.api import resolve_oversize
         from repro.engine.executor import BucketExecutor, _validate_solver_opts
 
         if solver not in SOLVERS:
@@ -132,6 +146,14 @@ class GlassoServer:
         self.route = route
         self.fast_path = fast_path and route
         self.route_check_tol = route_check_tol
+        # single-device block cap: larger components are ADMITTED (not
+        # rejected) and routed down the mesh-spanning sharded path by the
+        # batcher — an oversize request just never takes the synchronous
+        # admission fast path (a mesh-wide solve is not "microseconds-cheap")
+        self.oversize = resolve_oversize(
+            oversize_threshold, oversize_budget_mb,
+            _np.dtype(jnp.dtype(self.dtype).name), route=route,
+        )
         self.solver_opts = solver_opts
         self._opts_key = tuple(sorted(solver_opts.items()))
         # admission-time fast-path solver: a stateless ladder executor (the
@@ -236,17 +258,20 @@ class GlassoServer:
         bump("serve.data_requests")
         try:
             if session is not None:
-                ses = DataSession(X, lam, config=stream)
+                ses = DataSession(X, lam, config=stream, oversize=self.oversize)
                 req.S, req.labels, req.stats = ses.S, ses.labels, ses.stats
                 with self._sessions_lock:
                     self._sessions[session] = _SessionEntry(
                         session=ses, last=req.future
                     )
             else:
-                sc = stream_screen(X, [float(lam)], config=stream)
+                sc = stream_screen(
+                    X, [float(lam)], config=stream, oversize=self.oversize
+                )
                 req.S, req.labels, req.stats = sc.S, sc.labels[0], sc.stats[0]
             req.plan, _ = build_plan_incremental(
-                req.S, req.lam, req.labels, classify_structures=self.route
+                req.S, req.lam, req.labels, classify_structures=self.route,
+                oversize=self.oversize,
             )
         except Exception as e:
             req.future.set_exception(e)
@@ -299,11 +324,35 @@ class GlassoServer:
                 up = entry.session.append_rows(Y)
                 plan, _ = build_plan_incremental(
                     up.S, entry.session.lam, up.labels,
-                    classify_structures=self.route,
+                    classify_structures=self.route, oversize=self.oversize,
                 )
                 warm_W = None
                 if prev is not None and self.solver in WARM_START_SOLVERS:
-                    warm_W = blockwise_inverse(prev.labels, prev.Theta)
+                    # warm-start only the iterative-routed buckets (same
+                    # restriction as the engine path): inverting an OVERSIZE
+                    # block on the host would cost exactly the O(b^3) memory/
+                    # compute the sharded route exists to avoid — and the
+                    # sharded dispatch ignores warm_W anyway
+                    from repro.engine.registry import route_for
+
+                    needed = np.zeros(up.S.shape[0], dtype=bool)
+                    for b in plan.buckets:
+                        if not self.route or route_for(b.structure) == "iterative":
+                            for c in b.comps:
+                                needed[c] = True
+                    if self.oversize is not None and needed.any():
+                        # a split can hand an old giant's vertex to a small
+                        # new bucket; blockwise_inverse works on the OLD
+                        # partition, so old oversize components stay excluded
+                        from repro.core.components import component_lists
+
+                        for comp in component_lists(prev.labels):
+                            if comp.size > self.oversize:
+                                needed[comp] = False
+                    if needed.any():
+                        warm_W = blockwise_inverse(
+                            prev.labels, prev.Theta, needed
+                        )
                 t0 = time.perf_counter()
                 Theta = self._session_executor.solve_plan(
                     plan, entry.session.lam, up.S, warm_W=warm_W
@@ -313,6 +362,7 @@ class GlassoServer:
                     _result(
                         plan, up.labels, up.stats, Theta, seconds, self.solver,
                         entry.session.lam, routed=self.route,
+                        oversize=self._session_executor.last_oversize,
                     )
                 )
             except Exception as e:
@@ -339,7 +389,9 @@ class GlassoServer:
             labels, stats = thresholded_components(
                 req.S, req.lam, backend=self.cc_backend
             )
-            plan, _ = build_plan_incremental(req.S, req.lam, labels)
+            plan, _ = build_plan_incremental(
+                req.S, req.lam, labels, oversize=self.oversize
+            )
             req.labels, req.stats, req.plan = labels, stats, plan
             return self._solve_if_fastpath(req)
         except Exception as e:  # pragma: no cover - defensive
@@ -352,7 +404,12 @@ class GlassoServer:
         from repro.engine.api import _result
         from repro.engine.registry import route_for
 
-        if any(route_for(b.structure) == "iterative" for b in req.plan.buckets):
+        if any(
+            route_for(b.structure) in ("iterative", "sharded")
+            for b in req.plan.buckets
+        ):
+            # sharded blocks are mesh-wide blocking solves — never admission-
+            # synchronous; they queue for the batcher like iterative work
             return False
         t0 = time.perf_counter()
         Theta = self._fast_executor.solve_plan(req.plan, req.lam, req.S)
@@ -422,6 +479,7 @@ class GlassoServer:
             compiled_closed_form,
             dispatch_repair,
             solve_chordal_bucket,
+            solve_sharded_bucket,
         )
         from repro.engine.planner import build_plan_incremental
         from repro.engine.registry import route_for
@@ -437,7 +495,8 @@ class GlassoServer:
                     req.S, req.lam, backend=self.cc_backend
                 )
                 plan, _ = build_plan_incremental(
-                    req.S, req.lam, labels, classify_structures=self.route
+                    req.S, req.lam, labels, classify_structures=self.route,
+                    oversize=self.oversize,
                 )
             per_req.append((req, labels, stats, plan))
             for bucket in plan.buckets:
@@ -451,19 +510,49 @@ class GlassoServer:
         # stacked across requests; all dispatched before any blocking
         outs: dict[tuple[int, str], object] = {}
         oks: dict[tuple[int, str], object] = {}
+        oversize_by_req: dict[int, dict] = {}
         for (size, route), placed in sorted(groups.items()):
-            n_blocks = sum(pb.bucket.blocks.shape[0] for pb in placed)
+            n_blocks = sum(len(pb.bucket.comps) for pb in placed)
             lams_h = np.concatenate(
                 [
-                    np.full(pb.bucket.blocks.shape[0], pb.request.lam)
+                    np.full(len(pb.bucket.comps), pb.request.lam)
                     for pb in placed
                 ]
             )
+            if route == "sharded":
+                # mesh-spanning blocking solves; KKT verification + the
+                # single-device fallback happen inside solve_sharded_bucket,
+                # so the group carries no ok flags to the repair pass below
+                stacks = []
+                for pb in placed:
+                    n = len(pb.bucket.comps)
+                    out_pb, info = solve_sharded_bucket(
+                        pb.bucket,
+                        np.full(n, pb.request.lam),
+                        pb.request.S,
+                        solver=self.solver,
+                        dtype=self.dtype,
+                        opts_key=self._opts_key,
+                        tol=self.route_check_tol,
+                    )
+                    stacks.append(out_pb)
+                    acc = oversize_by_req.setdefault(
+                        id(pb.request),
+                        {"dispatched": 0, "inner_iters": 0, "fallbacks": 0},
+                    )
+                    for k in acc:
+                        acc[k] += info[k]
+                outs[(size, route)] = np.concatenate(stacks)
+                bump("serve.dispatches")
+                n_reqs = len({id(pb.request) for pb in placed})
+                if n_reqs > 1:
+                    bump("serve.coalesced_blocks", n_blocks)
+                continue
             if route == "chordal":
                 solved = [
                     solve_chordal_bucket(
                         pb.bucket,
-                        np.full(pb.bucket.blocks.shape[0], pb.request.lam),
+                        np.full(len(pb.bucket.comps), pb.request.lam),
                         tol=self.route_check_tol,
                     )
                     for pb in placed
@@ -520,7 +609,7 @@ class GlassoServer:
             rows = [
                 (pb, i)
                 for pb in groups[gkey]
-                for i in range(pb.bucket.blocks.shape[0])
+                for i in range(len(pb.bucket.comps))
             ]
             blocks_failed = np.stack(
                 [np.asarray(rows[k][0].bucket.blocks)[rows[k][1]] for k in idx]
@@ -545,7 +634,7 @@ class GlassoServer:
             sols = np.asarray(outs[gkey])
             k = 0
             for pb in placed:
-                n = pb.bucket.blocks.shape[0]
+                n = len(pb.bucket.comps)
                 sols_by_bucket[id(pb.bucket)] = sols[k : k + n]
                 k += n
 
@@ -567,14 +656,17 @@ class GlassoServer:
                 _result(
                     plan, labels, stats, Theta, seconds * share, self.solver,
                     req.lam, routed=self.route,
+                    oversize=oversize_by_req.get(id(req)),
                 )
             )
 
 
 def serve_stats() -> dict[str, int]:
     """serve.* counters plus the stream.* counters behind the data-matrix
-    admission path (tiles scheduled/skipped/rescreened, edges, bytes peak)."""
-    return {**counts("serve."), **counts("stream.")}
+    admission path (tiles scheduled/skipped/rescreened, edges, bytes peak)
+    and the solver.oversize.* counters behind sharded giant-component
+    admission (dispatched / cg_iters / fallbacks / device_bytes_peak)."""
+    return {**counts("serve."), **counts("stream."), **counts("solver.oversize.")}
 
 
 # ---------------------------------------------------------------------------

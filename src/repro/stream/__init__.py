@@ -13,7 +13,11 @@ solvers actually consume are gathered (DESIGN.md Section 10).
 """
 
 from repro.stream.config import StreamConfig, as_config
-from repro.stream.materialize import MaterializedCovariance, materialize_components
+from repro.stream.materialize import (
+    MaterializedCovariance,
+    materialize_components,
+    shard_gather,
+)
 from repro.stream.path import plan_path_from_screen, plan_path_streaming
 from repro.stream.screen import StreamScreen, stream_screen
 from repro.stream.session import DataSession, SessionUpdate
@@ -23,6 +27,7 @@ __all__ = [
     "as_config",
     "MaterializedCovariance",
     "materialize_components",
+    "shard_gather",
     "plan_path_from_screen",
     "plan_path_streaming",
     "StreamScreen",

@@ -7,20 +7,28 @@ entries any plan on the grid can request is exactly the per-component
 sub-blocks S[C, C] of that COARSEST partition.  ``materialize_components``
 gathers them straight from X (centered column gather + one small Gram per
 component, the same arithmetic as the dense estimator), and
-``MaterializedCovariance`` serves them through the two-method gather
-protocol (``gather_block`` / ``diag_at``) that ``core.blocks`` and
-``engine.structure`` dispatch on — the planner, executor, classifier, and
-assembler consume materialized blocks UNCHANGED, never a (p, p) array.
+``MaterializedCovariance`` serves them through the gather protocol
+(``gather_block`` / ``gather_block_rows`` / ``diag_at``) that
+``core.blocks`` and ``engine.structure`` dispatch on — the planner,
+executor, classifier, and assembler consume materialized blocks UNCHANGED,
+never a (p, p) array.
 
-Memory: sum of block sizes squared (what the solve stage holds anyway) plus
-an O(n * max_comp) gather scratch per component.
+OVERSIZE components (larger than the planner's single-device threshold) are
+DEFERRED: no host block is built at all — only the component's index set is
+recorded, and ``shard_gather`` later streams the block straight from X into
+row shards on the device mesh, one (b/d, b) chunk at a time.  The full
+(b, b) host copy of a giant component never exists anywhere on the host;
+host peak for it is one row chunk plus the O(n * b) centered column gather.
+
+Memory: sum of materialized block sizes squared (what the solve stage holds
+anyway) plus an O(n * max_comp) gather scratch per component.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.instrument import set_peak
+from repro.core.instrument import bump, set_peak
 
 
 class MaterializedCovariance:
@@ -28,36 +36,62 @@ class MaterializedCovariance:
 
     Supports exactly the access patterns the Plan->Execute pipeline uses:
     ``shape``, ``gather_block(idx)`` for same-component index sets (bucket
-    padding, structure classification), and ``diag_at(idx)`` (isolated-vertex
-    assembly).  Cross-component off-block entries do not exist — by
-    Theorem 1 they are never needed; asking for them is a bug and raises.
+    padding, structure classification), ``gather_block_rows(rows, cols)``
+    (the sharded route's chunked fetch), and ``diag_at(idx)``
+    (isolated-vertex assembly).  Cross-component off-block entries do not
+    exist — by Theorem 1 they are never needed; asking for them is a bug and
+    raises.  DEFERRED (oversize) components keep no host block: their
+    entries are recomputed from the retained (X, mu) restriction on demand,
+    which the sharded gather does row-chunk by row-chunk.
     """
 
     def __init__(
         self, p: int, diag: np.ndarray, blocks: dict[int, np.ndarray],
         root_of: np.ndarray, pos_in: np.ndarray,
+        deferred: dict[int, np.ndarray] | None = None,
     ):
         self.p = int(p)
         self._diag = diag
         self._blocks = blocks          # component root -> (b, b) block
         self._root_of = root_of        # vertex -> component root
         self._pos_in = pos_in          # vertex -> row within its block
+        # component root -> centered X[:, comp] columns (n, b)
+        self._deferred = deferred or {}
         self.dtype = diag.dtype
 
     @property
     def shape(self) -> tuple[int, int]:
         return (self.p, self.p)
 
-    def gather_block(self, idx: np.ndarray) -> np.ndarray:
-        idx = np.asarray(idx)
+    def _common_root(self, idx: np.ndarray) -> int:
         roots = self._root_of[idx]
         root = int(roots[0])
         if not (roots == root).all():
             raise ValueError(
-                "gather_block called across components — Theorem 1 says no "
-                "stage should ever need those entries"
+                "gather called across components — Theorem 1 says no stage "
+                "should ever need those entries"
             )
+        return root
+
+    def _deferred_rows(self, root: int, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        """S[rows, cols] of a deferred component, from the retained centered
+        columns: one (len(rows), len(cols)) Gram chunk, exact diagonal."""
+        Xc = self._deferred[root]
+        pos = self._pos_in
+        out = (Xc[:, pos[rows]].T @ Xc[:, pos[cols]]) / Xc.shape[0]
+        same = rows[:, None] == cols[None, :]
+        if same.any():
+            ri, ci = np.nonzero(same)
+            out[ri, ci] = self._diag[rows[ri]]
+        return out.astype(self.dtype, copy=False)
+
+    def gather_block(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        root = self._common_root(idx)
         blk = self._blocks.get(root)
+        if blk is None and root in self._deferred:
+            bump("stream.deferred_gathers")
+            return self._deferred_rows(root, idx, idx)
         if blk is None:  # all-isolated gather (diagonal only)
             out = np.zeros((idx.size, idx.size), dtype=self.dtype)
             np.fill_diagonal(out, self._diag[idx])
@@ -65,11 +99,31 @@ class MaterializedCovariance:
         pos = self._pos_in[idx]
         return blk[np.ix_(pos, pos)]
 
+    def gather_block_rows(self, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        root = self._common_root(np.concatenate([rows, cols]))
+        blk = self._blocks.get(root)
+        if blk is None and root in self._deferred:
+            bump("stream.deferred_gathers")
+            return self._deferred_rows(root, rows, cols)
+        if blk is None:
+            out = np.zeros((rows.size, cols.size), dtype=self.dtype)
+            same = rows[:, None] == cols[None, :]
+            ri, ci = np.nonzero(same)
+            out[ri, ci] = self._diag[rows[ri]]
+            return out
+        return blk[np.ix_(self._pos_in[rows], self._pos_in[cols])]
+
     def diag_at(self, idx) -> np.ndarray:
         return self._diag[idx]
 
     def nbytes(self) -> int:
-        return self._diag.nbytes + sum(b.nbytes for b in self._blocks.values())
+        return (
+            self._diag.nbytes
+            + sum(b.nbytes for b in self._blocks.values())
+            + sum(Xc.nbytes for Xc in self._deferred.values())
+        )
 
 
 def materialize_components(
@@ -79,6 +133,7 @@ def materialize_components(
     labels: np.ndarray,
     *,
     dtype=np.float64,
+    oversize: int | None = None,
 ) -> MaterializedCovariance:
     """Gather S[C, C] for every non-singleton component of ``labels``.
 
@@ -87,7 +142,12 @@ def materialize_components(
     pipelines solve numerically identical subproblems (bit-identical on
     exactly-representable data).  The (p,) ``diag`` comes from the moments
     pass; block diagonals are overwritten with it so isolated-vertex
-    assembly and block solves see one consistent S_ii."""
+    assembly and block solves see one consistent S_ii.
+
+    Components larger than ``oversize`` are DEFERRED: only their centered
+    column restriction (n x b, the gather scratch that exists transiently
+    anyway) is retained, and the (b, b) block is never formed on the host —
+    ``shard_gather`` later streams it chunk-wise into device shards."""
     from repro.core.components import component_lists
 
     X = np.asarray(X)
@@ -95,17 +155,66 @@ def materialize_components(
     root_of = np.asarray(labels, dtype=np.int64)
     pos_in = np.zeros(p, dtype=np.int64)
     blocks: dict[int, np.ndarray] = {}
+    deferred: dict[int, np.ndarray] = {}
     for comp in component_lists(labels):
         pos_in[comp] = np.arange(comp.size)
         if comp.size == 1:
             continue
         Xc = X[:, comp].astype(dtype, copy=False) - mu[comp].astype(dtype)
+        if oversize is not None and comp.size > oversize:
+            deferred[int(root_of[comp[0]])] = Xc
+            bump("stream.deferred_components")
+            continue
         B = (Xc.T @ Xc) / n
         B = 0.5 * (B + B.T)
         np.fill_diagonal(B, diag[comp].astype(dtype))
         blocks[int(root_of[comp[0]])] = B
     mat = MaterializedCovariance(
-        p, diag.astype(dtype), blocks, root_of, pos_in
+        p, diag.astype(dtype), blocks, root_of, pos_in, deferred
     )
     set_peak("stream.bytes_peak", mat.nbytes())
     return mat
+
+
+def shard_gather(S, comp: np.ndarray, mesh, *, axis: str = "data", dtype=None):
+    """Gather S[comp, comp] STRAIGHT into row shards on the mesh.
+
+    The sharded oversize route's loader: for each device d owning padded
+    rows [d*rl, (d+1)*rl), fetch just that (rl, b) row chunk through the
+    gather protocol (``blocks.gather_submatrix_rows`` — dense slices, a
+    materialized block's row view, or a deferred streamed component's
+    on-the-fly Gram chunk), identity-pad it to (rl, bp), and place it on its
+    device; the shards assemble into one row-sharded (bp, bp) jax array via
+    ``make_array_from_single_device_arrays``.  Host peak is ONE row chunk —
+    the full (b, b) block never exists on the host, which is what lets a
+    giant component stream from X into the mesh within budget."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core.blocks import gather_submatrix_rows
+    from repro.core.solvers.sharded import mesh_axis_size, sharded_pad_size
+
+    comp = np.asarray(comp)
+    b = comp.size
+    d = mesh_axis_size(mesh, axis)
+    bp = sharded_pad_size(b, d)
+    rl = bp // d
+    np_dtype = np.dtype("float64" if dtype is None else np.dtype(dtype).name)
+    sharding = NamedSharding(mesh, P(axis, None))
+    devices = list(mesh.devices.flatten())
+    shards = []
+    for k, dev in enumerate(devices):
+        lo, hi = k * rl, (k + 1) * rl
+        chunk = np.zeros((rl, bp), dtype=np_dtype)
+        n_true = max(0, min(hi, b) - lo)
+        if n_true:
+            chunk[:n_true, :b] = gather_submatrix_rows(
+                S, comp[lo : lo + n_true], comp, dtype=np_dtype
+            )
+        pad_rows = np.arange(max(lo, b), hi)  # identity rows past the block
+        chunk[pad_rows - lo, pad_rows] = 1.0
+        shards.append(jax.device_put(chunk, dev))
+        bump("stream.shard_chunks")
+    return jax.make_array_from_single_device_arrays(
+        (bp, bp), sharding, shards
+    )

@@ -19,7 +19,11 @@ from repro.stream.screen import StreamScreen, stream_screen
 
 
 def plan_path_from_screen(
-    sc: StreamScreen, *, dtype=np.float64, classify_structures: bool = True
+    sc: StreamScreen,
+    *,
+    dtype=np.float64,
+    classify_structures: bool = True,
+    oversize: int | None = None,
 ) -> PathPlan:
     """Build the per-lambda plans over an existing streamed screen."""
     if sc.S is None:
@@ -32,7 +36,7 @@ def plan_path_from_screen(
     for lam, labels, stats in zip(sc.lambdas, sc.labels, sc.stats):
         plan, reused = build_plan_incremental(
             sc.S, lam, labels, prev=prev_plan, dtype=dtype,
-            classify_structures=classify_structures,
+            classify_structures=classify_structures, oversize=oversize,
         )
         path.steps.append(
             PathStep(
@@ -51,16 +55,20 @@ def plan_path_streaming(
     config=None,
     dtype=np.float64,
     classify_structures: bool = True,
+    oversize: int | None = None,
 ) -> tuple[PathPlan, StreamScreen]:
     """Screen X out-of-core at every lambda and plan the whole path.
 
     Returns (path, screen) — the screen carries the streamed edges, moments,
     and counters for callers that want them (serving sessions, benchmarks).
+    ``oversize`` (single-device block cap) defers giant components to the
+    sharded route: no host block, shard-direct gather at solve time.
     """
-    sc = stream_screen(X, lambdas, config=config)
+    sc = stream_screen(X, lambdas, config=config, oversize=oversize)
     return (
         plan_path_from_screen(
-            sc, dtype=dtype, classify_structures=classify_structures
+            sc, dtype=dtype, classify_structures=classify_structures,
+            oversize=oversize,
         ),
         sc,
     )

@@ -77,8 +77,14 @@ def stream_screen(
     config=None,
     keep_tile_stats: bool = False,
     materialize: bool = True,
+    oversize: int | None = None,
 ) -> StreamScreen:
-    """Screen (X, every lambda) out-of-core; see the module docstring."""
+    """Screen (X, every lambda) out-of-core; see the module docstring.
+
+    ``oversize`` is the planner's single-device block-size cap: components
+    larger than it are materialized DEFERRED (no host block — the sharded
+    solve route streams them chunk-wise into device shards via
+    ``materialize.shard_gather``)."""
     cfg = as_config(config)
     t0 = time.perf_counter()
     X = np.asarray(X)
@@ -160,7 +166,9 @@ def stream_screen(
         # O(#edges) work per call — that incremental structure is the
         # session layer's tool, where edge sets arrive per-tile
         # (stream.session / stream.unionfind).
-        S = materialize_components(X, moments.mu, moments.diag, labels[-1])
+        S = materialize_components(
+            X, moments.mu, moments.diag, labels[-1], oversize=oversize
+        )
         local_peak = max(local_peak, base_bytes + acc.bytes_held() + S.nbytes())
         set_peak("stream.bytes_peak", local_peak)
     for st in stats_list:

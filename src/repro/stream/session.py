@@ -66,10 +66,16 @@ class SessionUpdate:
 class DataSession:
     """Streaming screen state for one evolving dataset at one lambda."""
 
-    def __init__(self, X: np.ndarray, lam: float, *, config=None):
+    def __init__(
+        self, X: np.ndarray, lam: float, *, config=None,
+        oversize: int | None = None,
+    ):
         self.lam = float(lam)
         self.config = as_config(config)
         self.X = np.asarray(X)
+        # single-device block cap: components past it materialize DEFERRED
+        # (sharded route gathers them chunk-wise at solve time)
+        self.oversize = oversize
         # append_rows mutates X/moments/tiles/labels as one transaction;
         # concurrent appends (serving exposes sessions to many clients)
         # must serialize or certificates detach from the moments they
@@ -77,7 +83,8 @@ class DataSession:
         self._lock = threading.Lock()
         bump("stream.sessions")
         sc = stream_screen(
-            self.X, [self.lam], config=self.config, keep_tile_stats=True
+            self.X, [self.lam], config=self.config, keep_tile_stats=True,
+            oversize=oversize,
         )
         self.moments = sc.moments
         self.tiles = sc.tiles            # (ti, tj) -> TileRecord
@@ -211,7 +218,8 @@ class DataSession:
         bump("stream.session_components_touched", components_touched)
 
         S = materialize_components(
-            X2, new_moments.mu, new_moments.diag, labels
+            X2, new_moments.mu, new_moments.diag, labels,
+            oversize=self.oversize,
         )
         _, counts = np.unique(labels, return_counts=True)
         stats = ScreenStats(

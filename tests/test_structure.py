@@ -61,7 +61,13 @@ def test_known_classes():
 
 
 def test_structures_tuple_is_the_ladder():
-    assert STRUCTURES == ("singleton", "pair", "tree", "chordal", "general")
+    assert STRUCTURES == (
+        "singleton", "pair", "tree", "chordal", "general", "oversize"
+    )
+    # "oversize" is planner-assigned (size threshold), never by the classifier
+    from repro.engine.registry import route_for
+
+    assert route_for("oversize") == "sharded"
 
 
 # ------------------------------------------------------------ vs networkx
