@@ -79,6 +79,12 @@ def smoke() -> None:
     for cls in ("singleton", "pair", "tree", "chordal", "general"):
         assert mix.get(cls, 0) > 0, f"ladder class {cls!r} never routed"
     print(f"smoke: routing ladder matches iterative on all classes ({mix})")
+
+    # joint multi-class gates: lam2=0 == K independent glasso; hybrid-
+    # screened == unscreened joint (both penalties, zero fallbacks)
+    from benchmarks import bench_joint
+
+    bench_joint.smoke()
     print("smoke: OK")
 
 

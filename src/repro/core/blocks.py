@@ -231,16 +231,25 @@ def solve_bucket(
 
 
 def assemble_dense(
-    plan: Plan, bucket_solutions: list[np.ndarray], S: np.ndarray
+    plan: Plan, bucket_solutions: list[np.ndarray], S: np.ndarray, *,
+    out: np.ndarray | None = None,
 ) -> np.ndarray:
     """Scatter per-component solutions back into the global dense Theta.
 
     Buckets whose members all share one size scatter with a single fancy-
     index assignment per bucket — on large-lambda plans (thousands of tiny
     components) the per-component python loop was a measurable slice of the
-    whole solve stage."""
+    whole solve stage.
+
+    ``out``, when given, must be a ZERO-INITIALIZED (p, p) buffer to
+    assemble into — the joint assembler hands per-class views of one
+    (K, p, p) allocation so the dense stack is written exactly once
+    (a stack-of-K-results copy at p=2400 costs more than the scatter)."""
     p = plan.p
-    Theta = np.zeros((p, p), dtype=np.asarray(bucket_solutions[0]).dtype if bucket_solutions else np.float64)
+    if out is not None:
+        Theta = out
+    else:
+        Theta = np.zeros((p, p), dtype=np.asarray(bucket_solutions[0]).dtype if bucket_solutions else np.float64)
     if len(plan.isolated):
         Theta[plan.isolated, plan.isolated] = 1.0 / (
             gather_diag(S, plan.isolated) + plan.lam

@@ -337,6 +337,24 @@ def solve_chordal_bucket(
     return thetas, ok
 
 
+def compiled_cached(key: tuple, builder):
+    """Fetch-or-build an arbitrary executable in the process-global compiled
+    cache (hit/miss counted like every other entry).  The extension point
+    the JOINT executor uses: its bucket keys gain the class count K and the
+    penalty, but the cache, its lock, and its stats stay one thing — a
+    serving mix of single-class and joint requests shares one steady
+    state."""
+    with _CACHE_LOCK:
+        fn = _COMPILED.get(key)
+        if fn is not None:
+            bump("executor.compiled_hit")
+            return fn
+        bump("executor.compiled_miss")
+        fn = builder()
+        _COMPILED[key] = fn
+        return fn
+
+
 def compiled_cache_stats() -> dict[str, int]:
     return {
         "entries": len(_COMPILED),

@@ -117,6 +117,17 @@ _ROUTE_OF: dict[str, str] = {
     "chordal": "chordal",
     "general": "iterative",
     "oversize": "sharded",
+    # joint (K-class) ladder classes — assigned by the union-graph
+    # classifier in repro.joint.screen.  Identical-block components reduce
+    # to ONE single-class problem at an effective lambda: "closed_form" is
+    # the batched joint forest fast path, "chordal" the host clique-tree
+    # direct solve, and joint_shared's "iterative" is a SINGLE-class
+    # iterative solve (1/K of the coupled work); joint_general's
+    # "iterative" is the K-coupled joint ADMM
+    "joint_forest": "closed_form",
+    "joint_chordal": "chordal",
+    "joint_shared": "iterative",
+    "joint_general": "iterative",
 }
 
 

@@ -1,0 +1,133 @@
+"""Public joint graphical-lasso API: thin wrappers over ``JointEngine``.
+
+``joint_glasso([S_1..S_K], lam1, lam2)``   solve the K-class joint problem
+    (J) with the exact hybrid covariance thresholding screen (Tang et al.,
+    arXiv:1503.02128) on by default — or ``screen=False`` for the
+    unscreened baseline arm the equivalence gates compare against.
+``joint_glasso(Xs=[X_1..X_K], ..., from_data=True)``   the out-of-core
+    path: one streamed screen per class at lam1, exact hybrid completion of
+    the candidate pairs, per-class materialized component blocks — no
+    class's dense (p, p) covariance ever exists.
+
+``penalty`` picks the cross-class coupling: "group" (l2 over classes per
+entry) or "fused" (pairwise l1 between classes).  ``lam2=0`` decouples the
+problem exactly into K independent ``glasso`` solves — the acceptance
+equivalence used by tests and ``bench_joint --smoke``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.joint.screen import JointScreenStats
+
+__all__ = ["JointGlassoResult", "joint_glasso"]
+
+
+@dataclass
+class JointGlassoResult:
+    lam1: float
+    lam2: float
+    penalty: str
+    Theta: np.ndarray              # (K, p, p)
+    labels: np.ndarray             # union-graph partition (canonical)
+    screen: JointScreenStats | None
+    solve_seconds: float
+    solver: str
+    block_sizes: list[int] = field(default_factory=list)
+    route_mix: dict = field(default_factory=dict)   # joint structure -> #blocks
+    routed: bool = True
+    fallbacks: int = 0             # verification failures re-dispatched
+
+    @property
+    def K(self) -> int:
+        return self.Theta.shape[0]
+
+    @property
+    def support(self) -> np.ndarray:
+        """Union concentration-graph adjacency (an edge in ANY class)."""
+        A = (np.abs(self.Theta) > 0).any(axis=0)
+        np.fill_diagonal(A, False)
+        return A
+
+    def class_support(self, k: int) -> np.ndarray:
+        A = np.abs(self.Theta[k]) > 0
+        np.fill_diagonal(A, False)
+        return A
+
+
+def _joint_result(
+    plan, labels, screen_stats, Theta, seconds, solver, *,
+    routed: bool = True, fallbacks: int = 0,
+) -> JointGlassoResult:
+    route_mix = {"singleton": len(plan.isolated)} if len(plan.isolated) else {}
+    for b in plan.buckets:
+        route_mix[b.structure] = route_mix.get(b.structure, 0) + len(b.comps)
+    return JointGlassoResult(
+        lam1=plan.lam1,
+        lam2=plan.lam2,
+        penalty=plan.penalty,
+        Theta=Theta,
+        labels=labels,
+        screen=screen_stats,
+        solve_seconds=seconds,
+        solver=solver,
+        block_sizes=sorted(
+            (len(c) for b in plan.buckets for c in b.comps), reverse=True
+        ),
+        route_mix=route_mix,
+        routed=routed,
+        fallbacks=fallbacks,
+    )
+
+
+def joint_glasso(
+    Ss=None,
+    lam1: float | None = None,
+    lam2: float = 0.0,
+    *,
+    penalty: str = "group",
+    Xs=None,
+    from_data: bool = False,
+    stream=None,
+    solver: str = "joint_admm",
+    screen: bool = True,
+    dtype=jnp.float64,
+    cc_backend: str = "host",
+    route: bool = True,
+    route_check_tol: float = 1e-6,
+    verify_tail: bool = False,
+    **solver_opts,
+) -> JointGlassoResult:
+    """Solve the K-class joint graphical lasso; see the module docstring.
+
+    ``route=False`` disables the joint routing ladder (every union block
+    takes the joint ADMM — the unrouted baseline of the equivalence gates);
+    ``cc_backend`` picks any registered screening backend for the
+    union-graph partition step; ``verify_tail=True`` opts in to exact
+    joint-KKT verification of the ADMM tail (see ``JointEngine``)."""
+    from repro.joint.engine import JointEngine
+
+    engine = JointEngine(
+        solver=solver, dtype=dtype, cc_backend=cc_backend, route=route,
+        route_check_tol=route_check_tol, verify_tail=verify_tail,
+        **solver_opts,
+    )
+    if from_data or Xs is not None:
+        if Xs is None:
+            raise ValueError("from_data=True needs the data matrices (Xs=...)")
+        if Ss is not None:
+            raise ValueError("pass either Ss or Xs=, not both")
+        if lam1 is None:
+            raise ValueError("joint_glasso needs lam1")
+        return engine.run_from_data(
+            Xs, float(lam1), float(lam2), penalty=penalty, stream=stream
+        )
+    if Ss is None or lam1 is None:
+        raise ValueError("joint_glasso needs (Ss, lam1) — or Xs=/from_data=True")
+    return engine.run(
+        Ss, float(lam1), float(lam2), penalty=penalty, screen=screen
+    )

@@ -1,7 +1,15 @@
 from repro.kernels.covgram_screen.ops import (
     compact_edges,
+    compact_edges_signed,
     covgram_screen_tiles,
+    covgram_screen_tiles_stacked,
     pad_for_screen,
 )
 
-__all__ = ["covgram_screen_tiles", "compact_edges", "pad_for_screen"]
+__all__ = [
+    "covgram_screen_tiles",
+    "covgram_screen_tiles_stacked",
+    "compact_edges",
+    "compact_edges_signed",
+    "pad_for_screen",
+]

@@ -110,9 +110,86 @@ def compact_edges(
     """Compact a batch of thresholded tiles into global (i, j, |S_ij|) edge
     arrays, upper triangle only (diagonal tile pairs emit both orientations;
     off-diagonal pairs are scheduled with tile_i < tile_j)."""
+    gi, gj, v = compact_edges_signed(vals, i_idx, j_idx, block_p=block_p)
+    return gi, gj, np.abs(v)
+
+
+def compact_edges_signed(
+    vals: np.ndarray, i_idx: np.ndarray, j_idx: np.ndarray, *, block_p: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """``compact_edges`` keeping the SIGNED covariance values.
+
+    The joint hybrid screen needs signs: the fused-penalty subset condition
+    bounds |sum_A S_k,ij| across classes, which |S_ij| alone cannot
+    evaluate.  The single-class screen keeps using the absolute view."""
     t, ri, ci = np.nonzero(vals)
     gi = i_idx[t].astype(np.int64) * block_p + ri
     gj = j_idx[t].astype(np.int64) * block_p + ci
     keep = gi < gj
-    w = np.abs(vals[t[keep], ri[keep], ci[keep]]).astype(np.float64)
-    return gi[keep], gj[keep], w
+    v = vals[t[keep], ri[keep], ci[keep]].astype(np.float64)
+    return gi[keep], gj[keep], v
+
+
+def covgram_screen_tiles_stacked(
+    xs_pad,
+    mus_pad,
+    i_idx_per_class,
+    j_idx_per_class,
+    lam: float,
+    *,
+    n_trues,
+    p_true: int,
+    block_p: int,
+    block_n: int = 512,
+    backend: str = "auto",
+    pair_batch: int = 64,
+) -> list[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """K-stacked screen: one fused gram+threshold+compact pass PER CLASS.
+
+    The joint screener's entry point: each class streams its OWN kept-tile
+    schedule (the Cauchy-Schwarz certificates are per class — a tile proven
+    edge-free for class k cannot contribute a |S_k,ij| > lam1 candidate, so
+    skipping it per class is exact) in bounded ``pair_batch`` flights
+    through the same kernel/oracle the single-class screener uses, and the
+    compacted SIGNED per-class edges come back stacked for the hybrid-rule
+    evaluation.  Per-class row counts n_k (and their padding) legitimately
+    differ, which is why this is a schedule-stacked wrapper rather than one
+    K-batched kernel launch."""
+    out = []
+    for x_pad, mu_pad, bi, bj, n_true in zip(
+        xs_pad, mus_pad, i_idx_per_class, j_idx_per_class, n_trues
+    ):
+        bi = np.asarray(bi, np.int32)
+        bj = np.asarray(bj, np.int32)
+        gi_parts, gj_parts, v_parts = [], [], []
+        for b0 in range(0, bi.size, max(1, int(pair_batch))):
+            sl = slice(b0, b0 + max(1, int(pair_batch)))
+            vals, _, _ = covgram_screen_tiles(
+                x_pad,
+                mu_pad,
+                bi[sl],
+                bj[sl],
+                lam,
+                n_true=int(n_true),
+                p_true=p_true,
+                block_p=block_p,
+                block_n=block_n,
+                backend=backend,
+            )
+            gi, gj, v = compact_edges_signed(
+                vals, bi[sl], bj[sl], block_p=block_p
+            )
+            gi_parts.append(gi)
+            gj_parts.append(gj)
+            v_parts.append(v)
+        def cat(parts, dt):
+            return np.concatenate(parts) if parts else np.empty(0, dt)
+
+        out.append(
+            (
+                cat(gi_parts, np.int64),
+                cat(gj_parts, np.int64),
+                cat(v_parts, np.float64),
+            )
+        )
+    return out

@@ -1,0 +1,21 @@
+from repro.kernels.joint_prox.joint_prox import joint_prox_pallas
+from repro.kernels.joint_prox.ops import joint_prox_step
+from repro.kernels.joint_prox.ref import (
+    PENALTIES,
+    fused_prox,
+    group_prox,
+    joint_prox_entries,
+    joint_prox_ref,
+    tv_complete_prox,
+)
+
+__all__ = [
+    "PENALTIES",
+    "joint_prox_step",
+    "joint_prox_ref",
+    "joint_prox_pallas",
+    "joint_prox_entries",
+    "group_prox",
+    "fused_prox",
+    "tv_complete_prox",
+]

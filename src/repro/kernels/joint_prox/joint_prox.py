@@ -1,0 +1,95 @@
+"""Pallas kernel: fused K-way joint prox + residual reduction per row tile.
+
+The joint ADMM's hot elementwise tail.  Unfused, the Z-update costs many HBM
+round-trips of the (K, b, b) iterate (add, the K-way coupled prox with its
+rank/order-statistic broadcasts, the dual update, two squared-difference
+reductions); the kernel does one read of (Theta, U, Z_old) and one write of
+(Z_new, U_new) per row tile, accumulating both residual partials in a (1, 2)
+scalar block that every grid step maps to the same output tile (TPU grids
+are sequential, so the accumulation is race-free — the ``shard_prox`` /
+``covgram_screen`` pattern).
+
+    grid (b // row_tile,)
+    in:  Theta (K, rt, b), U (K, rt, b), Z_old (K, rt, b), t (1, 2)
+    out: Z_new (K, rt, b), U_new (K, rt, b), acc (1, 2) = [rp2, rd2]
+
+t = [lam1/rho, lam2/rho] is a TRACED scalar block: adaptive-rho steps never
+recompile.  The class axis K rides as the leading block dimension (the
+tiling constraint binds the trailing (rt, b) dims); the prox math is the
+SAME sort-free code as the jnp reference (``ref.joint_prox_entries``) — K is
+static, so the rank/one-hot broadcasts unroll into K^2 VPU ops.  The
+diagonal (lam1-only) entries are detected in-kernel from the row-tile
+offset via iota, so no mask input is streamed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.joint_prox.ref import _soft, joint_prox_entries
+
+
+def _kernel(penalty, theta_ref, u_ref, z_ref, t_ref, zn_ref, un_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    theta = theta_ref[...]
+    a = theta + u_ref[...]
+    t1 = t_ref[0, 0]
+    t2 = t_ref[0, 1]
+    _, rt, b = a.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (rt, b), 0) + i * rt
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rt, b), 1)
+    diag = (rows == cols)[None]
+    zn = jnp.where(
+        diag,
+        _soft(a, t1),
+        joint_prox_entries(a, t1, t2, penalty=penalty),
+    )
+    zn_ref[...] = zn
+    un_ref[...] = a - zn
+    dp = theta - zn
+    dd = zn - z_ref[...]
+    acc_ref[0, 0] += jnp.sum(dp * dp)
+    acc_ref[0, 1] += jnp.sum(dd * dd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("penalty", "row_tile", "interpret")
+)
+def joint_prox_pallas(
+    theta: jax.Array,
+    u: jax.Array,
+    z_old: jax.Array,
+    t: jax.Array,
+    *,
+    penalty: str,
+    row_tile: int = 0,
+    interpret: bool = False,
+):
+    """theta/u/z_old: (K, b, b) with b a multiple of row_tile (and ideally of
+    the lane width); t: (1, 2) = [[t1, t2]].  Returns (Z_new, U_new,
+    acc (1, 2))."""
+    K, b, _ = theta.shape
+    rt = row_tile or b
+    grid = (b // rt,)
+    blk = pl.BlockSpec((K, rt, b), lambda i: (0, i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, penalty),
+        grid=grid,
+        in_specs=[blk, blk, blk, pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_specs=[blk, blk, pl.BlockSpec((1, 2), lambda i: (0, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, b, b), theta.dtype),
+            jax.ShapeDtypeStruct((K, b, b), theta.dtype),
+            jax.ShapeDtypeStruct((1, 2), theta.dtype),
+        ],
+        interpret=interpret,
+    )(theta, u, z_old, t.reshape(1, 2).astype(theta.dtype))

@@ -1,0 +1,150 @@
+"""Reference (pure jnp) fused prox step for the joint multi-class ADMM.
+
+One joint-ADMM iteration ends with the Z-update: at every matrix entry
+(i, j) the K class values are proximal-mapped JOINTLY under the composite
+penalty lam1 * l1 + lam2 * P2, where P2 couples the classes:
+
+    group  P2 = sqrt(sum_k theta_k^2)            (off-diagonal entries)
+    fused  P2 = sum_{k<k'} |theta_k - theta_k'|  (off-diagonal entries)
+
+Both composite proxes have EXACT closed forms built from two monotone
+coordinate-wise-compatible pieces, so no inner iteration is needed:
+
+    group  prox_{t1 l1 + t2 l2}   = group-shrink  o  soft(., t1)
+           (sparse-group-lasso order: l1 first, then v * (1 - t2/||v||)_+)
+    fused  prox_{t1 l1 + t2 TV_K} = soft(., t1)  o  prox_{t2 TV_K}
+           (soft-thresholding is monotone, so the TV subgradient chosen at
+           the TV prox stays valid after shrinkage — the Friedman et al.
+           2007 fused-lasso argument, which only needs monotonicity)
+
+with TV_K the complete-graph total variation over the K classes.  Its prox
+is computed WITHOUT a data-dependent sort primitive (the same code must run
+inside the Pallas kernel): stable ranks from K^2 pairwise comparisons, the
+rank-r order statistics via one-hot contractions, the stationarity shift
+b_r = a_(r) - t(2r - K + 1), and the isotonic regression of b via the exact
+minimax formula  y_r = max_{j<=r} min_{l>=r} mean(b_j..b_l)  (pool-adjacent-
+violators in closed form; K is small and static, so the K^3 broadcast is a
+handful of VPU ops).  Tied inputs produce tied outputs (the prox of a
+permutation-symmetric function maps equal coordinates to equal values), so
+the arbitrary stable tie-break in the rank is sound.
+
+Diagonal entries take only the l1 piece: the cross-class penalty is
+OFF-DIAGONAL by construction (coupling the diagonals would break the
+per-class diagonal KKT W_ii = S_ii + lam1 that padding and isolated-vertex
+assembly rely on).
+
+The residual reductions ride along exactly like ``shard_prox``:
+rp2 = sum((Theta - Z_new)^2), rd2 = sum((Z_new - Z_old)^2), both over all K
+classes — the Pallas kernel fuses prox + both reductions into one HBM pass;
+this module is the semantics, the off-TPU dispatch target, and the
+pallas-vs-ref test oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PENALTIES = ("group", "fused")
+
+
+def _soft(x, t):
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def group_prox(a: jnp.ndarray, t1, t2) -> jnp.ndarray:
+    """prox of t1*||.||_1 + t2*||.||_2 along axis 0 of a (K, ...) array."""
+    v = _soft(a, t1)
+    nrm = jnp.sqrt(jnp.sum(v * v, axis=0, keepdims=True))
+    scale = jnp.where(
+        nrm > 0.0, jnp.maximum(1.0 - t2 / jnp.where(nrm > 0.0, nrm, 1.0), 0.0), 0.0
+    )
+    return v * scale
+
+
+def tv_complete_prox(a: jnp.ndarray, t) -> jnp.ndarray:
+    """prox of t * sum_{k<k'} |x_k - x_k'| along axis 0 of a (K, ...) array.
+
+    Sort-free formulation (see module docstring): ranks via pairwise
+    comparisons, order statistics via one-hot sums, minimax isotonic fit,
+    rank-gather back.  All loops are over the STATIC class axis K."""
+    K = a.shape[0]
+    if K == 1:
+        return a
+    t = jnp.asarray(t, a.dtype)
+    tail = (1,) * (a.ndim - 1)
+    pos = jnp.arange(K).reshape((K,) + tail)
+    # stable rank: #(strictly smaller) + #(equal with smaller class index)
+    ai = a[:, None]
+    aj = a[None, :]
+    pi = pos[:, None]
+    pj = pos[None, :]
+    less = (aj < ai) | ((aj == ai) & (pj < pi))
+    rank = jnp.sum(less.astype(a.dtype), axis=1)  # (K, ...), values 0..K-1
+    # order statistics a_(r) via one-hot contraction
+    r_ids = jnp.arange(K, dtype=a.dtype).reshape((K,) + (1,) * a.ndim)
+    onehot = (rank[None] == r_ids).astype(a.dtype)  # (Kr, K, ...)
+    asort = jnp.sum(onehot * a[None], axis=1)  # (K, ...) ascending
+    # stationarity shift for strictly ordered coordinates
+    shift = t * (2.0 * jnp.arange(K, dtype=a.dtype) - (K - 1)).reshape((K,) + tail)
+    b = asort - shift
+    # prefix sums P[r] = sum of the first r shifted values; a static python
+    # loop instead of cumsum so the identical code lowers inside Pallas
+    parts = [jnp.zeros(a.shape[1:], a.dtype)]
+    for r in range(K):
+        parts.append(parts[-1] + b[r])
+    prefix = jnp.stack(parts)  # (K+1, ...)
+    # segment means M[j, l] = mean(b_j..b_l); only j <= l is ever read below
+    num = prefix[None, 1:] - prefix[:-1, None]  # (j, l, ...)
+    length = (
+        jnp.arange(K, dtype=a.dtype)[None, :] - jnp.arange(K, dtype=a.dtype)[:, None]
+        + 1.0
+    )
+    length = jnp.maximum(length, 1.0).reshape((K, K) + tail)
+    M = num / length
+    # isotonic fit via minimax: y_r = max_{j<=r} min_{l>=r} M[j, l]
+    ys = []
+    for r in range(K):
+        inner = jnp.min(M[:, r:], axis=1)  # min over l >= r, for every j
+        ys.append(jnp.max(inner[: r + 1], axis=0))
+    ysort = jnp.stack(ys)  # (K, ...) nondecreasing
+    # gather back by rank
+    return jnp.sum(onehot * ysort[:, None], axis=0)
+
+
+def fused_prox(a: jnp.ndarray, t1, t2) -> jnp.ndarray:
+    """prox of t1*||.||_1 + t2*TV_complete along axis 0 of a (K, ...) array."""
+    return _soft(tv_complete_prox(a, t2), t1)
+
+
+def joint_prox_entries(a: jnp.ndarray, t1, t2, *, penalty: str) -> jnp.ndarray:
+    """Off-diagonal joint prox along the class axis (axis 0)."""
+    if penalty == "group":
+        return group_prox(a, t1, t2)
+    if penalty == "fused":
+        return fused_prox(a, t1, t2)
+    raise ValueError(f"unknown joint penalty {penalty!r}; available: {PENALTIES}")
+
+
+def joint_prox_ref(
+    theta: jnp.ndarray,
+    u: jnp.ndarray,
+    z_old: jnp.ndarray,
+    t1,
+    t2,
+    *,
+    penalty: str,
+):
+    """(Z_new, U_new, rp2, rd2) for one (K, b, b) block.
+
+    Diagonal entries take soft(., t1) only (lam2 is off-diagonal); both
+    residual partials sum over all K classes."""
+    t1 = jnp.asarray(t1, theta.dtype)
+    t2 = jnp.asarray(t2, theta.dtype)
+    a = theta + u
+    z_off = joint_prox_entries(a, t1, t2, penalty=penalty)
+    eye = jnp.eye(theta.shape[-1], dtype=bool)
+    z_new = jnp.where(eye[None], _soft(a, t1), z_off)
+    u_new = a - z_new
+    rp2 = jnp.sum((theta - z_new) ** 2)
+    rd2 = jnp.sum((z_new - z_old) ** 2)
+    return z_new, u_new, rp2, rd2

@@ -34,19 +34,52 @@ merge/split, and the fresh solve warm-starts from the session's previous
 solution (untouched components start essentially converged — the serving
 analog of the path warm start).
 
-Counters (repro.core.instrument):
-    serve.requests            requests admitted
-    serve.batches             batcher iterations that dispatched work
-    serve.dispatches          coalesced solver calls (one per size x route)
-    serve.coalesced_blocks    blocks that shared a call with ANOTHER request
-    serve.fastpath_requests   requests solved at admission (queue skipped)
-    serve.fastpath_blocks     blocks that took a non-iterative route
-    serve.fallback_blocks     closed-form candidates repaired iteratively
-    serve.data_requests       submit_data admissions (streamed screening)
-    serve.session_updates     append_rows incremental re-screens
-(``serve_stats()`` also surfaces the stream.* counters backing the data
-path — tiles scheduled/skipped/rescreened, edges emitted, bytes peak — and
-the solver.oversize.* counters backing sharded giant-component admission.)
+JOINT ADMISSION (``submit_joint``) accepts K class covariances (or K data
+matrices via ``Xs=``) estimated jointly under the fused/group penalty
+(``repro.joint``): the exact hybrid thresholding screen and the joint plan
+run on the caller's thread, an all-closed-form plan (singletons +
+identical-block forest components) solves synchronously at admission, and
+everything else queues for the batcher, which dispatches joint buckets
+through the shared compiled cache (keys gain K, so a steady-state mix of
+single-class and joint traffic compiles nothing).
+
+COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
+"sum" counters accumulate, "peak" entries are high-watermarks
+(``instrument.set_peak``), derived values need not be ints:
+
+    serve.requests               sum   requests admitted (all kinds)
+    serve.batches                sum   batcher iterations that dispatched
+    serve.dispatches             sum   coalesced solver calls (size x route)
+    serve.coalesced_blocks       sum   blocks sharing a call across requests
+    serve.fastpath_requests      sum   requests solved at admission
+    serve.fastpath_blocks        sum   blocks on a non-iterative route
+    serve.fallback_blocks        sum   closed-form candidates repaired
+    serve.data_requests          sum   submit_data admissions
+    serve.session_updates        sum   append_rows incremental re-screens
+    stream.tiles_total           sum   tile pairs scheduled (per class)
+    stream.tiles_skipped         sum   Cauchy-Schwarz prunes
+    stream.tiles_rescreened      sum   session tiles recomputed on update
+    stream.tiles_revalidated     sum   session tiles kept by certificate
+    stream.sessions              sum   data sessions opened
+    stream.session_components_touched  sum  components merged/split/updated
+    stream.edges_emitted         sum   compacted edges streamed
+    stream.deferred_components   sum   oversize components left host-free
+    stream.deferred_gathers      sum   on-demand gathers of deferred blocks
+    stream.shard_chunks          sum   row chunks streamed into device shards
+    stream.bytes_peak            peak  screening-stage host bytes
+    solver.oversize.dispatched   sum   sharded mesh-spanning solves
+    solver.oversize.cg_iters     sum   inner CG/Newton-Schulz iterations
+    solver.oversize.fallbacks    sum   sharded rejections re-solved 1-device
+    solver.oversize.device_bytes_peak  peak  accounting-model device bytes
+    joint.requests               sum   submit_joint admissions
+    joint.fastpath_requests      sum   joint requests solved at admission
+    joint.screens                sum   hybrid screens run (dense + streamed)
+    joint.dispatches             sum   joint solver dispatches (all routes)
+    joint.closed_form_blocks     sum   blocks down the forest/chordal paths
+    joint.shared_blocks          sum   identical blocks solved once (1-class)
+    joint.fallbacks              sum   joint verifications re-dispatched
+    joint.candidate_pairs        sum   streamed pairs completed for the rule
+    joint.edges                  sum   union-graph edges retained
 
 OVERSIZE ADMISSION (``oversize_threshold`` / ``oversize_budget_mb``): a
 request whose screen leaves a component past the single-device block cap is
@@ -81,6 +114,21 @@ class GlassoRequest:
     future: Future = field(default_factory=Future)
     # screen/plan results computed at fast-path admission; reused by the
     # batcher so a queued request is never planned twice
+    labels: np.ndarray | None = None
+    stats: object = None
+    plan: object = None
+
+
+@dataclass
+class JointRequest:
+    """A K-class joint request (``submit_joint``); rides the same queue and
+    shutdown drain as plain requests."""
+
+    Ss: object                     # list of dense arrays or materialized covs
+    lam1: float
+    lam2: float
+    penalty: str
+    future: Future = field(default_factory=Future)
     labels: np.ndarray | None = None
     stats: object = None
     plan: object = None
@@ -181,6 +229,33 @@ class GlassoServer:
         self._queue: queue.Queue = queue.Queue()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        self._joint = None  # lazily-built JointEngine (repro.joint)
+
+    def _joint_engine(self):
+        """The server's shared K-class engine (``repro.joint.JointEngine``).
+
+        Built lazily so single-class servers never import the joint stack.
+        Solver options are the intersection of the server's opts with what
+        ``joint_admm`` accepts (tol/max_iter/rho travel; bcd-specific knobs
+        do not)."""
+        if self._joint is None:
+            import inspect
+
+            from repro.joint.admm import joint_admm
+            from repro.joint.engine import JointEngine
+
+            accepted = set(inspect.signature(joint_admm).parameters)
+            opts = {
+                k: v for k, v in self.solver_opts.items() if k in accepted
+            }
+            self._joint = JointEngine(
+                dtype=self.dtype,
+                cc_backend=self.cc_backend,
+                route=self.route,
+                route_check_tol=self.route_check_tol,
+                **opts,
+            )
+        return self._joint
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -287,6 +362,104 @@ class GlassoServer:
         if self._stop.is_set():
             self._fail_pending()
         return req.future
+
+    def submit_joint(
+        self,
+        Ss=None,
+        lam1: float | None = None,
+        lam2: float = 0.0,
+        *,
+        penalty: str = "group",
+        Xs=None,
+        stream=None,
+    ) -> Future:
+        """Admit a K-class JOINT request (``repro.joint``).
+
+        ``Ss`` is the list of K class covariances; ``Xs=`` instead screens
+        each class out-of-core from its (n_k, p) data matrix (the joint
+        analog of ``submit_data`` — no dense per-class S ever exists).  The
+        exact hybrid thresholding screen and the joint plan run on the
+        caller's thread; a plan whose every union bucket routes
+        non-iteratively (singletons + identical-block forest components)
+        is solved synchronously at admission, everything else queues for
+        the batcher.  Shutdown drains joint futures through the same
+        ``_fail_pending`` path as every other request kind."""
+        if lam1 is None:
+            raise ValueError("submit_joint needs lam1")
+        req = JointRequest(
+            Ss=None, lam1=float(lam1), lam2=float(lam2), penalty=penalty
+        )
+        if self._stop.is_set():
+            req.future.set_exception(RuntimeError("GlassoServer stopped"))
+            return req.future
+        bump("serve.requests")
+        bump("joint.requests")
+        try:
+            engine = self._joint_engine()
+            if Xs is not None:
+                if Ss is not None:
+                    raise ValueError("pass either Ss or Xs=, not both")
+                from repro.joint.stream import joint_stream_screen
+
+                sc = joint_stream_screen(
+                    Xs, req.lam1, req.lam2, penalty=penalty, config=stream
+                )
+                req.Ss, req.labels, req.stats = sc.S, sc.labels, sc.stats
+            else:
+                if Ss is None:
+                    raise ValueError("submit_joint needs Ss (or Xs=)")
+                req.Ss = [np.asarray(S) for S in Ss]
+                req.labels, req.stats = engine.screen(
+                    req.Ss, req.lam1, req.lam2, penalty=penalty
+                )
+            req.plan = engine.plan(
+                req.Ss, req.lam1, req.lam2, req.labels, penalty=penalty
+            )
+        except Exception as e:
+            req.future.set_exception(e)
+            return req.future
+        if self.fast_path:
+            from repro.engine.registry import route_for
+
+            if not any(
+                route_for(b.structure) in ("iterative", "sharded")
+                for b in req.plan.buckets
+            ):
+                try:
+                    self._solve_joint_request(req)
+                    bump("joint.fastpath_requests")
+                    bump("serve.fastpath_requests")
+                    return req.future
+                except Exception as e:  # pragma: no cover - defensive
+                    if not req.future.done():
+                        req.future.set_exception(e)
+                    return req.future
+        self._queue.put(req)
+        if self._stop.is_set():
+            self._fail_pending()
+        return req.future
+
+    def _solve_joint_request(self, req: JointRequest) -> None:
+        """Solve one planned joint request through the shared JointEngine
+        (compiled cache process-global, keys carry K — steady-state joint
+        traffic compiles nothing)."""
+        from repro.joint.api import _joint_result
+
+        try:
+            t0 = time.perf_counter()
+            Theta, fallbacks = self._joint_engine().solve_plan(
+                req.plan, req.Ss
+            )
+            seconds = time.perf_counter() - t0
+            req.future.set_result(
+                _joint_result(
+                    req.plan, req.labels, req.stats, Theta, seconds,
+                    "joint_admm", routed=self.route, fallbacks=fallbacks,
+                )
+            )
+        except Exception as e:
+            if not req.future.done():
+                req.future.set_exception(e)
 
     def append_rows(self, session: str, Y: np.ndarray) -> Future:
         """Absorb k new data rows into a named session and re-solve.
@@ -485,6 +658,18 @@ class GlassoServer:
         from repro.engine.registry import route_for
 
         t0 = time.perf_counter()
+        # joint requests ride the same queue but their buckets carry the K
+        # class axis: each is solved through the shared JointEngine (whose
+        # dispatches hit the same process-global compiled cache, keyed with
+        # K), then the plain requests coalesce as before
+        joint_reqs = [r for r in requests if isinstance(r, JointRequest)]
+        requests = [r for r in requests if not isinstance(r, JointRequest)]
+        for jr in joint_reqs:
+            self._solve_joint_request(jr)
+        if not requests:
+            if joint_reqs:
+                bump("serve.batches")
+            return
         per_req: list[tuple[GlassoRequest, np.ndarray, object, object]] = []
         groups: dict[tuple[int, str], list[_PlacedBucket]] = {}
         for req in requests:
@@ -661,12 +846,18 @@ class GlassoServer:
             )
 
 
-def serve_stats() -> dict[str, int]:
-    """serve.* counters plus the stream.* counters behind the data-matrix
-    admission path (tiles scheduled/skipped/rescreened, edges, bytes peak)
-    and the solver.oversize.* counters behind sharded giant-component
-    admission (dispatched / cg_iters / fallbacks / device_bytes_peak)."""
-    return {**counts("serve."), **counts("stream."), **counts("solver.oversize.")}
+def serve_stats() -> dict[str, int | float]:
+    """Every counter namespace behind the serving surface, in one view —
+    the complete table (sum vs peak semantics included) lives in the module
+    docstring.  Typed ``int | float``: watermark/derived entries record
+    maxima or ratios rather than event sums and are not guaranteed
+    integral, so consumers must not assume ``int``."""
+    return {
+        **counts("serve."),
+        **counts("stream."),
+        **counts("solver.oversize."),
+        **counts("joint."),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,433 @@
+"""Joint multi-class graphical lasso: exact hybrid screening + solver stack.
+
+The property core: the hybrid-thresholded union partition must equal the
+brute-force joint solution's union-support partition (the K-class
+Theorem 1, Tang et al. arXiv:1503.02128) on small (K <= 3, p <= 40)
+problems across BOTH penalty regimes; exact per-class ties
+|S^(k)_ij| == lam1 are exercised with the dyadic-integer trick from
+test_stream (integer X, power-of-two row count — every covariance entry is
+exact in f64 under any summation order, so lam1 can be an attained
+off-diagonal value and all implementations agree bit-for-bit); the union
+partition is identical through all four registered cc backends and through
+the out-of-core streamed screen.  The solver side: lam2 = 0 decouples into
+K independent ``glasso`` runs, the joint prox kernel matches its jnp
+reference in Pallas interpret mode, the joint-forest fast path is verified
+and falls back (never corrupts), and the joint KKT verifier accepts ADMM
+output while rejecting perturbations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import lambda_between_edges
+from repro.core import glasso
+from repro.core.components import component_lists, partitions_equal
+from repro.core.instrument import count, reset
+from repro.joint import (
+    joint_glasso,
+    joint_kkt_residual,
+    joint_stream_screen,
+    joint_thresholded_components,
+    joint_union_adjacency,
+)
+from repro.joint.screen import pair_excess
+from repro.stream.unionfind import StreamingUnionFind
+
+BACKENDS = ("host", "jax", "pallas", "shard_map")
+PENALTIES = ("group", "fused")
+CFG = {"tile": 32, "chunk": 16, "pair_batch": 3}
+
+
+def _class_covs(rng, K, p, n=32):
+    """K moderately-correlated class covariances over shared variables."""
+    base = rng.standard_normal((n, p)) * (0.3 + rng.random(p))
+    out = []
+    for _ in range(K):
+        X = base + 0.7 * rng.standard_normal((n, p))
+        Xc = X - X.mean(axis=0)
+        out.append(Xc.T @ Xc / n)
+    return out
+
+
+def _dense_S(X):
+    Xc = X - X.mean(axis=0)
+    return Xc.T @ Xc / X.shape[0]
+
+
+def _integer_Xs(rng, K, n, p):
+    assert n & (n - 1) == 0
+    return [
+        rng.integers(-4, 5, size=(n, p)).astype(np.float64) for _ in range(K)
+    ]
+
+
+def _support_partition(Theta, p, tol=1e-7):
+    """Union-support partition of a (K, p, p) solution stack."""
+    adj = (np.abs(Theta) > tol).any(axis=0)
+    np.fill_diagonal(adj, False)
+    iu, ju = np.nonzero(np.triu(adj, 1))
+    uf = StreamingUnionFind(p)
+    uf.union_edges(iu, ju)
+    return uf.labels()
+
+
+def _lam_pair(Ss, q):
+    """(lam1, lam2) at a quantile midpoint of the class-max |S_ij|."""
+    M = np.max(np.abs(np.stack(Ss)), axis=0)
+    lam1 = lambda_between_edges(M, q)
+    return lam1, 0.4 * lam1
+
+
+# ---------------------------------------------------------------------------
+# screen == brute-force joint support partition (the K-class Theorem 1)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    K=st.sampled_from([2, 3]),
+    p=st.sampled_from([12, 20]),
+    seed=st.integers(0, 10_000),
+    q=st.floats(0.55, 0.9),
+    penalty=st.sampled_from(PENALTIES),
+)
+def test_screened_partition_equals_bruteforce_support(K, p, seed, q, penalty):
+    rng = np.random.default_rng(seed)
+    Ss = _class_covs(rng, K, p)
+    lam1, lam2 = _lam_pair(Ss, q)
+    labels, stats = joint_thresholded_components(
+        Ss, lam1, lam2, penalty=penalty
+    )
+    brute = joint_glasso(
+        Ss, lam1, lam2, penalty=penalty, screen=False, route=False, tol=1e-10
+    )
+    support_labels = _support_partition(brute.Theta, p)
+    assert partitions_equal(labels, support_labels)
+    # and the screened solve reproduces the unscreened Theta exactly
+    screened = joint_glasso(Ss, lam1, lam2, penalty=penalty, tol=1e-10)
+    assert np.abs(screened.Theta - brute.Theta).max() < 1e-6
+    assert partitions_equal(screened.labels, labels)
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    penalty=st.sampled_from(PENALTIES),
+)
+def test_exact_per_class_ties_are_not_edges(seed, penalty):
+    """lam1 set to an attained |S^(k)_ij|: the tie is NOT an edge (strict
+    rule), every backend and the streamed screen agree bit-for-bit, and the
+    screened solve still equals the unscreened one (the tie lambda is a
+    boundary of the screen, not of the optimization)."""
+    rng = np.random.default_rng(seed)
+    K, n, p = 3, 16, 30
+    Xs = _integer_Xs(rng, K, n, p)
+    Ss = [_dense_S(X) for X in Xs]
+    vals = np.abs(Ss[0][np.triu_indices(p, 1)])
+    vals = np.sort(vals[vals > 0])
+    lam1 = float(vals[vals.size // 2])  # an exact dyadic off-diagonal value
+    lam2 = 0.25  # dyadic
+    assert (np.abs(Ss[0][np.triu_indices(p, 1)]) == lam1).any()
+    labels, stats = joint_thresholded_components(Ss, lam1, lam2, penalty=penalty)
+    # independent oracle: evaluate the rule pairwise from the definition
+    iu, ju = np.triu_indices(p, 1)
+    svec = np.stack([S[iu, ju] for S in Ss])
+    edge = pair_excess(svec, lam1, lam2, penalty=penalty) > 0.0
+    uf = StreamingUnionFind(p)
+    uf.union_edges(iu[edge], ju[edge])
+    assert partitions_equal(labels, uf.labels())
+    assert stats.n_edges == int(edge.sum())
+    # every cc backend and the streamed screen produce the same partition
+    for backend in BACKENDS:
+        lab_b, _ = joint_thresholded_components(
+            Ss, lam1, lam2, penalty=penalty, backend=backend,
+            **({"block": 8} if backend == "pallas" else {}),
+        )
+        assert partitions_equal(labels, lab_b), backend
+    sc = joint_stream_screen(Xs, lam1, lam2, penalty=penalty, config=CFG)
+    assert partitions_equal(labels, sc.labels)
+    assert sc.stats.n_edges == stats.n_edges
+    # screened == unscreened Theta at the tie lambda (acceptance: "ties
+    # included" on the brute-force grid)
+    screened = joint_glasso(Ss, lam1, lam2, penalty=penalty, tol=1e-9)
+    brute = joint_glasso(
+        Ss, lam1, lam2, penalty=penalty, screen=False, route=False, tol=1e-9
+    )
+    assert np.abs(screened.Theta - brute.Theta).max() < 1e-6
+
+
+def test_lam2_zero_reduces_to_union_of_per_class_screens(rng):
+    Ss = _class_covs(rng, 3, 24)
+    lam1, _ = _lam_pair(Ss, 0.7)
+    labels, stats = joint_thresholded_components(Ss, lam1, 0.0, penalty="group")
+    adj = np.zeros((24, 24), dtype=bool)
+    for S in Ss:
+        A = np.abs(S) > lam1
+        np.fill_diagonal(A, False)
+        adj |= A
+    iu, ju = np.nonzero(np.triu(adj, 1))
+    uf = StreamingUnionFind(24)
+    uf.union_edges(iu, ju)
+    assert partitions_equal(labels, uf.labels())
+    lab_f, _ = joint_thresholded_components(Ss, lam1, 0.0, penalty="fused")
+    assert partitions_equal(labels, lab_f)
+
+
+# ---------------------------------------------------------------------------
+# lam2 = 0 decouples into K independent glasso solves
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    penalty=st.sampled_from(PENALTIES),
+)
+def test_lam2_zero_matches_independent_glasso(seed, penalty):
+    rng = np.random.default_rng(seed)
+    K, p = 3, 18
+    Ss = _class_covs(rng, K, p)
+    lam1, _ = _lam_pair(Ss, 0.6)
+    res = joint_glasso(Ss, lam1, 0.0, penalty=penalty, tol=1e-9)
+    for k in range(K):
+        direct = glasso(Ss[k], lam1, solver="admm", tol=1e-9)
+        assert np.abs(res.Theta[k] - direct.Theta).max() < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# streamed screen == dense screen, end to end
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    q=st.floats(0.5, 0.9),
+    penalty=st.sampled_from(PENALTIES),
+)
+def test_streamed_joint_matches_dense(seed, q, penalty):
+    rng = np.random.default_rng(seed)
+    K, n, p = 3, 40, 45  # p not a multiple of tile=32
+    Xs = [
+        rng.standard_normal((n, p)) * (0.1 + rng.random(p)) for _ in range(K)
+    ]
+    Ss = [_dense_S(X) for X in Xs]
+    lam1, lam2 = _lam_pair(Ss, q)
+    d = joint_glasso(Ss, lam1, lam2, penalty=penalty, tol=1e-9)
+    s = joint_glasso(
+        Xs=Xs, lam1=lam1, lam2=lam2, penalty=penalty, from_data=True,
+        stream=CFG, tol=1e-9,
+    )
+    assert partitions_equal(d.labels, s.labels)
+    assert d.route_mix == s.route_mix
+    assert np.abs(d.Theta - s.Theta).max() < 1e-6
+    assert s.screen.tiles_total > 0
+    assert s.screen.candidate_pairs >= s.screen.n_edges
+
+
+# ---------------------------------------------------------------------------
+# routing ladder: joint forest fast path + fallback safety
+# ---------------------------------------------------------------------------
+
+
+def _shared_tree_problem(p=16, K=3):
+    """Identical class blocks: a planted tree + singletons — all fast path."""
+    Ss = [np.eye(p) * 2.0 for _ in range(K)]
+    for k in range(K):
+        for i, j, v in [(0, 1, 0.9), (1, 2, -0.8), (2, 3, 0.7), (3, 4, 0.75),
+                        (6, 7, 0.85)]:
+            Ss[k][i, j] = Ss[k][j, i] = v
+    return Ss
+
+
+@pytest.mark.parametrize("penalty", PENALTIES)
+def test_joint_forest_fast_path_exact(penalty):
+    Ss = _shared_tree_problem()
+    reset("router")
+    reset("joint")
+    res = joint_glasso(Ss, 0.4, 0.12, penalty=penalty, tol=1e-9)
+    assert res.route_mix.get("joint_forest", 0) >= 2  # tree + pair
+    assert res.fallbacks == 0
+    assert count("joint.closed_form_blocks") >= 2
+    ref = joint_glasso(Ss, 0.4, 0.12, penalty=penalty, route=False, tol=1e-10)
+    assert res.route_mix != ref.route_mix  # unrouted stays joint_general
+    assert np.abs(res.Theta - ref.Theta).max() < 1e-6
+    # all classes share one solution on identical blocks
+    assert np.abs(res.Theta[0] - res.Theta[-1]).max() == 0.0
+
+
+def test_near_identical_blocks_fall_back_not_corrupt():
+    """Blocks equal to 1e-6 (past the classifier's 1e-12 identity gate but
+    planted to LOOK shared): the classifier must refuse the fast path, or —
+    if forced through set_route — verification must repair it."""
+    Ss = _shared_tree_problem()
+    Ss[1] = Ss[1].copy()
+    Ss[1][0, 1] = Ss[1][1, 0] = 0.9 + 1e-6  # not identical anymore
+    reset("router")
+    res = joint_glasso(Ss, 0.4, 0.12, penalty="group", tol=1e-9)
+    # the perturbed component must NOT be classified joint_forest
+    assert res.route_mix.get("joint_general", 0) >= 1
+    ref = joint_glasso(Ss, 0.4, 0.12, penalty="group", route=False, tol=1e-10)
+    assert np.abs(res.Theta - ref.Theta).max() < 1e-6
+
+
+def test_verify_tail_passes_and_repairs(rng):
+    """On well-scaled problems the ADMM tail clears the opt-in exact joint
+    KKT gate with zero fallbacks; a starved iteration budget trips the gate
+    and the counted fallback re-dispatch still lands on the right answer."""
+    K, p = 3, 14
+    Ss = _class_covs(rng, K, p)
+    lam1, lam2 = _lam_pair(Ss, 0.55)
+    reset("joint")
+    res = joint_glasso(
+        Ss, lam1, lam2, penalty="group", verify_tail=True, tol=1e-9
+    )
+    assert res.fallbacks == 0
+    ref = joint_glasso(
+        Ss, lam1, lam2, penalty="group", screen=False, route=False, tol=1e-10
+    )
+    assert np.abs(res.Theta - ref.Theta).max() < 1e-6
+    if res.route_mix.get("joint_general", 0):
+        reset("joint")
+        starved = joint_glasso(
+            Ss, lam1, lam2, penalty="group", verify_tail=True, tol=1e-9,
+            max_iter=3,
+        )
+        assert starved.fallbacks > 0
+        assert count("joint.fallbacks") == starved.fallbacks
+        # the 10x-budget warm re-dispatch repaired the starved blocks
+        assert np.abs(starved.Theta - ref.Theta).max() < 1e-5
+
+
+def test_joint_kkt_verifier_accepts_and_rejects(rng):
+    from repro.joint import joint_admm
+
+    import jax.numpy as jnp
+
+    K, b = 3, 10
+    Ss = np.stack(_class_covs(rng, K, b, n=24))
+    for penalty in PENALTIES:
+        for lam2 in (0.0, 0.1):
+            Th = np.asarray(
+                joint_admm(jnp.asarray(Ss), 0.15, lam2, penalty=penalty, tol=1e-10)
+            )
+            res = joint_kkt_residual(Ss, Th, 0.15, lam2, penalty=penalty)
+            assert res < 1e-7, (penalty, lam2, res)
+            bad = Th.copy()
+            bad[0, 0, 1] += 0.03
+            bad[0, 1, 0] += 0.03
+            assert joint_kkt_residual(Ss, bad, 0.15, lam2, penalty=penalty) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# joint prox kernel: pallas (interpret) == jnp reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    K=st.sampled_from([1, 2, 4]),
+    penalty=st.sampled_from(PENALTIES),
+)
+def test_joint_prox_pallas_matches_ref(seed, K, penalty):
+    import jax.numpy as jnp
+
+    from repro.kernels.joint_prox import joint_prox_pallas, joint_prox_ref
+
+    rng = np.random.default_rng(seed)
+    b = 16
+    th, u, zo = (
+        jnp.asarray(rng.standard_normal((K, b, b))) for _ in range(3)
+    )
+    t1, t2 = 0.3 * rng.random() + 0.01, 0.3 * rng.random()
+    zn_p, un_p, acc = joint_prox_pallas(
+        th, u, zo, jnp.asarray([[t1, t2]]), penalty=penalty, row_tile=8,
+        interpret=True,
+    )
+    zn_r, un_r, rp2, rd2 = joint_prox_ref(th, u, zo, t1, t2, penalty=penalty)
+    np.testing.assert_allclose(np.asarray(zn_p), np.asarray(zn_r), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(un_p), np.asarray(un_r), atol=1e-12)
+    np.testing.assert_allclose(float(acc[0, 0]), float(rp2), rtol=1e-9)
+    np.testing.assert_allclose(float(acc[0, 1]), float(rd2), rtol=1e-9)
+
+
+def test_fused_prox_is_optimal(rng):
+    """Directional-derivative optimality of the sort-free TV prox, ties
+    included (the convex objective has no descent direction at the prox)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.joint_prox import fused_prox
+
+    def obj(z, a, t1, t2):
+        K = len(z)
+        pen = sum(
+            abs(z[i] - z[j]) for i in range(K) for j in range(i + 1, K)
+        )
+        return 0.5 * np.sum((z - a) ** 2) + t1 * np.sum(np.abs(z)) + t2 * pen
+
+    for _ in range(40):
+        K = int(rng.integers(1, 7))
+        a = rng.standard_normal(K)
+        if K >= 2 and rng.random() < 0.5:
+            a[int(rng.integers(0, K))] = a[int(rng.integers(0, K))]
+        t1 = float(rng.random() * 0.5)
+        t2 = float(rng.random() * 0.5)
+        z = np.asarray(fused_prox(jnp.asarray(a)[:, None], t1, t2))[:, 0]
+        f0 = obj(z, a, t1, t2)
+        for _ in range(25):
+            d = rng.standard_normal(K)
+            d /= np.linalg.norm(d)
+            assert obj(z + 1e-6 * d, a, t1, t2) >= f0 - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# api validation + counters
+# ---------------------------------------------------------------------------
+
+
+def test_joint_glasso_input_validation():
+    with pytest.raises(ValueError, match="needs"):
+        joint_glasso(lam1=0.5)
+    with pytest.raises(ValueError, match="not both"):
+        joint_glasso([np.eye(3)], 0.5, Xs=[np.zeros((4, 3))])
+    with pytest.raises(ValueError, match="unknown joint penalty"):
+        joint_glasso([np.eye(3)], 0.5, penalty="nope")
+    with pytest.raises(ValueError, match="share one shape"):
+        joint_glasso([np.eye(3), np.eye(4)], 0.5)
+
+
+def test_union_adjacency_strictness():
+    """The hybrid conditions are strict: exact equality is not an edge."""
+    S1 = np.eye(2)
+    S1[0, 1] = S1[1, 0] = 0.5
+    # group, lam2 = 0: |s| == lam1 exactly -> no edge; above -> edge
+    assert not joint_union_adjacency([S1, S1], 0.5, 0.0, penalty="group").any()
+    assert joint_union_adjacency([S1, S1], 0.499, 0.0, penalty="group").any()
+    # fused: K = 2, s = (0.5, 0.5); subset m=2: |1.0| <= 2*lam1 binds at 0.5
+    assert not joint_union_adjacency([S1, S1], 0.5, 0.0, penalty="fused").any()
+    # group with lam2: soft(0.5, 0.3) = 0.2 per class; sqrt(2)*0.2 vs lam2
+    lam2_tie = float(np.sqrt(2) * 0.2)
+    adj = joint_union_adjacency([S1, S1], 0.3, lam2_tie + 1e-12, penalty="group")
+    assert not adj.any()
+    adj = joint_union_adjacency([S1, S1], 0.3, lam2_tie - 1e-9, penalty="group")
+    assert adj.any()
+
+
+def test_result_surface(rng):
+    Ss = _shared_tree_problem()
+    res = joint_glasso(Ss, 0.4, 0.1, penalty="group", tol=1e-8)
+    assert res.K == 3
+    assert res.Theta.shape == (3, 16, 16)
+    assert res.support.shape == (16, 16)
+    assert res.class_support(0).dtype == bool
+    assert res.screen is not None and res.screen.n_components >= 2
+    assert res.block_sizes == sorted(
+        (len(c) for c in component_lists(res.labels) if len(c) > 1),
+        reverse=True,
+    )
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -151,5 +151,74 @@ def test_append_rows_incremental_session(rng):
     assert "stream.tiles_revalidated" in st and "serve.session_updates" in st
 
 
+def test_submit_joint_matches_direct(rng):
+    """submit_joint resolves to the same result as a direct joint_glasso,
+    via the admission fast path for all-closed-form plans and via the
+    batcher queue otherwise."""
+    from repro.joint import joint_glasso
+
+    p = 16
+    Ss = [np.eye(p) * 2.0 for _ in range(3)]
+    for k in range(3):
+        for i, j, v in [(0, 1, 0.9), (1, 2, -0.8), (2, 3, 0.7)]:
+            Ss[k][i, j] = Ss[k][j, i] = v
+    reset("joint")
+    reset("serve")
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        res = server.submit_joint(Ss, 0.4, 0.1, penalty="fused").result(
+            timeout=300
+        )
+    direct = joint_glasso(Ss, 0.4, 0.1, penalty="fused", tol=1e-8)
+    np.testing.assert_allclose(res.Theta, direct.Theta, atol=1e-6)
+    assert count("joint.requests") == 1
+    assert count("joint.fastpath_requests") == 1  # identical-block forest plan
+    # queued path: class-specific blocks force the joint ADMM route
+    Ss2 = [np.array(S) for S in Ss]
+    blk = rng.standard_normal((24, 5))
+    for k in range(3):
+        Ss2[k][np.ix_(range(6, 11), range(6, 11))] = (
+            blk.T @ blk / 24 + (2 + 0.3 * k) * np.eye(5) + 0.6 * (1 - np.eye(5))
+        )
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        res2 = server.submit_joint(Ss2, 0.4, 0.1, penalty="group").result(
+            timeout=300
+        )
+    direct2 = joint_glasso(Ss2, 0.4, 0.1, penalty="group", tol=1e-8)
+    np.testing.assert_allclose(res2.Theta, direct2.Theta, atol=1e-6)
+    assert res2.route_mix.get("joint_general", 0) >= 1
+    # joint.* counters surface through serve_stats
+    from repro.launch.serve_glasso import serve_stats
+
+    st = serve_stats()
+    assert "joint.requests" in st and "joint.dispatches" in st
+
+
+def test_stop_fails_inflight_data_and_joint_requests(rng):
+    """Shutdown with queued data-session and joint requests: every future
+    must fail cleanly through _fail_pending instead of hanging its client
+    (previously only plain-submit shutdown was covered)."""
+    p = 32
+    X = rng.standard_normal((40, p)) * (0.1 + rng.random(p))
+    Ss = [np.eye(8) + 0.6 * (1 - np.eye(8)) * (0.9 ** k) for k in range(2)]
+    # fast_path off and batcher never started: requests stay in the queue
+    server = GlassoServer(solver="bcd", tol=1e-8, fast_path=False)
+    f_data = server.submit_data(
+        X, 0.05, session="s-stop", stream={"tile": 16, "chunk": 8}
+    )
+    f_joint = server.submit_joint(Ss, 0.3, 0.05, penalty="group")
+    assert not f_data.done() and not f_joint.done()
+    server.stop()
+    for fut in (f_data, f_joint):
+        with pytest.raises(RuntimeError, match="GlassoServer stopped"):
+            fut.result(timeout=5)
+    # post-stop admissions of every kind fail fast, never park
+    with pytest.raises(RuntimeError, match="GlassoServer stopped"):
+        server.submit(np.eye(4), 0.5).result(timeout=5)
+    with pytest.raises(RuntimeError, match="GlassoServer stopped"):
+        server.submit_data(X, 0.05).result(timeout=5)
+    with pytest.raises(RuntimeError, match="GlassoServer stopped"):
+        server.submit_joint(Ss, 0.3, 0.05).result(timeout=5)
+
+
 if __name__ == "__main__":
     pytest.main([__file__, "-q"])
