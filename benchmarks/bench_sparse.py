@@ -1,0 +1,425 @@
+"""Sparse-native result benchmark: kill the O(p^2) assembly wall.
+
+The sparse result path's acceptance claims are MEMORY claims, so (like
+bench_stream / bench_giant) each arm runs in its own subprocess and reports
+``ru_maxrss``.  The workload is bench_stream's power-law data matrix —
+factor-correlated 8-column groups in the leading tiles, so at LAM the
+screened graph is a few hundred small components in a sea of isolated
+vertices: the regime where the SOLVE is trivial and the (p, p) dense result
+is the entire footprint.  Three arms:
+
+  * ``dense``   from-data solve with ``output="dense"`` — the historical
+                result path: assemble_dense allocates the (p, p) Theta
+                (p=16k f64: 2 GiB) even though nnz is a few 10^4;
+  * ``sparse``  same solve with ``output="auto"`` — which must RESOLVE to
+                sparse at p=16k (> AUTO_SPARSE_P), assemble with zero (p, p)
+                allocation, and verify via the sparse-aware KKT (the
+                ``result.bytes_peak`` watermark rides along as the
+                self-reported cross-check);
+  * ``huge``    p=1e5 from-data under a hard RLIMIT_AS memory budget the
+                dense path CANNOT meet (Theta alone would be 80 GB) — the
+                end-to-end "p >= 1e5 completes" acceptance fact.
+
+Each arm then derives the support graph from its result — the step every
+consumer performs.  Dense, that scans the (p, p) Theta (np.abs writes a
+full f64 temp, committing the pages the lazily-zeroed allocation deferred);
+sparse, it reads the per-block nonzeros.  ru_maxrss therefore measures what
+CONSUMING each representation costs, not just holding an untouched
+zero-page mapping.
+
+Cross-arm equality is a HARD assert: both arms dump their result as COO
+triplets and the parent compares them entry-for-entry (same screen, same
+solve, only the container differs — the dumps must match exactly).  Zero
+router fallbacks is asserted in-arm.  The joint assembler's dense-vs-sparse
+wall ratio is measured in-process on a p=2400, K=4 plan (the assembly-bound
+slice of bench_joint's shared-solve workload).
+
+``--json FILE`` writes the record; ``--check BASELINE`` fails (exit 1) when
+the sparse/dense peak-RSS ratio, the huge-arm RSS, or the joint assembly
+speedup regresses >20% against the committed baseline.  ``--smoke`` is the
+fast in-process equivalence arm for the CI gate.
+
+    PYTHONPATH=src python -m benchmarks.bench_sparse [--smoke] \
+        [--json BENCH_sparse.json] [--check benchmarks/baseline_sparse.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+P = 16000
+P_HUGE = 100_000
+N_ROWS = 192
+LAM = 0.40
+TILE = 2048
+HUGE_BUDGET_MB = 8192   # RLIMIT_AS for the huge arm
+HUGE_RSS_CAP_MB = 4096  # parent-side acceptance on the huge arm's peak RSS
+RSS_RATIO_CAP = 0.35    # sparse arm RSS must be well under the dense arm's
+
+
+def _workload(p: int, seed: int = 0) -> np.ndarray:
+    """(n, p) data, bench_stream's recipe with a stronger factor: groups of
+    8 columns in the leading tiles over power-law column scales.  The 0.9
+    loading makes each group near-equicorrelated (intra-group |S_ij| ~ 0.8),
+    so at LAM the group solutions are fully dense and the chordal clique-
+    tree candidates verify — the zero-fallback regime the acceptance
+    asserts; everything else is isolated or tiny — the sparse-result
+    regime."""
+    rng = np.random.default_rng(seed)
+    n = N_ROWS
+    scales = 0.04 + 0.96 * (1.0 - np.arange(p) / p) ** 4
+    X = rng.standard_normal((n, p)) * scales
+    n_groups = max(2, p // 400)
+    f = rng.standard_normal((n, n_groups))
+    for g in range(n_groups):
+        cols = slice(g * 8, g * 8 + 8)
+        X[:, cols] = 0.9 * f[:, [g]] + 0.44 * X[:, cols] / scales[cols]
+    return X
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _dump_coo(Theta, path: str) -> int:
+    """COO triplets of a result (dense array or SparseTheta), row-col sorted
+    — the cross-arm equality artifact."""
+    from repro.core.sparse import SparseTheta
+
+    if isinstance(Theta, SparseTheta):
+        r, c, v = Theta.to_coo()
+    else:
+        r, c = np.nonzero(Theta)
+        v = Theta[r, c]
+    order = np.lexsort((c, r))
+    np.savez(path, rows=r[order], cols=c[order], vals=v[order])
+    return int(len(r))
+
+
+def run_arm(arm: str, p: int, seed: int = 0) -> dict:
+    """One arm in THIS process (the parent spawns each in a subprocess)."""
+    if arm == "huge":
+        # the budget the dense path cannot meet: its Theta alone is
+        # p^2 * 8 = 80 GB at p=1e5
+        budget = HUGE_BUDGET_MB * 2**20
+        resource.setrlimit(resource.RLIMIT_AS, (budget, budget))
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core import glasso
+    from repro.core.instrument import counts, reset
+    from repro.core.solvers.kkt import kkt_residual_sparse
+    from repro.core.sparse import SparseTheta
+
+    X = _workload(p, seed)
+    stream = {"tile": TILE, "chunk": 64}
+    reset("")
+    t0 = time.perf_counter()
+    if arm == "dense":
+        res = glasso(X=X, lam=LAM, from_data=True, stream=stream,
+                     output="dense", tol=1e-9)
+        assert not isinstance(res.Theta, SparseTheta)
+    elif arm in ("sparse", "huge"):
+        # output="auto": the arm PROVES the auto threshold fires at p > 8192
+        res = glasso(X=X, lam=LAM, from_data=True, stream=stream,
+                     output="auto", tol=1e-9)
+        assert res.output == "sparse", f"auto did not resolve sparse at p={p}"
+    else:
+        raise ValueError(arm)
+    seconds = time.perf_counter() - t0
+    fallbacks = sum(counts("router.fallback.").values())
+    assert fallbacks == 0, f"{arm}: {fallbacks} router fallbacks on the bench"
+    # the result is FOR something: every consumer reads the support graph.
+    # Dense, that is the O(p^2) wall this bench measures (np.abs over the
+    # (p, p) Theta materializes every page); sparse, it comes from the
+    # per-block nonzeros.  Same call, both arms.
+    edges = res.support_edges()
+    rec = {
+        "arm": arm,
+        "p": p,
+        "n_components": int(res.screen.n_components),
+        "nnz": int(
+            res.Theta.nnz if isinstance(res.Theta, SparseTheta)
+            else np.count_nonzero(res.Theta)
+        ),
+        "solve_seconds": round(res.solve_seconds, 3),
+        "assemble_seconds": round(res.assemble_seconds, 4),
+        "screen_seconds": round(res.screen_seconds, 3),
+        "bytes_peak_mb": round(res.bytes_peak / 2**20, 2),
+        "n_edges": int(len(edges)),
+        "output": res.output,
+    }
+    if arm != "huge":
+        path = os.path.join(
+            os.environ.get("TMPDIR", "/tmp"), f"bench_sparse_{arm}_{p}.npz"
+        )
+        rec["coo_file"] = path
+        rec["coo_nnz"] = _dump_coo(res.Theta, path)
+    if arm in ("sparse", "huge"):
+        # sparse-aware KKT: per-block residuals, never a (p, p) buffer —
+        # proven by the result.bytes_peak watermark staying << p^2 * 8
+        reset("result.")
+        rec["kkt_residual"] = float(
+            kkt_residual_sparse(_rematerialize(X, res), res.Theta, LAM)
+        )
+        peak = counts("result.").get("result.bytes_peak", 0)
+        dense_bytes = p * p * 8
+        assert 0 < peak < dense_bytes, (
+            f"sparse KKT touched a dense-scale buffer: {peak} vs {dense_bytes}"
+        )
+        rec["kkt_bytes_peak_mb"] = round(peak / 2**20, 3)
+    rec.update(
+        {"seconds": round(time.perf_counter() - t0, 2),
+         "total_seconds": round(seconds, 2),
+         "rss_mb": round(_rss_mb(), 1)}
+    )
+    return rec
+
+
+def _rematerialize(X: np.ndarray, res):
+    """The KKT check needs S through the gather protocol; rebuild the
+    materialized per-component covariance from X and the result's labels
+    (the dense (p, p) S must never exist in the sparse arms)."""
+    from repro.stream.materialize import materialize_components
+
+    n = X.shape[0]
+    mu = X.mean(axis=0)
+    diag = ((X - mu) ** 2).sum(axis=0) / n
+    return materialize_components(X, mu, diag, res.labels)
+
+
+def _spawn_arm(arm: str, p: int) -> dict:
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sparse", "--arm", arm,
+         "--p", str(p)],
+        capture_output=True, text=True, check=True,
+    )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _assert_coo_equal(dense_rec: dict, sparse_rec: dict) -> None:
+    """sparse == dense, entry for entry — the tentpole's hard equivalence."""
+    d_path = dense_rec.pop("coo_file")
+    s_path = sparse_rec.pop("coo_file")
+    with np.load(d_path) as d, np.load(s_path) as s:
+        equal = (
+            np.array_equal(d["rows"], s["rows"])
+            and np.array_equal(d["cols"], s["cols"])
+            and np.array_equal(d["vals"], s["vals"])
+        )
+        n_d, n_s = len(d["rows"]), len(s["rows"])
+    os.unlink(d_path)
+    os.unlink(s_path)
+    if not equal:
+        raise AssertionError(
+            f"sparse result != dense result (dense nnz={n_d}, sparse "
+            f"nnz={n_s})"
+        )
+
+
+def _joint_assemble_ratio(reps: int = 5) -> dict:
+    """Dense vs sparse JOINT assembly wall on a p=2400, K=4 plan — the
+    assembly-bound slice of bench_joint's shared-solve workload.  The
+    'solutions' are the plan's own padded stacks (assembly cost does not
+    depend on their values), so this isolates exactly the stage the sparse
+    path removes: the (K, p, p) = 184 MB allocation + scatter."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.covariance import paper_synthetic
+    from repro.joint.blocks import assemble_joint, assemble_joint_sparse
+    from repro.joint.engine import JointEngine
+
+    K, p1, nblk = 4, 16, 150
+    Ss = [paper_synthetic(nblk, p1, seed=7 + k) for k in range(K)]
+    lam1 = 0.11
+    engine = JointEngine()
+    labels, _ = engine.screen(Ss, lam1, 0.0, penalty="group")
+    plan = engine.plan(Ss, lam1, 0.0, labels, penalty="group")
+    sols = [np.asarray(b.blocks) for b in plan.buckets]
+    t_dense = min(
+        _timed(lambda: assemble_joint(plan, sols, Ss)) for _ in range(reps)
+    )
+    t_sparse = min(
+        _timed(lambda: assemble_joint_sparse(plan, sols, Ss))
+        for _ in range(reps)
+    )
+    return {
+        "joint_p": p1 * nblk,
+        "joint_K": K,
+        "joint_assemble_dense_s": round(t_dense, 6),
+        "joint_assemble_sparse_s": round(t_sparse, 6),
+        "joint_assemble_speedup": round(t_dense / max(t_sparse, 1e-6), 2),
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(p: int = P, p_huge: int = P_HUGE, log=print) -> dict:
+    dense = _spawn_arm("dense", p)
+    sparse = _spawn_arm("sparse", p)
+    _assert_coo_equal(dense, sparse)
+    huge = _spawn_arm("huge", p_huge)
+    rec = {
+        "p": p,
+        "p_huge": p_huge,
+        "lam": LAM,
+        "nnz": sparse["nnz"],
+        "n_components": sparse["n_components"],
+        "dense_rss_mb": dense["rss_mb"],
+        "sparse_rss_mb": sparse["rss_mb"],
+        "rss_ratio": round(sparse["rss_mb"] / dense["rss_mb"], 4),
+        "dense_bytes_peak_mb": dense["bytes_peak_mb"],
+        "sparse_bytes_peak_mb": sparse["bytes_peak_mb"],
+        "dense_assemble_s": dense["assemble_seconds"],
+        "sparse_assemble_s": sparse["assemble_seconds"],
+        "kkt_residual": sparse["kkt_residual"],
+        "kkt_bytes_peak_mb": sparse["kkt_bytes_peak_mb"],
+        "huge_rss_mb": huge["rss_mb"],
+        "huge_budget_mb": HUGE_BUDGET_MB,
+        "huge_nnz": huge["nnz"],
+        "huge_seconds": huge["total_seconds"],
+        "huge_bytes_peak_mb": huge["bytes_peak_mb"],
+        "dense_seconds": dense["total_seconds"],
+        "sparse_seconds": sparse["total_seconds"],
+    }
+    rec.update(_joint_assemble_ratio())
+    log(
+        f"p={p}: dense RSS {dense['rss_mb']:.0f}MB "
+        f"(Theta {dense['bytes_peak_mb']:.0f}MB) vs sparse RSS "
+        f"{sparse['rss_mb']:.0f}MB ({sparse['bytes_peak_mb']:.1f}MB resident"
+        f") — ratio {rec['rss_ratio']}; nnz={rec['nnz']}, COO equal; "
+        f"kkt={rec['kkt_residual']:.2e} in {rec['kkt_bytes_peak_mb']}MB peak"
+    )
+    log(
+        f"p={p_huge} under {HUGE_BUDGET_MB}MB RLIMIT_AS: completed in "
+        f"{huge['total_seconds']}s, RSS {huge['rss_mb']:.0f}MB, "
+        f"nnz={huge['nnz']} (dense Theta would be "
+        f"{p_huge * p_huge * 8 / 2**30:.0f}GB)"
+    )
+    log(
+        f"joint assembly p={rec['joint_p']} K={rec['joint_K']}: dense "
+        f"{rec['joint_assemble_dense_s']}s vs sparse "
+        f"{rec['joint_assemble_sparse_s']}s "
+        f"({rec['joint_assemble_speedup']}x)"
+    )
+    if rec["rss_ratio"] > RSS_RATIO_CAP:
+        raise AssertionError(
+            f"sparse arm RSS ratio {rec['rss_ratio']} > {RSS_RATIO_CAP}"
+        )
+    if huge["rss_mb"] > HUGE_RSS_CAP_MB:
+        raise AssertionError(
+            f"huge arm peak RSS {huge['rss_mb']}MB > {HUGE_RSS_CAP_MB}MB"
+        )
+    if rec["joint_assemble_speedup"] < 1.0:
+        raise AssertionError(
+            "sparse joint assembly slower than dense: "
+            f"{rec['joint_assemble_speedup']}x"
+        )
+    return rec
+
+
+def smoke(log=print) -> None:
+    """In-process sparse == dense equivalence on the from-data path (the CI
+    gate's cheap arm: same code paths, small p)."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import glasso
+    from repro.core.solvers.kkt import kkt_residual_sparse
+    from repro.core.sparse import SparseTheta
+
+    p = 1600
+    X = _workload(p, seed=3)
+    stream = {"tile": 512, "chunk": 64}
+    rd = glasso(X=X, lam=LAM, from_data=True, stream=stream,
+                output="dense", tol=1e-9)
+    rs = glasso(X=X, lam=LAM, from_data=True, stream=stream,
+                output="sparse", tol=1e-9)
+    assert isinstance(rs.Theta, SparseTheta)
+    assert np.array_equal(rs.Theta.toarray(), rd.Theta), "sparse != dense"
+    assert rs.Theta.nnz == np.count_nonzero(rd.Theta)
+    assert rs.bytes_peak < rd.bytes_peak, (rs.bytes_peak, rd.bytes_peak)
+    res = kkt_residual_sparse(_rematerialize(X, rs), rs.Theta, LAM)
+    assert res < 1e-6 * max(1.0, float(np.abs(X).max()) ** 2), res
+    log(
+        f"sparse smoke OK: p={p}, nnz={rs.Theta.nnz}, sparse bytes "
+        f"{rs.bytes_peak / 2**20:.2f}MB vs dense "
+        f"{rd.bytes_peak / 2**20:.1f}MB, kkt={res:.2e}"
+    )
+
+
+def check(rec: dict, baseline_path: str, log=print) -> int:
+    """CI gate: correctness facts are hard asserts in run(); this gates the
+    QUANTITIES against the committed baseline (>20% regression fails)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    max_ratio = base["rss_ratio"] * 1.2
+    if rec["rss_ratio"] > max_ratio:
+        failures.append(
+            f"sparse/dense RSS ratio {rec['rss_ratio']} > {max_ratio:.3f} "
+            f"(baseline {base['rss_ratio']} + 20%)"
+        )
+    max_huge = base["huge_rss_mb"] * 1.2
+    if rec["huge_rss_mb"] > max_huge:
+        failures.append(
+            f"huge-arm RSS {rec['huge_rss_mb']}MB > {max_huge:.0f}MB "
+            f"(baseline {base['huge_rss_mb']} + 20%)"
+        )
+    # the sparse assembly wall sits at the timer noise floor, so its speedup
+    # spans orders of magnitude run-to-run; gate with an absolute floor once
+    # the baseline is far past it (a real regression — sparse assembly going
+    # dense-scale — lands near 1x)
+    min_speedup = min(base["joint_assemble_speedup"] * 0.8, 20.0)
+    if rec["joint_assemble_speedup"] < min_speedup:
+        failures.append(
+            f"joint assembly speedup {rec['joint_assemble_speedup']} < "
+            f"{min_speedup:.2f} (baseline {base['joint_assemble_speedup']})"
+        )
+    for msg in failures:
+        log(f"REGRESSION: {msg}")
+    if not failures:
+        log(f"sparse bench within baseline ({baseline_path})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arm", choices=("dense", "sparse", "huge"), default=None)
+    ap.add_argument("--p", type=int, default=P)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--check", default=None)
+    args = ap.parse_args()
+
+    if args.arm:  # subprocess mode: one arm, JSON on stdout
+        print(json.dumps(run_arm(args.arm, args.p)))
+        return
+    if args.smoke:
+        smoke()
+        return
+    rec = run(args.p)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        sys.exit(check(rec, args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -85,6 +85,12 @@ def smoke() -> None:
     from benchmarks import bench_joint
 
     bench_joint.smoke()
+
+    # sparse-native results: sparse == dense on the from-data path, sparse-
+    # aware KKT verification, no (p, p) allocation in the sparse container
+    from benchmarks import bench_sparse
+
+    bench_sparse.smoke()
     print("smoke: OK")
 
 

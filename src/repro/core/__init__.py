@@ -20,6 +20,12 @@ from repro.core.partition import (
 )
 from repro.core.screening import thresholded_components
 from repro.core.solvers import SOLVERS, glasso_admm, glasso_bcd, glasso_pg, kkt_residual
+from repro.core.sparse import (
+    AUTO_SPARSE_P,
+    JointSparseTheta,
+    SparseTheta,
+    result_nbytes,
+)
 
 __all__ = [
     "glasso",
@@ -42,4 +48,8 @@ __all__ = [
     "glasso_pg",
     "glasso_admm",
     "kkt_residual",
+    "AUTO_SPARSE_P",
+    "SparseTheta",
+    "JointSparseTheta",
+    "result_nbytes",
 ]

@@ -22,6 +22,8 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from repro.core.instrument import set_peak
+
 
 def bucket_size(b: int, *, min_bucket: int = 2) -> int:
     """Next power of two >= b (>= min_bucket)."""
@@ -172,6 +174,13 @@ class Plan:
             mx = max(mx, max(len(c) for c in b.comps))
         return mx
 
+    def block_bytes(self) -> int:
+        """Bytes held by the plan's padded input stacks (oversize buckets
+        carry none — their blocks stream straight to device shards)."""
+        return int(
+            sum(b.blocks.nbytes for b in self.buckets if b.blocks is not None)
+        )
+
 
 def make_bucket(
     S: np.ndarray,
@@ -249,7 +258,13 @@ def assemble_dense(
     if out is not None:
         Theta = out
     else:
-        Theta = np.zeros((p, p), dtype=np.asarray(bucket_solutions[0]).dtype if bucket_solutions else np.float64)
+        dtype = (
+            np.asarray(bucket_solutions[0]).dtype
+            if bucket_solutions
+            else cov_dtype(S)
+        )
+        Theta = np.zeros((p, p), dtype=dtype)
+        set_peak("result.bytes_peak", Theta.nbytes)
     if len(plan.isolated):
         Theta[plan.isolated, plan.isolated] = 1.0 / (
             gather_diag(S, plan.isolated) + plan.lam
@@ -266,4 +281,47 @@ def assemble_dense(
             else:
                 rows = np.stack([bucket.comps[i] for i in idxs])   # (n, b)
                 Theta[rows[:, :, None], rows[:, None, :]] = sols[idxs][:, :b, :b]
+    return Theta
+
+
+def cov_dtype(S) -> np.dtype:
+    """The numpy dtype of a covariance operand — dense array or gather-
+    protocol object (``MaterializedCovariance`` carries ``.dtype``)."""
+    if hasattr(S, "gather_block"):
+        return np.dtype(S.dtype)
+    return np.asarray(S).dtype
+
+
+def assemble_sparse(plan: Plan, bucket_solutions: list[np.ndarray], S):
+    """Assemble per-bucket solutions into a ``SparseTheta`` with ZERO (p, p)
+    allocation: the bucket solution stacks become the result's block storage
+    as-is (no copy), and only the (p,) index maps + isolated closed-form
+    diagonal are built on top.
+
+    The dense and sparse assemblers consume identical inputs, so a dense
+    ``assemble_dense`` of the same ``bucket_solutions`` densifies to the
+    numerically IDENTICAL matrix — the equivalence ``bench_sparse`` and the
+    property tests hard-assert."""
+    from repro.core.sparse import SparseTheta, _build_index
+
+    stacks = [np.asarray(sols) for sols in bucket_solutions]
+    dtype = stacks[0].dtype if stacks else cov_dtype(S)
+    comps: list[np.ndarray] = []
+    loc: list[tuple[int, int]] = []
+    for s, bucket in enumerate(plan.buckets):
+        for r, comp in enumerate(bucket.comps):
+            comps.append(np.asarray(comp, dtype=np.int64))
+            loc.append((s, r))
+    isolated = np.asarray(plan.isolated, dtype=np.int64)
+    if isolated.size:
+        iso_vals = (
+            1.0 / (gather_diag(S, isolated) + plan.lam)
+        ).astype(dtype, copy=False)
+    else:
+        iso_vals = np.zeros(0, dtype=dtype)
+    comp_id, pos_in = _build_index(plan.p, comps, isolated)
+    Theta = SparseTheta(
+        plan.p, dtype, stacks, comps, loc, comp_id, pos_in, isolated, iso_vals
+    )
+    set_peak("result.bytes_peak", Theta.nbytes())
     return Theta

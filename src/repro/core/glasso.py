@@ -44,6 +44,7 @@ def glasso(
     route: bool = True,
     oversize_threshold: int | None = None,
     oversize_budget_mb: float | str | None = None,
+    output: str = "auto",
     **solver_opts,
 ) -> GlassoResult:
     """``route=False`` disables the structure-routed solver ladder (every
@@ -64,11 +65,16 @@ def glasso(
     oversize component then streams from X STRAIGHT into device shards.
     ``stream`` passes a ``repro.stream.StreamConfig`` (or kwargs dict);
     ``screen``/``cc_backend`` do not apply on this path (the streamed screen
-    IS the screening stage)."""
+    IS the screening stage).
+
+    ``output`` picks the result representation: "dense" is the historical
+    (p, p) array, "sparse" returns a ``repro.core.sparse.SparseTheta``
+    assembled with zero (p, p) allocation, and "auto" (default) switches to
+    sparse above ``AUTO_SPARSE_P`` — see DESIGN.md Section 13."""
     engine = Engine(
         solver=solver, dtype=dtype, cc_backend=cc_backend, route=route,
         oversize_threshold=oversize_threshold,
-        oversize_budget_mb=oversize_budget_mb, **solver_opts
+        oversize_budget_mb=oversize_budget_mb, output=output, **solver_opts
     )
     data = X if X is not None else (S if from_data else None)
     if from_data or X is not None:
@@ -102,6 +108,7 @@ def glasso_path(
     route: bool = True,
     oversize_threshold: int | None = None,
     oversize_budget_mb: float | str | None = None,
+    output: str = "auto",
     **solver_opts,
 ) -> list[GlassoResult]:
     """Solve along a descending lambda path (one planning pass, warm starts).
@@ -125,7 +132,7 @@ def glasso_path(
     engine = Engine(
         solver=solver, dtype=dtype, route=route,
         oversize_threshold=oversize_threshold,
-        oversize_budget_mb=oversize_budget_mb, **solver_opts
+        oversize_budget_mb=oversize_budget_mb, output=output, **solver_opts
     )
     data = X if X is not None else (S if from_data else None)
     if from_data or X is not None:

@@ -24,7 +24,9 @@ import numpy as np
 
 from repro.core import schedule as schedule_mod
 from repro.core.components import component_lists
+from repro.core.instrument import bump
 from repro.core.screening import ScreenStats, thresholded_components
+from repro.core.sparse import SparseTheta, resolve_output, result_nbytes
 from repro.engine.executor import BucketExecutor
 from repro.engine.planner import build_plan_incremental, plan_path
 
@@ -32,10 +34,11 @@ from repro.engine.planner import build_plan_incremental, plan_path
 @dataclass
 class GlassoResult:
     lam: float
-    Theta: np.ndarray
+    Theta: np.ndarray              # dense (p, p) — or a SparseTheta when
+                                   # output resolved to "sparse"
     labels: np.ndarray
     screen: ScreenStats | None
-    solve_seconds: float
+    solve_seconds: float           # dispatch + verify (assembly EXCLUDED)
     solver: str
     block_sizes: list[int] = field(default_factory=list)
     route_mix: dict = field(default_factory=dict)  # structure class -> #blocks
@@ -44,13 +47,38 @@ class GlassoResult:
     # fallbacks} (empty when no block took the oversize route); the
     # process-wide view is instrument counts("solver.oversize.")
     oversize: dict = field(default_factory=dict)
+    assemble_seconds: float = 0.0  # scatter/index-build slice of this solve
+    bytes_peak: int = 0            # resident bytes of Theta as assembled
+    output: str = "dense"          # the representation actually returned
+
+    @property
+    def screen_seconds(self) -> float:
+        """Screening-stage seconds (0.0 when screening was skipped or the
+        labels were precomputed)."""
+        return float(self.screen.seconds) if self.screen is not None else 0.0
 
     @property
     def support(self) -> np.ndarray:
-        """Estimated concentration-graph adjacency (eq. (2))."""
+        """Estimated concentration-graph adjacency (eq. (2)).
+
+        Sparse results derive it from per-block nonzeros — dense bool up to
+        the densify cap, scipy bool CSR above it — so calling this on a
+        large result does not recreate the O(p^2) allocation."""
+        if isinstance(self.Theta, SparseTheta):
+            return self.Theta.support()
         A = np.abs(self.Theta) > 0
         np.fill_diagonal(A, False)
         return A
+
+    def support_edges(self) -> np.ndarray:
+        """(E, 2) off-diagonal upper-triangular support edges — the payload
+        form sparse serving responses carry at any p."""
+        if isinstance(self.Theta, SparseTheta):
+            return self.Theta.support_edges()
+        r, c = np.nonzero(np.triu(self.support, k=1))
+        return np.stack([r, c], axis=1).astype(np.int64) if r.size else np.zeros(
+            (0, 2), dtype=np.int64
+        )
 
     @property
     def noniterative_fraction(self) -> float:
@@ -123,7 +151,15 @@ def blockwise_inverse(
     that intersect it.  Shared by the path warm start (merged components:
     the restriction of the old Theta is block-diagonal over its old
     sub-components, hence PD — a valid W iterate) and the serving data
-    sessions (rank-k updates warm-start every surviving component)."""
+    sessions (rank-k updates warm-start every surviving component).
+
+    A block-sparse ``Theta`` produces a block-sparse W over the SAME
+    components (inverses per block, reciprocal isolated diagonal) — no
+    (p, p) buffer appears anywhere on the warm-start path; the executor
+    gathers merged-component restrictions through ``gather_block``, whose
+    cross-component entries are exact zeros."""
+    if isinstance(Theta, SparseTheta):
+        return _blockwise_inverse_sparse(Theta, needed)
     W = np.zeros_like(Theta)
     for comp in component_lists(labels):
         if needed is not None and not needed[comp].any():
@@ -132,19 +168,53 @@ def blockwise_inverse(
     return W
 
 
+def _blockwise_inverse_sparse(
+    Theta: SparseTheta, needed: np.ndarray | None
+) -> SparseTheta:
+    """Block-diagonal W = inv(Theta) of a sparse result, as another
+    ``SparseTheta`` (one single-row stack per needed component)."""
+    from repro.core.sparse import _build_index
+
+    stacks: list[np.ndarray] = []
+    comps: list[np.ndarray] = []
+    loc: list[tuple[int, int]] = []
+    for c, blk in Theta.blocks():
+        if needed is not None and not needed[c].any():
+            continue
+        comps.append(c)
+        loc.append((len(stacks), 0))
+        stacks.append(np.linalg.inv(blk)[None])
+    iso = Theta.isolated
+    vals = Theta.isolated_values
+    if needed is not None and iso.size:
+        keep = needed[iso]
+        iso, vals = iso[keep], vals[keep]
+    comp_id, pos_in = _build_index(Theta.p, comps, iso)
+    return SparseTheta(
+        Theta.p, Theta.dtype, stacks, comps, loc, comp_id, pos_in,
+        iso, (1.0 / vals).astype(Theta.dtype, copy=False),
+        densify_max=Theta.densify_max,
+    )
+
+
 def _result(
     plan, labels, screen_stats, Theta, seconds, solver, lam, *,
     routed: bool = True, oversize: dict | None = None,
+    assemble_seconds: float = 0.0,
 ) -> GlassoResult:
     route_mix = {"singleton": len(plan.isolated)} if len(plan.isolated) else {}
     for b in plan.buckets:
         route_mix[b.structure] = route_mix.get(b.structure, 0) + len(b.comps)
+    solve_seconds = max(0.0, float(seconds) - float(assemble_seconds))
+    bump("engine.solve_us", int(solve_seconds * 1e6))
+    if screen_stats is not None:
+        bump("engine.screen_us", int(float(screen_stats.seconds) * 1e6))
     return GlassoResult(
         lam=float(lam),
         Theta=Theta,
         labels=labels,
         screen=screen_stats,
-        solve_seconds=seconds,
+        solve_seconds=solve_seconds,
         solver=solver,
         block_sizes=sorted(
             (len(c) for b in plan.buckets for c in b.comps), reverse=True
@@ -152,6 +222,9 @@ def _result(
         route_mix=route_mix,
         routed=routed,
         oversize=dict(oversize or {}),
+        assemble_seconds=float(assemble_seconds),
+        bytes_peak=result_nbytes(Theta),
+        output="sparse" if isinstance(Theta, SparseTheta) else "dense",
     )
 
 
@@ -173,10 +246,16 @@ class Engine:
         route_check_tol: float = 1e-6,
         oversize_threshold: int | None = None,
         oversize_budget_mb: float | str | None = None,
+        output: str = "auto",
         **solver_opts,
     ):
         from repro.core.solvers import WARM_START_SOLVERS
 
+        if output not in ("dense", "sparse", "auto"):
+            raise ValueError(
+                f"output must be 'dense', 'sparse' or 'auto', got {output!r}"
+            )
+        self.output = output
         self.solver = solver
         self.dtype = dtype
         self.np_dtype = np.dtype(jnp.dtype(dtype).name)  # host-side twin
@@ -211,6 +290,7 @@ class Engine:
         warm_W: np.ndarray | None = None,
         labels: np.ndarray | None = None,
         screen_stats: ScreenStats | None = None,
+        output: str | None = None,
     ) -> GlassoResult:
         """``labels`` short-circuits the screening stage with a precomputed
         canonical partition (callers that already screened, e.g. to report
@@ -253,12 +333,16 @@ class Engine:
         schedule_mod.check_capacity(
             [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
         )
+        out_mode = resolve_output(self.output if output is None else output, p)
         t0 = time.perf_counter()
-        Theta = self.executor.solve_plan(plan, float(lam), S, warm_W=warm_W)
+        Theta = self.executor.solve_plan(
+            plan, float(lam), S, warm_W=warm_W, output=out_mode
+        )
         seconds = time.perf_counter() - t0
         return _result(
             plan, labels, screen_stats, Theta, seconds, self.solver, lam,
             routed=self.executor.route, oversize=self.executor.last_oversize,
+            assemble_seconds=self.executor.last_assemble_seconds,
         )
 
     # -- lambda path -------------------------------------------------------
@@ -270,6 +354,7 @@ class Engine:
         *,
         warm_start: bool = True,
         p_max: int | None = None,
+        output: str | None = None,
     ) -> list[GlassoResult]:
         """Descending path: one union-find pass, diffed plans, warm starts.
 
@@ -284,10 +369,13 @@ class Engine:
             S, lambdas, dtype=self.np_dtype,
             classify_structures=self.executor.route, oversize=self.oversize,
         )
-        return self._execute_path(S, path, warm_start=warm_start, p_max=p_max)
+        return self._execute_path(
+            S, path, warm_start=warm_start, p_max=p_max, output=output
+        )
 
     def _execute_path(
-        self, S, path, *, warm_start: bool, p_max: int | None
+        self, S, path, *, warm_start: bool, p_max: int | None,
+        output: str | None = None,
     ) -> list[GlassoResult]:
         """Run an already-planned path (dense or streamed) through the
         executor with bucket-level reuse and warm starts."""
@@ -295,6 +383,9 @@ class Engine:
 
         results: list[GlassoResult] = []
         prev: GlassoResult | None = None
+        out_mode = resolve_output(
+            self.output if output is None else output, S.shape[0]
+        )
         for step in path.steps:
             schedule_mod.check_capacity(
                 [len(c) for b in step.plan.buckets for c in b.comps] or [1], p_max
@@ -328,12 +419,14 @@ class Engine:
                 warm_W=warm_W,
                 reused_keys=step.reused_keys if warm_start else frozenset(),
                 keep_solutions=warm_start,
+                output=out_mode,
             )
             seconds = time.perf_counter() - t0
             res = _result(
                 step.plan, step.labels, step.screen, Theta, seconds, self.solver,
                 step.lam, routed=self.executor.route,
                 oversize=self.executor.last_oversize,
+                assemble_seconds=self.executor.last_assemble_seconds,
             )
             results.append(res)
             prev = res
@@ -349,6 +442,7 @@ class Engine:
         stream=None,
         p_max: int | None = None,
         warm_W: np.ndarray | None = None,
+        output: str | None = None,
     ) -> GlassoResult:
         """One solve screened straight from the (n, p) data matrix.
 
@@ -366,6 +460,7 @@ class Engine:
             screen_stats=sc.stats[0],
             p_max=p_max,
             warm_W=warm_W,
+            output=output,
         )
 
     def run_path_from_data(
@@ -376,6 +471,7 @@ class Engine:
         stream=None,
         warm_start: bool = True,
         p_max: int | None = None,
+        output: str | None = None,
     ) -> list[GlassoResult]:
         """A descending lambda path screened straight from X: one streaming
         screen covers the whole grid (Theorem 2 — the compacted edges above
@@ -391,4 +487,6 @@ class Engine:
             classify_structures=self.executor.route,
             oversize=self.oversize,
         )
-        return self._execute_path(sc.S, path, warm_start=warm_start, p_max=p_max)
+        return self._execute_path(
+            sc.S, path, warm_start=warm_start, p_max=p_max, output=output
+        )

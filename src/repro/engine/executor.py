@@ -35,6 +35,7 @@ Design points, each mapped to a paper/ROADMAP concern:
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -395,6 +396,9 @@ class BucketExecutor:
     # oversize accounting of the MOST RECENT solve_plan call (dispatched /
     # inner_iters / fallbacks) — surfaced as GlassoResult.oversize
     last_oversize: dict = field(default_factory=dict)
+    # assembly-stage seconds of the MOST RECENT solve_plan call — surfaced
+    # as GlassoResult.assemble_seconds (process-wide: engine.assemble_us)
+    last_assemble_seconds: float = 0.0
 
     def __post_init__(self):
         if self.solver not in SOLVERS:
@@ -457,9 +461,13 @@ class BucketExecutor:
             W0 = jnp.linalg.inv(prev)
             T0 = prev
         elif warm_W is not None:
+            # gather through the protocol: warm_W may be a dense array or a
+            # block-sparse previous result (whose cross-component entries
+            # are exact zeros — the merged-component block-diagonal restriction)
+            np_dtype = np.dtype(jnp.dtype(self.dtype).name)
             stacks = []
             for c in bucket.comps:
-                blk = warm_W[np.ix_(c, c)].astype(np.dtype(jnp.dtype(self.dtype).name))
+                blk = blocks_mod.gather_submatrix(warm_W, c, dtype=np_dtype)
                 stacks.append(blocks_mod.pad_block(blk, bucket.size))
             W0 = jnp.asarray(np.stack(stacks), self.dtype)
         else:
@@ -486,8 +494,15 @@ class BucketExecutor:
         warm_W: np.ndarray | None = None,
         reused_keys: frozenset = frozenset(),
         keep_solutions: bool = False,
+        output: str = "dense",
     ) -> np.ndarray:
-        """Dispatch all buckets, then assemble the dense Theta.
+        """Dispatch all buckets, then assemble Theta.
+
+        ``output="sparse"`` hands the per-bucket solution stacks to
+        ``blocks.assemble_sparse`` — the result is a ``SparseTheta`` built
+        on zero-copy views of those stacks, and no (p, p) buffer is ever
+        allocated; ``"dense"`` (default) scatters into the global matrix as
+        before.
 
         ``reused_keys`` marks buckets whose padded arrays were carried over by
         the planner; their previous solutions (if retained via
@@ -643,7 +658,15 @@ class BucketExecutor:
                     new_blocks[p.key] = p.stacked
         self._prev_solutions = new_solutions
         self._prev_blocks = new_blocks
-        return blocks_mod.assemble_dense(plan, [np.asarray(p.out) for p in pending], S)
+        t0 = time.perf_counter()
+        sols = [np.asarray(p.out) for p in pending]
+        if output == "sparse":
+            Theta = blocks_mod.assemble_sparse(plan, sols, S)
+        else:
+            Theta = blocks_mod.assemble_dense(plan, sols, S)
+        self.last_assemble_seconds = time.perf_counter() - t0
+        bump("engine.assemble_us", int(self.last_assemble_seconds * 1e6))
+        return Theta
 
     def _dispatch_repair(
         self, bucket: blocks_mod.Bucket, idx: np.ndarray, candidates, lam: float

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import blocks as blocks_mod
 from repro.core.components import component_lists
-from repro.core.instrument import bump
+from repro.core.instrument import bump, set_peak
 from repro.core.partition import _sorted_edges, labels_at_thresholds
 from repro.core.screening import ScreenStats
 from repro.engine.structure import classify_component
@@ -162,6 +162,7 @@ def build_plan_incremental(
         isolated=isolated,
         buckets=buckets,
     )
+    set_peak("plan.bytes_peak", plan.block_bytes())
     return plan, frozenset(reused)
 
 

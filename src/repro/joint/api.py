@@ -22,6 +22,8 @@ from dataclasses import dataclass, field
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.instrument import bump
+from repro.core.sparse import JointSparseTheta, result_nbytes
 from repro.joint.screen import JointScreenStats
 
 __all__ = ["JointGlassoResult", "joint_glasso"]
@@ -32,15 +34,19 @@ class JointGlassoResult:
     lam1: float
     lam2: float
     penalty: str
-    Theta: np.ndarray              # (K, p, p)
+    Theta: np.ndarray              # (K, p, p) — or a JointSparseTheta when
+                                   # output resolved to "sparse"
     labels: np.ndarray             # union-graph partition (canonical)
     screen: JointScreenStats | None
-    solve_seconds: float
+    solve_seconds: float           # dispatch + verify (assembly EXCLUDED)
     solver: str
     block_sizes: list[int] = field(default_factory=list)
     route_mix: dict = field(default_factory=dict)   # joint structure -> #blocks
     routed: bool = True
     fallbacks: int = 0             # verification failures re-dispatched
+    assemble_seconds: float = 0.0  # scatter/index-build slice of this solve
+    bytes_peak: int = 0            # resident bytes of Theta as assembled
+    output: str = "dense"          # the representation actually returned
 
     @property
     def K(self) -> int:
@@ -48,24 +54,42 @@ class JointGlassoResult:
 
     @property
     def support(self) -> np.ndarray:
-        """Union concentration-graph adjacency (an edge in ANY class)."""
+        """Union concentration-graph adjacency (an edge in ANY class).
+
+        Sparse results derive it from per-block nonzeros (dense bool up to
+        the densify cap, scipy bool CSR above) — no (p, p) densify."""
+        if isinstance(self.Theta, JointSparseTheta):
+            return self.Theta.support()
         A = (np.abs(self.Theta) > 0).any(axis=0)
         np.fill_diagonal(A, False)
         return A
 
     def class_support(self, k: int) -> np.ndarray:
+        if isinstance(self.Theta, JointSparseTheta):
+            return self.Theta.class_view(k).support()
         A = np.abs(self.Theta[k]) > 0
         np.fill_diagonal(A, False)
         return A
 
+    def support_edges(self) -> np.ndarray:
+        """(E, 2) union support edges (upper-triangular, sorted)."""
+        if isinstance(self.Theta, JointSparseTheta):
+            return self.Theta.support_edges()
+        r, c = np.nonzero(np.triu(self.support, k=1))
+        return np.stack([r, c], axis=1).astype(np.int64) if r.size else np.zeros(
+            (0, 2), dtype=np.int64
+        )
+
 
 def _joint_result(
     plan, labels, screen_stats, Theta, seconds, solver, *,
-    routed: bool = True, fallbacks: int = 0,
+    routed: bool = True, fallbacks: int = 0, assemble_seconds: float = 0.0,
 ) -> JointGlassoResult:
     route_mix = {"singleton": len(plan.isolated)} if len(plan.isolated) else {}
     for b in plan.buckets:
         route_mix[b.structure] = route_mix.get(b.structure, 0) + len(b.comps)
+    solve_seconds = max(0.0, float(seconds) - float(assemble_seconds))
+    bump("engine.solve_us", int(solve_seconds * 1e6))
     return JointGlassoResult(
         lam1=plan.lam1,
         lam2=plan.lam2,
@@ -73,7 +97,7 @@ def _joint_result(
         Theta=Theta,
         labels=labels,
         screen=screen_stats,
-        solve_seconds=seconds,
+        solve_seconds=solve_seconds,
         solver=solver,
         block_sizes=sorted(
             (len(c) for b in plan.buckets for c in b.comps), reverse=True
@@ -81,6 +105,9 @@ def _joint_result(
         route_mix=route_mix,
         routed=routed,
         fallbacks=fallbacks,
+        assemble_seconds=float(assemble_seconds),
+        bytes_peak=result_nbytes(Theta),
+        output="sparse" if isinstance(Theta, JointSparseTheta) else "dense",
     )
 
 
@@ -100,6 +127,7 @@ def joint_glasso(
     route: bool = True,
     route_check_tol: float = 1e-6,
     verify_tail: bool = False,
+    output: str = "auto",
     **solver_opts,
 ) -> JointGlassoResult:
     """Solve the K-class joint graphical lasso; see the module docstring.
@@ -108,13 +136,17 @@ def joint_glasso(
     takes the joint ADMM — the unrouted baseline of the equivalence gates);
     ``cc_backend`` picks any registered screening backend for the
     union-graph partition step; ``verify_tail=True`` opts in to exact
-    joint-KKT verification of the ADMM tail (see ``JointEngine``)."""
+    joint-KKT verification of the ADMM tail (see ``JointEngine``).
+
+    ``output`` picks the result representation: "dense" is the (K, p, p)
+    stack, "sparse" a ``JointSparseTheta`` assembled with zero (K, p, p)
+    allocation, "auto" (default) switches to sparse above ``AUTO_SPARSE_P``."""
     from repro.joint.engine import JointEngine
 
     engine = JointEngine(
         solver=solver, dtype=dtype, cc_backend=cc_backend, route=route,
         route_check_tol=route_check_tol, verify_tail=verify_tail,
-        **solver_opts,
+        output=output, **solver_opts,
     )
     if from_data or Xs is not None:
         if Xs is None:

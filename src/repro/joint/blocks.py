@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import blocks as blocks_mod
 from repro.core.components import component_lists
-from repro.core.instrument import bump
+from repro.core.instrument import bump, set_peak
 from repro.joint.screen import classify_joint_component
 
 
@@ -138,9 +138,10 @@ def assemble_joint(
     dtype = (
         np.asarray(bucket_solutions[0]).dtype
         if bucket_solutions
-        else np.float64
+        else blocks_mod.cov_dtype(Ss[0])
     )
     out = np.zeros((plan.K, plan.p, plan.p), dtype=dtype)
+    set_peak("result.bytes_peak", out.nbytes)
     shim = blocks_mod.Plan(
         p=plan.p,
         lam=plan.lam1,
@@ -157,3 +158,42 @@ def assemble_joint(
         sols_k = [np.asarray(sols)[:, k] for sols in bucket_solutions]
         blocks_mod.assemble_dense(shim, sols_k, Ss[k], out=out[k])
     return out
+
+
+def assemble_joint_sparse(
+    plan: JointPlan, bucket_solutions: list[np.ndarray], Ss
+):
+    """Assemble per-component joint solutions into a ``JointSparseTheta``
+    with ZERO (K, p, p) allocation — the joint sibling of ``core.blocks.
+    assemble_sparse``: the (n, K, size, size) bucket stacks become the block
+    storage as-is, one shared component index serves every class, and
+    isolated vertices keep their per-class closed form 1/(S_ii + lam1)."""
+    from repro.core.sparse import JointSparseTheta, _build_index
+
+    stacks = [np.asarray(sols) for sols in bucket_solutions]
+    dtype = stacks[0].dtype if stacks else blocks_mod.cov_dtype(Ss[0])
+    comps: list[np.ndarray] = []
+    loc: list[tuple[int, int]] = []
+    for s, bucket in enumerate(plan.buckets):
+        for r, comp in enumerate(bucket.comps):
+            comps.append(np.asarray(comp, dtype=np.int64))
+            loc.append((s, r))
+    isolated = np.asarray(plan.isolated, dtype=np.int64)
+    if isolated.size:
+        iso_vals = np.stack(
+            [
+                (1.0 / (blocks_mod.gather_diag(S, isolated) + plan.lam1)).astype(
+                    dtype, copy=False
+                )
+                for S in Ss
+            ]
+        )
+    else:
+        iso_vals = np.zeros((plan.K, 0), dtype=dtype)
+    comp_id, pos_in = _build_index(plan.p, comps, isolated)
+    Theta = JointSparseTheta(
+        plan.K, plan.p, dtype, stacks, comps, loc, comp_id, pos_in,
+        isolated, iso_vals,
+    )
+    set_peak("result.bytes_peak", Theta.nbytes())
+    return Theta

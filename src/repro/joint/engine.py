@@ -66,8 +66,14 @@ import numpy as np
 from repro.core.instrument import bump
 from repro.core.solvers.closed_form import kkt_ok_stack
 from repro.core.solvers.protocol import solver_spec
+from repro.core.sparse import resolve_output
 from repro.engine.executor import compiled_cached
-from repro.joint.blocks import JointPlan, assemble_joint, build_joint_plan
+from repro.joint.blocks import (
+    JointPlan,
+    assemble_joint,
+    assemble_joint_sparse,
+    build_joint_plan,
+)
 from repro.joint.kkt import joint_kkt_residual
 from repro.joint.screen import (
     JointScreenStats,
@@ -241,6 +247,7 @@ class JointEngine:
         route: bool = True,
         route_check_tol: float = 1e-6,
         verify_tail: bool = False,
+        output: str = "auto",
         **solver_opts,
     ):
         spec = solver_spec(solver)
@@ -248,6 +255,12 @@ class JointEngine:
             raise ValueError(
                 f"solver {solver!r} is not a joint solver (spec.meta['joint'])"
             )
+        if output not in ("dense", "sparse", "auto"):
+            raise ValueError(
+                f"output must be 'dense', 'sparse' or 'auto', got {output!r}"
+            )
+        self.output = output
+        self.last_assemble_seconds = 0.0
         self.solver = solver
         self.dtype = dtype
         self.np_dtype = np.dtype(jnp.dtype(dtype).name)
@@ -307,6 +320,7 @@ class JointEngine:
         screen: bool = True,
         labels: np.ndarray | None = None,
         screen_stats: JointScreenStats | None = None,
+        output: str | None = None,
     ):
         """One joint solve; see ``repro.joint.api.joint_glasso`` for the
         user-facing wrapper and result object."""
@@ -335,12 +349,14 @@ class JointEngine:
             Ss, lam1, lam2, labels, penalty=penalty,
             classify=self.route and screened,
         )
+        out_mode = resolve_output(self.output if output is None else output, p)
         t0 = time.perf_counter()
-        Theta, fallbacks = self.solve_plan(plan, Ss)
+        Theta, fallbacks = self.solve_plan(plan, Ss, output=out_mode)
         seconds = time.perf_counter() - t0
         return _joint_result(
             plan, labels, screen_stats, Theta, seconds, self.solver,
             routed=self.route, fallbacks=fallbacks,
+            assemble_seconds=self.last_assemble_seconds,
         )
 
     def run_from_data(
@@ -351,6 +367,7 @@ class JointEngine:
         *,
         penalty: str = "group",
         stream=None,
+        output: str | None = None,
     ):
         """One joint solve screened straight from the per-class (n_k, p)
         data matrices — no class's dense S ever exists (``repro.joint.
@@ -362,13 +379,17 @@ class JointEngine:
         )
         return self.run(
             sc.S, lam1, lam2, penalty=penalty,
-            labels=sc.labels, screen_stats=sc.stats,
+            labels=sc.labels, screen_stats=sc.stats, output=output,
         )
 
-    def solve_plan(self, plan: JointPlan, Ss) -> tuple[np.ndarray, int]:
+    def solve_plan(
+        self, plan: JointPlan, Ss, *, output: str = "dense"
+    ) -> tuple[np.ndarray, int]:
         """Dispatch all buckets async, verify, repair, assemble.
 
-        Returns (Theta (K, p, p), fallbacks for THIS solve)."""
+        Returns (Theta, fallbacks for THIS solve) — Theta is the dense
+        (K, p, p) stack, or a ``JointSparseTheta`` over the bucket solution
+        stacks when ``output="sparse"`` (no (K, p, p) allocation)."""
         from repro.engine.registry import route_for
 
         if self.route and len(plan.isolated):
@@ -461,7 +482,14 @@ class JointEngine:
             jax.block_until_ready([r[2] for r in repairs])
             for pos, idx, fixed in repairs:
                 solutions[pos][idx] = np.asarray(fixed)
-        return assemble_joint(plan, solutions, Ss), fallbacks
+        t0 = time.perf_counter()
+        if output == "sparse":
+            Theta = assemble_joint_sparse(plan, solutions, Ss)
+        else:
+            Theta = assemble_joint(plan, solutions, Ss)
+        self.last_assemble_seconds = time.perf_counter() - t0
+        bump("engine.assemble_us", int(self.last_assemble_seconds * 1e6))
+        return Theta, fallbacks
 
     def _admm_ok(self, S_stack: np.ndarray, theta: np.ndarray, plan) -> bool:
         scale = max(1.0, float(np.abs(S_stack).max()))

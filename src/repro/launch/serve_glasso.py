@@ -80,6 +80,20 @@ COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
     joint.fallbacks              sum   joint verifications re-dispatched
     joint.candidate_pairs        sum   streamed pairs completed for the rule
     joint.edges                  sum   union-graph edges retained
+    engine.screen_us             sum   screening wall time (microseconds)
+    engine.solve_us              sum   dispatch+verify wall time (us)
+    engine.assemble_us           sum   result-assembly wall time (us)
+    result.bytes_peak            peak  resident bytes of assembled results
+
+SPARSE RESULTS (``output=``): the server-level ``output`` ("dense" /
+"sparse" / "auto", default "auto") picks the result representation for
+every admission path, and each ``submit*`` call can override it
+per-request.  "auto" resolves per request from its p (sparse above
+``core.sparse.AUTO_SPARSE_P``); a sparse result's ``Theta`` is a
+``SparseTheta`` / ``JointSparseTheta`` — per-component padded block stacks,
+edge lists via ``support_edges()``, CSR via ``to_csr()`` — assembled with
+ZERO (p, p) allocation, so serving payloads for huge requests stay
+O(sum b_i^2).
 
 OVERSIZE ADMISSION (``oversize_threshold`` / ``oversize_budget_mb``): a
 request whose screen leaves a component past the single-device block cap is
@@ -117,6 +131,8 @@ class GlassoRequest:
     labels: np.ndarray | None = None
     stats: object = None
     plan: object = None
+    # resolved result representation ("dense" | "sparse"), fixed at admission
+    output: str = "dense"
 
 
 @dataclass
@@ -132,6 +148,7 @@ class JointRequest:
     labels: np.ndarray | None = None
     stats: object = None
     plan: object = None
+    output: str = "dense"
 
 
 @dataclass
@@ -172,6 +189,7 @@ class GlassoServer:
         route_check_tol: float = 1e-6,
         oversize_threshold: int | None = None,
         oversize_budget_mb: float | str | None = None,
+        output: str = "auto",
         **solver_opts,
     ):
         import jax.numpy as jnp
@@ -185,8 +203,13 @@ class GlassoServer:
             raise ValueError(
                 f"unknown solver {solver!r}; available: {sorted(SOLVERS)}"
             )
+        if output not in ("dense", "sparse", "auto"):
+            raise ValueError(
+                f"output must be 'dense', 'sparse' or 'auto', got {output!r}"
+            )
         _validate_solver_opts(solver, solver_opts)
         self.solver = solver
+        self.output = output
         self.dtype = jnp.float64 if dtype is None else dtype
         self.cc_backend = cc_backend
         self.max_delay = max_delay
@@ -290,8 +313,18 @@ class GlassoServer:
 
     # -- client API --------------------------------------------------------
 
-    def submit(self, S: np.ndarray, lam: float) -> Future:
+    def _resolve_output(self, output: str | None, p: int) -> str:
+        """Fix a request's result representation at admission: the call-site
+        ``output=`` overrides the server default; "auto" resolves from p."""
+        from repro.core.sparse import resolve_output
+
+        return resolve_output(self.output if output is None else output, p)
+
+    def submit(
+        self, S: np.ndarray, lam: float, *, output: str | None = None
+    ) -> Future:
         req = GlassoRequest(S=np.asarray(S), lam=float(lam))
+        req.output = self._resolve_output(output, req.S.shape[0])
         if self._stop.is_set():
             # fail fast instead of parking a request no batcher will serve
             req.future.set_exception(RuntimeError("GlassoServer stopped"))
@@ -307,7 +340,13 @@ class GlassoServer:
         return req.future
 
     def submit_data(
-        self, X: np.ndarray, lam: float, *, session: str | None = None, stream=None
+        self,
+        X: np.ndarray,
+        lam: float,
+        *,
+        session: str | None = None,
+        stream=None,
+        output: str | None = None,
     ) -> Future:
         """Admit a request from the raw (n, p) DATA matrix.
 
@@ -326,6 +365,7 @@ class GlassoServer:
         from repro.stream import DataSession, stream_screen
 
         req = GlassoRequest(S=None, lam=float(lam))
+        req.output = self._resolve_output(output, int(np.asarray(X).shape[1]))
         if self._stop.is_set():
             req.future.set_exception(RuntimeError("GlassoServer stopped"))
             return req.future
@@ -372,6 +412,7 @@ class GlassoServer:
         penalty: str = "group",
         Xs=None,
         stream=None,
+        output: str | None = None,
     ) -> Future:
         """Admit a K-class JOINT request (``repro.joint``).
 
@@ -415,6 +456,7 @@ class GlassoServer:
             req.plan = engine.plan(
                 req.Ss, req.lam1, req.lam2, req.labels, penalty=penalty
             )
+            req.output = self._resolve_output(output, int(req.plan.p))
         except Exception as e:
             req.future.set_exception(e)
             return req.future
@@ -446,15 +488,17 @@ class GlassoServer:
         from repro.joint.api import _joint_result
 
         try:
+            engine = self._joint_engine()
             t0 = time.perf_counter()
-            Theta, fallbacks = self._joint_engine().solve_plan(
-                req.plan, req.Ss
+            Theta, fallbacks = engine.solve_plan(
+                req.plan, req.Ss, output=req.output
             )
             seconds = time.perf_counter() - t0
             req.future.set_result(
                 _joint_result(
                     req.plan, req.labels, req.stats, Theta, seconds,
                     "joint_admm", routed=self.route, fallbacks=fallbacks,
+                    assemble_seconds=engine.last_assemble_seconds,
                 )
             )
         except Exception as e:
@@ -526,9 +570,11 @@ class GlassoServer:
                         warm_W = blockwise_inverse(
                             prev.labels, prev.Theta, needed
                         )
+                out_mode = self._resolve_output(None, int(up.S.shape[0]))
                 t0 = time.perf_counter()
                 Theta = self._session_executor.solve_plan(
-                    plan, entry.session.lam, up.S, warm_W=warm_W
+                    plan, entry.session.lam, up.S, warm_W=warm_W,
+                    output=out_mode,
                 )
                 seconds = time.perf_counter() - t0
                 fut.set_result(
@@ -536,6 +582,9 @@ class GlassoServer:
                         plan, up.labels, up.stats, Theta, seconds, self.solver,
                         entry.session.lam, routed=self.route,
                         oversize=self._session_executor.last_oversize,
+                        assemble_seconds=(
+                            self._session_executor.last_assemble_seconds
+                        ),
                     )
                 )
             except Exception as e:
@@ -585,7 +634,9 @@ class GlassoServer:
             # synchronous; they queue for the batcher like iterative work
             return False
         t0 = time.perf_counter()
-        Theta = self._fast_executor.solve_plan(req.plan, req.lam, req.S)
+        Theta = self._fast_executor.solve_plan(
+            req.plan, req.lam, req.S, output=req.output
+        )
         seconds = time.perf_counter() - t0
         bump("serve.fastpath_requests")
         bump(
@@ -599,6 +650,7 @@ class GlassoServer:
             _result(
                 req.plan, req.labels, req.stats, Theta, seconds, self.solver,
                 req.lam, routed=True,
+                assemble_seconds=self._fast_executor.last_assemble_seconds,
             )
         )
         return True
@@ -835,13 +887,21 @@ class GlassoServer:
         total_cost = sum(costs.values())
         for req, labels, stats, plan in per_req:
             bucket_sols = [sols_by_bucket[id(b)] for b in plan.buckets]
-            Theta = blocks_mod.assemble_dense(plan, bucket_sols, req.S)
+            ta = time.perf_counter()
+            if req.output == "sparse":
+                Theta = blocks_mod.assemble_sparse(plan, bucket_sols, req.S)
+            else:
+                Theta = blocks_mod.assemble_dense(plan, bucket_sols, req.S)
+            assemble_seconds = time.perf_counter() - ta
+            bump("engine.assemble_us", int(assemble_seconds * 1e6))
             share = costs[id(req)] / total_cost if total_cost > 0 else 1.0 / len(per_req)
             req.future.set_result(
                 _result(
-                    plan, labels, stats, Theta, seconds * share, self.solver,
+                    plan, labels, stats, Theta,
+                    seconds * share + assemble_seconds, self.solver,
                     req.lam, routed=self.route,
                     oversize=oversize_by_req.get(id(req)),
+                    assemble_seconds=assemble_seconds,
                 )
             )
 
@@ -857,6 +917,8 @@ def serve_stats() -> dict[str, int | float]:
         **counts("stream."),
         **counts("solver.oversize."),
         **counts("joint."),
+        **counts("engine."),
+        **counts("result."),
     }
 
 

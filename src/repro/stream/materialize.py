@@ -121,6 +121,8 @@ class MaterializedCovariance:
     def nbytes(self) -> int:
         return (
             self._diag.nbytes
+            + self._root_of.nbytes
+            + self._pos_in.nbytes
             + sum(b.nbytes for b in self._blocks.values())
             + sum(Xc.nbytes for Xc in self._deferred.values())
         )

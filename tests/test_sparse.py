@@ -1,0 +1,329 @@
+"""Sparse-native result representation (DESIGN.md Section 13).
+
+The contract under test: ``output="sparse"`` returns a ``SparseTheta`` /
+``JointSparseTheta`` that is NUMERICALLY IDENTICAL to the dense result —
+same solve, same blocks, only the container differs — across every screening
+backend, every route class of the structure ladder, the joint K-class stack,
+and the from-data streamed path; global views (COO/CSR/dense/support) round-
+trip exactly; and the sparse-aware KKT verifier reproduces the dense
+residual without ever allocating a (p, p) buffer (asserted through the
+``result.bytes_peak`` watermark).
+"""
+
+import numpy as np
+import pytest
+
+from conftest import random_covariance
+from repro.core import glasso, glasso_path
+from repro.core.sparse import (
+    AUTO_SPARSE_P,
+    JointSparseTheta,
+    SparseTheta,
+    resolve_output,
+)
+from repro.covariance import (
+    lambda_interval_for_k,
+    paper_synthetic,
+    structured_synthetic,
+)
+
+
+def _sparse_dense_pair(S, lam, **kw):
+    rs = glasso(S, lam, output="sparse", **kw)
+    rd = glasso(S, lam, output="dense", **kw)
+    assert isinstance(rs.Theta, SparseTheta)
+    assert not isinstance(rd.Theta, SparseTheta)
+    return rs, rd
+
+
+def _assert_equivalent(rs, rd, atol=1e-8):
+    Ts = rs.Theta.toarray()
+    assert Ts.dtype == rd.Theta.dtype
+    np.testing.assert_allclose(Ts, rd.Theta, atol=atol, rtol=0)
+    # support artifacts agree entry-for-entry, not just numerically
+    assert rs.Theta.nnz == np.count_nonzero(Ts)
+    np.testing.assert_array_equal(rs.support, rd.support)
+    np.testing.assert_array_equal(rs.support_edges(), rd.support_edges())
+
+
+# -- equivalence across screening backends ---------------------------------
+
+
+@pytest.mark.parametrize("backend", ["host", "jax", "pallas", "shard_map"])
+def test_sparse_equals_dense_all_backends(backend):
+    S = paper_synthetic(4, 10, seed=3)
+    lam_min, lam_max = lambda_interval_for_k(S, 4)
+    lam = 0.5 * (lam_min + lam_max)
+    rs, rd = _sparse_dense_pair(S, lam, cc_backend=backend, tol=1e-9)
+    assert rs.output == "sparse" and rd.output == "dense"
+    np.testing.assert_array_equal(rs.labels, rd.labels)
+    _assert_equivalent(rs, rd)
+
+
+# -- equivalence across every route class ----------------------------------
+
+
+def test_sparse_equals_dense_structured_ladder():
+    """structured_synthetic exercises singleton/pair/tree/chordal/general
+    blocks in one plan; the sparse container must not depend on the route."""
+    S = structured_synthetic(12, 16, seed=1)
+    for lam in (0.7, 0.45):
+        rs, rd = _sparse_dense_pair(S, lam, tol=1e-9)
+        _assert_equivalent(rs, rd)
+        if lam == 0.45:
+            # several distinct ladder classes were actually exercised
+            assert len(set(rs.route_mix) - {"singleton"}) >= 2
+
+
+def test_sparse_equals_dense_oversize_route():
+    """Oversize (sharded) blocks assemble into the same sparse container."""
+    S = structured_synthetic(6, 16, seed=2)
+    rs, rd = _sparse_dense_pair(S, 0.4, oversize_threshold=12, tol=1e-8)
+    assert rs.oversize is not None and rs.oversize["dispatched"] >= 1
+    _assert_equivalent(rs, rd, atol=1e-6)
+
+
+def test_sparse_exact_on_dyadic_ties():
+    """|S_ij| == lam exactly (dyadic, no rounding): the screen excludes the
+    edge in both paths and sparse == dense BITWISE."""
+    S = np.eye(6)
+    S[0, 1] = S[1, 0] = 0.5       # == lam: excluded (strict >)
+    S[2, 3] = S[3, 2] = 0.75      # > lam: kept
+    rs, rd = _sparse_dense_pair(S, 0.5, tol=1e-10)
+    assert np.array_equal(rs.Theta.toarray(), rd.Theta)
+    assert rs.Theta.nnz == np.count_nonzero(rd.Theta)
+    # the tied pair ended isolated in both representations
+    assert {0, 1} <= set(rs.Theta.isolated.tolist())
+
+
+# -- joint K-class ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("penalty", ["group", "fused"])
+def test_joint_sparse_equals_dense(penalty):
+    from repro.joint import joint_glasso
+
+    Ss = [paper_synthetic(3, 8, seed=i) for i in range(3)]
+    lam_min, lam_max = lambda_interval_for_k(Ss[0], 3)
+    lam1 = 0.5 * (lam_min + lam_max)
+    kw = dict(penalty=penalty, tol=1e-9)
+    js = joint_glasso(Ss, lam1, 0.05, output="sparse", **kw)
+    jd = joint_glasso(Ss, lam1, 0.05, output="dense", **kw)
+    assert isinstance(js.Theta, JointSparseTheta)
+    assert js.K == jd.K == 3
+    np.testing.assert_allclose(js.Theta.toarray(), jd.Theta, atol=1e-7, rtol=0)
+    np.testing.assert_array_equal(js.support, jd.support)
+    np.testing.assert_array_equal(js.support_edges(), jd.support_edges())
+    for k in range(3):
+        np.testing.assert_array_equal(js.class_support(k), jd.class_support(k))
+        np.testing.assert_allclose(
+            js.Theta[k].toarray(), jd.Theta[k], atol=1e-7, rtol=0
+        )
+
+
+# -- from-data streamed path -------------------------------------------------
+
+
+def test_sparse_from_data_streamed(rng):
+    X = rng.standard_normal((300, 64))
+    X[:, 32:40] += 2.0 * rng.standard_normal((300, 1))  # planted component
+    lam = 0.35
+    rs = glasso(X=X, lam=lam, from_data=True, output="sparse", tol=1e-9)
+    rd = glasso(X=X, lam=lam, from_data=True, output="dense", tol=1e-9)
+    assert isinstance(rs.Theta, SparseTheta)
+    _assert_equivalent(rs, rd)
+
+
+# -- global views / round-trips ---------------------------------------------
+
+
+def test_coo_csr_dense_round_trips():
+    S = structured_synthetic(8, 16, seed=4)
+    r = glasso(S, 0.45, output="sparse", tol=1e-9)
+    T = r.Theta
+    dense = T.toarray()
+    rows, cols, vals = T.to_coo()
+    back = np.zeros_like(dense)
+    back[rows, cols] = vals
+    np.testing.assert_array_equal(back, dense)
+    assert len(rows) == T.nnz == np.count_nonzero(dense)
+    np.testing.assert_array_equal(T.to_csr().toarray(), dense)
+    np.testing.assert_array_equal(np.asarray(T), dense)
+    np.testing.assert_array_equal(T.diagonal(), np.diagonal(dense))
+    # gather protocol: cross-component gathers are exact zeros off-block
+    idx = np.arange(0, T.p, 7)
+    np.testing.assert_array_equal(T.gather_block(idx), dense[np.ix_(idx, idx)])
+    np.testing.assert_array_equal(T.diag_at(idx), np.diagonal(dense)[idx])
+
+
+def test_densify_refusal_above_cap():
+    S = paper_synthetic(3, 8, seed=0)
+    lam = 0.5 * sum(lambda_interval_for_k(S, 3))
+    T = glasso(S, lam, output="sparse").Theta
+    T.densify_max = T.p - 1  # simulate an oversize result
+    with pytest.raises(ValueError, match="refusing to densify"):
+        T.toarray()
+    with pytest.raises(ValueError, match="refusing to densify"):
+        np.asarray(T)
+    forced = T.toarray(force=True)
+    assert forced.shape == (T.p, T.p)
+    # support switches to scipy CSR above the cap — same adjacency
+    sp_support = T.support()
+    assert not isinstance(sp_support, np.ndarray)
+    T.densify_max = T.p
+    np.testing.assert_array_equal(sp_support.toarray(), T.support())
+
+
+def test_resolve_output_thresholds():
+    assert resolve_output("auto", AUTO_SPARSE_P) == "dense"
+    assert resolve_output("auto", AUTO_SPARSE_P + 1) == "sparse"
+    assert resolve_output(None, AUTO_SPARSE_P + 1) == "sparse"
+    assert resolve_output("dense", 10**6) == "dense"
+    assert resolve_output("sparse", 2) == "sparse"
+    with pytest.raises(ValueError):
+        resolve_output("csv", 10)
+
+
+# -- sparse-aware KKT verification ------------------------------------------
+
+
+def test_kkt_sparse_matches_dense_and_never_densifies():
+    from repro.core.instrument import counts, reset
+    from repro.core.solvers.kkt import kkt_residual, kkt_residual_sparse
+
+    S = structured_synthetic(12, 16, seed=5)
+    rs, rd = _sparse_dense_pair(S, 0.45, tol=1e-9)
+    reset("result.")
+    res_sparse = kkt_residual_sparse(S, rs.Theta, 0.45)
+    res_dense = float(kkt_residual(S, np.asarray(rd.Theta), 0.45))
+    assert res_sparse == pytest.approx(res_dense, abs=1e-9)
+    # the watermark proves no (p, p) buffer was part of the verification
+    peak = counts("result.")["result.bytes_peak"]
+    assert 0 < peak < S.shape[0] ** 2 * np.dtype(np.float64).itemsize
+
+
+def test_joint_kkt_sparse_matches_dense():
+    from repro.core.instrument import counts, reset
+    from repro.joint import joint_glasso
+    from repro.joint.kkt import joint_kkt_residual, joint_kkt_residual_sparse
+
+    Ss = [paper_synthetic(3, 8, seed=10 + i) for i in range(2)]
+    lam1 = 0.5 * sum(lambda_interval_for_k(Ss[0], 3))
+    js = joint_glasso(Ss, lam1, 0.05, output="sparse", tol=1e-9)
+    jd = joint_glasso(Ss, lam1, 0.05, output="dense", tol=1e-9)
+    reset("result.")
+    res_sparse = joint_kkt_residual_sparse(Ss, js.Theta, lam1, 0.05)
+    res_dense = joint_kkt_residual(Ss, jd.Theta, lam1, 0.05)
+    assert res_sparse == pytest.approx(res_dense, abs=1e-8)
+    p = Ss[0].shape[0]
+    peak = counts("result.")["result.bytes_peak"]
+    assert 0 < peak < 2 * p * p * np.dtype(np.float64).itemsize
+
+
+# -- stage attribution -------------------------------------------------------
+
+
+def test_stage_counters_and_bytes_peak():
+    from repro.core.instrument import counts, reset
+
+    S = paper_synthetic(4, 12, seed=6)
+    lam = 0.5 * sum(lambda_interval_for_k(S, 4))
+    reset("engine.")
+    reset("result.")
+    r = glasso(S, lam, output="sparse")
+    eng = counts("engine.")
+    assert eng.get("engine.solve_us", 0) > 0
+    assert "engine.assemble_us" in eng
+    assert eng.get("engine.screen_us", 0) > 0
+    assert r.assemble_seconds >= 0.0
+    assert r.solve_seconds >= 0.0  # assembly excluded, still non-negative
+    assert r.screen_seconds > 0.0
+    assert r.bytes_peak == r.Theta.nbytes()
+    assert r.output == "sparse"
+    # sparse container is strictly smaller than the dense result would be
+    assert r.bytes_peak < S.shape[0] ** 2 * np.dtype(np.float64).itemsize
+
+
+def test_support_derivation_no_dense_intermediate(rng):
+    S = random_covariance(rng, 40)
+    r = glasso(S, 0.3, output="sparse")
+    rd = glasso(S, 0.3, output="dense")
+    sup = r.support
+    assert sup.dtype == bool and not sup.diagonal().any()
+    np.testing.assert_array_equal(sup, rd.support)
+
+
+# -- dtype regression (satellite 6) -----------------------------------------
+
+
+def test_assemble_dense_dtype_from_S_when_no_buckets():
+    from repro.core import blocks as blocks_mod
+    from repro.core.screening import thresholded_components
+    from repro.engine.planner import build_plan_incremental
+
+    S = np.eye(12, dtype=np.float32)  # everything isolated at any lam > 0
+    labels, _ = thresholded_components(S, 0.5)
+    plan, _ = build_plan_incremental(S, 0.5, labels)
+    assert not plan.buckets
+    Theta = blocks_mod.assemble_dense(plan, [], S)
+    assert Theta.dtype == np.float32  # was silently float64 before
+    sp = blocks_mod.assemble_sparse(plan, [], S)
+    assert sp.dtype == np.float32
+    np.testing.assert_array_equal(sp.toarray(), Theta)
+
+
+# -- path warm starts through sparse results ---------------------------------
+
+
+def test_sparse_path_equals_dense_path():
+    S = structured_synthetic(8, 16, seed=7)
+    lams = [0.7, 0.5, 0.4]
+    path_s = glasso_path(S, lams, output="sparse", tol=1e-9)
+    path_d = glasso_path(S, lams, output="dense", tol=1e-9)
+    for rs, rd in zip(path_s, path_d):
+        assert isinstance(rs.Theta, SparseTheta)
+        np.testing.assert_allclose(
+            rs.Theta.toarray(), rd.Theta, atol=1e-7, rtol=0
+        )
+        np.testing.assert_array_equal(rs.labels, rd.labels)
+
+
+def test_blockwise_inverse_sparse():
+    from repro.engine.api import blockwise_inverse
+
+    S = paper_synthetic(3, 10, seed=8)
+    lam = 0.5 * sum(lambda_interval_for_k(S, 3))
+    r = glasso(S, lam, output="sparse")
+    needed = np.ones(S.shape[0], dtype=bool)
+    W = blockwise_inverse(r.labels, r.Theta, needed)
+    Wd = blockwise_inverse(r.labels, r.Theta.toarray(), needed)
+    assert isinstance(W, SparseTheta)
+    np.testing.assert_allclose(W.toarray(), np.asarray(Wd), atol=1e-9, rtol=0)
+
+
+# -- serving payloads --------------------------------------------------------
+
+
+def test_server_sparse_payloads():
+    from repro.launch.serve_glasso import GlassoServer
+
+    S = paper_synthetic(4, 10, seed=9)
+    lam = 0.5 * sum(lambda_interval_for_k(S, 4))
+    with GlassoServer(solver="bcd", tol=1e-8, fast_path=False) as srv:
+        rs = srv.submit(S, lam, output="sparse").result(120)
+        rd = srv.submit(S, lam, output="dense").result(120)
+        ra = srv.submit(S, lam).result(120)  # auto at small p -> dense
+    assert isinstance(rs.Theta, SparseTheta)
+    assert ra.output == "dense"
+    np.testing.assert_allclose(rs.Theta.toarray(), rd.Theta, atol=1e-8, rtol=0)
+    np.testing.assert_array_equal(rs.support_edges(), rd.support_edges())
+    r, c, v = rs.Theta.to_coo()  # the edge-list/COO payload a client ships
+    assert len(r) == rs.Theta.nnz
+    assert rs.assemble_seconds >= 0.0 and rs.bytes_peak > 0
+
+
+def test_server_output_validation():
+    from repro.launch.serve_glasso import GlassoServer
+
+    with pytest.raises(ValueError, match="output"):
+        GlassoServer(output="csv")
