@@ -114,6 +114,7 @@ def run_arm(arm: str, p: int, seed: int = 0) -> dict:
             "theta_absum": float(np.abs(Theta).sum()),
         }
     elif arm == "sharded":
+        from repro.core import EngineOptions
         from repro.core.glasso import glasso
         from repro.core.instrument import counts
 
@@ -122,8 +123,12 @@ def run_arm(arm: str, p: int, seed: int = 0) -> dict:
             f"{jax.device_count()} — spawn via the parent"
         )
         res = glasso(
-            S, LAM, solver="admm", tol=1e-9, route_check_tol=TOL,
-            oversize_threshold=b - 1,  # the giant block is oversize, rest not
+            S, LAM,
+            options=EngineOptions(
+                solver="admm", route_check_tol=TOL,
+                oversize_threshold=b - 1,  # giant block is oversize, rest not
+                solver_opts={"tol": 1e-9},
+            ),
         )
         c = counts("solver.oversize.")
         # oracle comparison runs in the PARENT via the theta fingerprints +
@@ -258,6 +263,7 @@ def smoke(log=print) -> None:
     jax.config.update("jax_enable_x64", True)
     import jax.numpy as jnp
 
+    from repro.core import EngineOptions
     from repro.core.glasso import glasso
     from repro.core.instrument import counts, reset
     from repro.core.solvers.admm import glasso_admm
@@ -266,9 +272,14 @@ def smoke(log=print) -> None:
     S = _workload(p, seed=3)
     blk = _giant_block(S, LAM)
     reset("solver.oversize")
-    base = glasso(S, LAM, solver="admm", tol=1e-9)
+    base = glasso(
+        S, LAM,
+        options=EngineOptions(solver="admm", solver_opts={"tol": 1e-9}),
+    )
     over = glasso(
-        S, LAM, solver="admm", tol=1e-9, oversize_threshold=blk.shape[0] - 1
+        S, LAM,
+        options=EngineOptions(solver="admm", solver_opts={"tol": 1e-9},
+                              oversize_threshold=blk.shape[0] - 1),
     )
     c = counts("solver.oversize.")
     assert c.get("solver.oversize.dispatched", 0) >= 1, "oversize never routed"

@@ -55,9 +55,10 @@ def smoke() -> None:
     import jax
 
     jax.config.update("jax_enable_x64", True)
-    from repro.core import glasso
+    from repro.core import EngineOptions, glasso
     from repro.joint import joint_glasso
 
+    opts = EngineOptions(solver_opts={"tol": 1e-9})
     rng = np.random.default_rng(0)
     K, p, n = 3, 24, 40
     base = rng.standard_normal((n, p)) * (0.3 + rng.random(p))
@@ -72,18 +73,22 @@ def smoke() -> None:
     lam2 = 0.4 * lam1
 
     for penalty in ("group", "fused"):
-        res = joint_glasso(Ss, lam1, 0.0, penalty=penalty, tol=1e-9)
+        res = joint_glasso(Ss, lam1, 0.0, penalty=penalty, options=opts)
         assert res.fallbacks == 0
         for k in range(K):
-            direct = glasso(Ss[k], lam1, solver="admm", tol=1e-9)
+            direct = glasso(
+                Ss[k], lam1,
+                options=EngineOptions(solver="admm",
+                                      solver_opts={"tol": 1e-9}),
+            )
             err = float(np.abs(res.Theta[k] - direct.Theta).max())
             assert err < 1e-6, f"{penalty} lam2=0 class {k}: diff {err:.2e}"
         print(f"smoke: {penalty:5s} lam2=0 joint == {K} independent glasso")
 
-        screened = joint_glasso(Ss, lam1, lam2, penalty=penalty, tol=1e-9)
+        screened = joint_glasso(Ss, lam1, lam2, penalty=penalty, options=opts)
         brute = joint_glasso(
-            Ss, lam1, lam2, penalty=penalty, screen=False, route=False,
-            tol=1e-9,
+            Ss, lam1, lam2, penalty=penalty, screen=False,
+            options=EngineOptions(route=False, solver_opts={"tol": 1e-9}),
         )
         err = float(np.abs(screened.Theta - brute.Theta).max())
         assert err < 1e-6, f"{penalty} screened vs unscreened: diff {err:.2e}"
@@ -109,7 +114,7 @@ def run(
     import jax
 
     jax.config.update("jax_enable_x64", True)
-    from repro.core import glasso
+    from repro.core import EngineOptions, glasso
     from repro.core.instrument import reset, tail_counts
     from repro.covariance import structured_synthetic
     from repro.joint import joint_glasso
@@ -117,6 +122,7 @@ def run(
     lam1, lam2 = 0.4, 0.1
     tol = 1e-9  # tight enough that every joint-ADMM block clears the 1e-6
                # KKT gate without a fallback re-dispatch (the acceptance bar)
+    opts = EngineOptions(solver_opts={"tol": tol})
     Ss = structured_synthetic(
         K_blocks, p1, classes=n_classes, shared_fraction=shared_fraction,
         seed=1,
@@ -129,9 +135,9 @@ def run(
     )
 
     # warm the compiled caches off the clock
-    joint_glasso(list(Ss), lam1, lam2, penalty=penalty, tol=tol)
+    joint_glasso(list(Ss), lam1, lam2, penalty=penalty, options=opts)
     for k in range(n_classes):
-        glasso(Ss[k], lam1, tol=tol)
+        glasso(Ss[k], lam1, options=opts)
 
     screen_s, solve_s, indep_s = [], [], []
     res = None
@@ -140,7 +146,7 @@ def run(
     for _ in range(reps):
         reset("router")
         reset("joint")
-        res = joint_glasso(list(Ss), lam1, lam2, penalty=penalty, tol=tol)
+        res = joint_glasso(list(Ss), lam1, lam2, penalty=penalty, options=opts)
         screen_s.append(res.screen.seconds)
         solve_s.append(res.solve_seconds)
         mix = tail_counts("router.route.")
@@ -149,7 +155,7 @@ def run(
         assert res.fallbacks == 0, f"joint fallbacks: {res.fallbacks}"
         indep_s.append(
             sum(
-                glasso(Ss[k], lam1, tol=tol).solve_seconds
+                glasso(Ss[k], lam1, options=opts).solve_seconds
                 for k in range(n_classes)
             )
         )
@@ -159,18 +165,18 @@ def run(
     Sh = structured_synthetic(
         K_blocks, p1, classes=n_classes, shared_fraction=1.0, seed=1
     )
-    joint_glasso(list(Sh), lam1, lam2, penalty=penalty, tol=tol)  # warm
+    joint_glasso(list(Sh), lam1, lam2, penalty=penalty, options=opts)  # warm
     for k in range(n_classes):
-        glasso(Sh[k], lam1, tol=tol)
+        glasso(Sh[k], lam1, options=opts)
     shared_joint_s, shared_indep_s = [], []
     shared_fb = 0
     for _ in range(max(reps, 5)):
-        r = joint_glasso(list(Sh), lam1, lam2, penalty=penalty, tol=tol)
+        r = joint_glasso(list(Sh), lam1, lam2, penalty=penalty, options=opts)
         shared_fb += r.fallbacks
         shared_joint_s.append(r.solve_seconds)
         shared_indep_s.append(
             sum(
-                glasso(Sh[k], lam1, tol=tol).solve_seconds
+                glasso(Sh[k], lam1, options=opts).solve_seconds
                 for k in range(n_classes)
             )
         )
@@ -182,14 +188,14 @@ def run(
         blocks_unscreened, p1_unscreened, classes=n_classes,
         shared_fraction=shared_fraction, seed=2,
     )
-    joint_glasso(list(Su), lam1, lam2, penalty=penalty, tol=tol)  # warm
+    joint_glasso(list(Su), lam1, lam2, penalty=penalty, options=opts)  # warm
     t0 = time.perf_counter()
-    scr = joint_glasso(list(Su), lam1, lam2, penalty=penalty, tol=tol)
+    scr = joint_glasso(list(Su), lam1, lam2, penalty=penalty, options=opts)
     screened_small = time.perf_counter() - t0
     t0 = time.perf_counter()
     uns = joint_glasso(
-        list(Su), lam1, lam2, penalty=penalty, screen=False, route=False,
-        tol=tol,
+        list(Su), lam1, lam2, penalty=penalty, screen=False,
+        options=EngineOptions(route=False, solver_opts={"tol": tol}),
     )
     unscreened_small = time.perf_counter() - t0
     worst = float(np.abs(scr.Theta - uns.Theta).max())

@@ -55,7 +55,7 @@ def _workload(K: int, p1: int, n_lambdas: int, seed: int = 1):
 def run(
     K: int = 150, p1: int = 16, n_lambdas: int = 12, reps: int = 3, log=print
 ) -> dict:
-    from repro.core import glasso_path
+    from repro.core import EngineOptions, glasso_path
     from repro.core.instrument import reset, tail_counts
 
     R, lams = _workload(K, p1, n_lambdas)
@@ -64,8 +64,10 @@ def run(
         f"lambdas in [{lams[-1]:.3f}, {lams[0]:.3f}]")
 
     # warm the compiled caches off the clock (compile time is not the metric)
-    glasso_path(R, lams, tol=1e-7)
-    glasso_path(R, lams, route=False, tol=1e-7)
+    glasso_path(R, lams, options=EngineOptions(solver_opts={"tol": 1e-7}))
+    glasso_path(
+        R, lams, options=EngineOptions(route=False, solver_opts={"tol": 1e-7})
+    )
 
     wall_r, wall_u, solve_r, solve_u = [], [], [], []
     routed = unrouted = None
@@ -73,12 +75,15 @@ def run(
     for _ in range(reps):
         reset("router")
         t0 = time.perf_counter()
-        routed = glasso_path(R, lams, tol=1e-7)
+        routed = glasso_path(R, lams, options=EngineOptions(solver_opts={"tol": 1e-7}))
         wall_r.append(time.perf_counter() - t0)
         mix_counts = tail_counts("router.route.")
         fallbacks = tail_counts("router.fallback.")
         t0 = time.perf_counter()
-        unrouted = glasso_path(R, lams, route=False, tol=1e-7)
+        unrouted = glasso_path(
+            R, lams,
+            options=EngineOptions(route=False, solver_opts={"tol": 1e-7}),
+        )
         wall_u.append(time.perf_counter() - t0)
         solve_r.append(sum(r.solve_seconds for r in routed))
         solve_u.append(sum(r.solve_seconds for r in unrouted))

@@ -1,0 +1,426 @@
+"""Serving control-plane benchmark: closed-loop mixed-tenant traffic
+through ``GlassoServer.submit(spec, meta=...)``.
+
+Four concurrent client populations drive one server (the control plane's
+acceptance workload — every spec kind, both SLO classes, one throttled
+tenant):
+
+  * ``web``    interactive tenant, closed-loop: small dense requests
+               alternating a fast-path-able shape (singletons after
+               screening — solved at admission) with an iterative shape
+               (rides the queue + batching window).  Its p50/p99 END-TO-END
+               latency is the bench's headline number.
+  * ``etl``    batch-SLO tenant, closed-loop: dense iterative requests that
+               coalesce behind (and must YIELD to) the interactive class.
+  * ``data``   batch-SLO tenant issuing from-data (``DataSpec``) requests —
+               the streamed screen runs on the client thread, the solve
+               coalesces with ``etl``'s buckets.
+  * ``joint``  batch-SLO tenant issuing K-class ``JointSpec`` requests.
+  * ``noisy``  a quota-throttled tenant blasting open-loop traffic at a
+               token bucket sized far below its arrival rate: most of its
+               submissions MUST be rejected with the typed ``Overload``
+               (reason="quota") — per-tenant isolation under pressure, and
+               the rejected fraction is recorded.
+
+A final phase re-submits one identical dense spec against the server's
+result cache (``result_cache=``): the repeat must hit
+(``serve.cache.hits``) and return the finished result with zero planner
+work.
+
+Hard in-run asserts: every admitted future resolves; interactive latency
+strictly observed (p99 recorded); noisy-tenant rejections > 0 with zero
+rejections for the other tenants; cache hits fire.  ``--json FILE`` writes
+the record; ``--check BASELINE`` fails (exit 1) when interactive p99 or
+total throughput regresses >20% against the committed baseline (with
+absolute noise floors — CI timers are coarse).  ``--smoke`` is the fast
+in-process control-plane gate for CI.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] \
+        [--json BENCH_serve.json] [--check benchmarks/baseline_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import threading
+import time
+
+import numpy as np
+
+# closed-loop request counts per client population
+N_WEB = 40          # interactive dense (per client; 2 clients)
+N_ETL = 12          # batch dense
+N_DATA = 6          # batch from-data
+N_JOINT = 6         # batch joint
+N_NOISY = 40        # open-loop blast against the throttled bucket
+NOISY_RATE = 2.0    # tokens/s — far below the blast's arrival rate
+NOISY_BURST = 3.0
+
+# absolute noise floors for the CI gate: a laptop-class run sits far below
+# these; only a real serving regression (lost fast path, queue convoy) can
+# push p99/throughput past baseline*1.2 AND the floor simultaneously
+P99_FLOOR_S = 0.25
+THROUGHPUT_FLOOR = 0.5  # req/s
+
+
+def _dense_cases():
+    """Two small dense shapes: one all-singleton at its lambda (fast path)
+    and one mid-lambda 3x8 blocks (iterative, queue + coalescing)."""
+    from repro.covariance import lambda_interval_for_k, paper_synthetic
+
+    S_it = paper_synthetic(3, 8, seed=11)
+    lo, hi = lambda_interval_for_k(S_it, 3)
+    lam_it = float(0.5 * (lo + hi))
+    S_fp = paper_synthetic(3, 8, seed=12)
+    off = np.abs(S_fp - np.diag(np.diag(S_fp)))
+    lam_fp = float(off.max() * 1.01)  # everything thresholds away
+    return (S_fp, lam_fp), (S_it, lam_it)
+
+
+def _data_case(seed=21):
+    rng = np.random.default_rng(seed)
+    p = 24
+    X = rng.standard_normal((48, p)) * (0.1 + rng.random(p))
+    return X, 0.08
+
+
+def _joint_case():
+    Ss = [np.eye(12) + 0.5 * (1 - np.eye(12)) * (0.9 ** k) for k in range(2)]
+    return Ss, 0.35, 0.05
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def run(log=print) -> dict:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.core.instrument import count, reset
+    from repro.engine.options import EngineOptions
+    from repro.launch.control_plane import (
+        DataSpec,
+        DenseSpec,
+        JointSpec,
+        Overload,
+        Quota,
+        RequestMeta,
+    )
+    from repro.launch.serve_glasso import GlassoServer
+
+    (S_fp, lam_fp), (S_it, lam_it) = _dense_cases()
+    X, lam_x = _data_case()
+    Ss, lam1, lam2 = _joint_case()
+
+    options = EngineOptions(solver="bcd", solver_opts={"tol": 1e-7})
+    quotas = {"noisy": Quota(rate=NOISY_RATE, burst=NOISY_BURST)}
+    lat: dict[str, list[float]] = {"web": [], "etl": [], "data": [], "joint": []}
+    noisy = {"ok": 0, "rejected": 0}
+    errors: list[BaseException] = []
+    lock = threading.Lock()
+
+    def record(population, seconds):
+        with lock:
+            lat[population].append(seconds)
+
+    reset("serve")
+    reset("joint")
+    with GlassoServer(
+        options=options, max_delay=0.002, quotas=quotas, result_cache=8
+    ) as server:
+        # warm the compiled cache so the measured loop is the steady state
+        # every serving claim is about (first compile would dominate p99)
+        server.submit(DenseSpec(S_fp, lam_fp)).result(timeout=600)
+        server.submit(DenseSpec(S_it, lam_it)).result(timeout=600)
+        server.submit(
+            JointSpec(Ss=Ss, lam1=lam1, lam2=lam2),
+            meta=RequestMeta(slo="batch"),
+        ).result(timeout=600)
+        reset("serve")
+
+        # per-request lambda perturbations (partition-preserving): identical
+        # payloads would collapse into the result cache and the bench would
+        # measure nothing but lookups
+        def _jig(lam, i, k):
+            return float(lam * (1.0 - 1e-7 * (1 + i * 1000 + k)))
+
+        def web_client(i):
+            meta = RequestMeta(tenant="web", slo="interactive")
+            for k in range(N_WEB):
+                S, lam = (S_fp, lam_fp) if k % 2 == 0 else (S_it, lam_it)
+                t0 = time.perf_counter()
+                server.submit(
+                    DenseSpec(S, _jig(lam, i, k)), meta=meta
+                ).result(timeout=600)
+                record("web", time.perf_counter() - t0)
+
+        def etl_client():
+            # bursts of 3 in-flight requests: same padded size, different
+            # lambdas — the shape the batcher coalesces into one dispatch
+            meta = RequestMeta(tenant="etl", slo="batch")
+            for k in range(0, N_ETL, 3):
+                pending = []
+                for j in range(3):
+                    t0 = time.perf_counter()
+                    f = server.submit(
+                        DenseSpec(S_it, _jig(lam_it, 7, k + j)), meta=meta
+                    )
+                    pending.append((t0, f))
+                for t0, f in pending:
+                    f.result(timeout=600)
+                    record("etl", time.perf_counter() - t0)
+
+        def data_client():
+            meta = RequestMeta(tenant="etl", slo="batch")
+            for k in range(N_DATA):
+                t0 = time.perf_counter()
+                server.submit(
+                    DataSpec(
+                        X, _jig(lam_x, 8, k), stream={"tile": 12, "chunk": 24}
+                    ),
+                    meta=meta,
+                ).result(timeout=600)
+                record("data", time.perf_counter() - t0)
+
+        def joint_client():
+            meta = RequestMeta(tenant="joint", slo="batch")
+            for k in range(N_JOINT):
+                t0 = time.perf_counter()
+                server.submit(
+                    JointSpec(Ss=Ss, lam1=_jig(lam1, 9, k), lam2=lam2),
+                    meta=meta,
+                ).result(timeout=600)
+                record("joint", time.perf_counter() - t0)
+
+        def noisy_client():
+            meta = RequestMeta(tenant="noisy", slo="interactive")
+            for k in range(N_NOISY):
+                # perturb lambda per request: identical payloads would hit
+                # the result cache, which by design never charges the quota
+                lam_k = lam_fp * (1.0 - 1e-7 * (k + 1))
+                try:
+                    server.submit(DenseSpec(S_fp, lam_k), meta=meta).result(
+                        timeout=600
+                    )
+                    with lock:
+                        noisy["ok"] += 1
+                except Overload as e:
+                    assert e.reason == "quota", e.reason
+                    with lock:
+                        noisy["rejected"] += 1
+
+        def guard(fn, *a):
+            def inner():
+                try:
+                    fn(*a)
+                except BaseException as e:  # noqa: BLE001 - surfaced below
+                    with lock:
+                        errors.append(e)
+
+            return inner
+
+        clients = (
+            [threading.Thread(target=guard(web_client, i)) for i in range(2)]
+            + [
+                threading.Thread(target=guard(fn))
+                for fn in (etl_client, data_client, joint_client, noisy_client)
+            ]
+        )
+        t0 = time.perf_counter()
+        for t in clients:
+            t.start()
+        for t in clients:
+            t.join(timeout=600)
+        wall = time.perf_counter() - t0
+
+        if errors:
+            raise errors[0]
+
+        # result-cache phase: the identical spec must hit
+        hits0 = count("serve.cache.hits")
+        server.submit(DenseSpec(S_it.copy(), lam_it)).result(timeout=600)
+        t0 = time.perf_counter()
+        server.submit(DenseSpec(S_it.copy(), lam_it)).result(timeout=600)
+        cache_hit_s = time.perf_counter() - t0
+        cache_hits = count("serve.cache.hits") - hits0
+
+    completed = sum(len(v) for v in lat.values()) + noisy["ok"]
+    rec = {
+        "clients": 6,
+        "completed": completed,
+        "wall_seconds": round(wall, 3),
+        "throughput_rps": round(completed / wall, 2),
+        "interactive_p50_s": round(_percentile(lat["web"], 50), 5),
+        "interactive_p99_s": round(_percentile(lat["web"], 99), 5),
+        "batch_p50_s": round(_percentile(lat["etl"] + lat["data"] + lat["joint"], 50), 5),
+        "batch_p99_s": round(_percentile(lat["etl"] + lat["data"] + lat["joint"], 99), 5),
+        "data_p99_s": round(_percentile(lat["data"], 99), 5),
+        "joint_p99_s": round(_percentile(lat["joint"], 99), 5),
+        "noisy_admitted": noisy["ok"],
+        "noisy_rejected": noisy["rejected"],
+        "noisy_rejected_frac": round(noisy["rejected"] / N_NOISY, 3),
+        "rejected_quota": int(count("serve.rejected.quota")),
+        "rejected_queue": int(count("serve.rejected.queue")),
+        "rejected_deadline": int(count("serve.rejected.deadline")),
+        "fastpath_requests": int(count("serve.fastpath_requests")),
+        "coalesced_blocks": int(count("serve.coalesced_blocks")),
+        "cache_hits": int(cache_hits),
+        "cache_hit_seconds": round(cache_hit_s, 6),
+    }
+    # control-plane facts are hard asserts — quantities go to the baseline
+    assert rec["rejected_quota"] > 0, "noisy tenant was never throttled"
+    assert noisy["rejected"] == rec["rejected_quota"]
+    assert rec["cache_hits"] >= 1, "identical re-submission missed the cache"
+    assert rec["fastpath_requests"] > 0, "interactive fast path never fired"
+    assert rec["coalesced_blocks"] > 0, "batch traffic never coalesced"
+    log(
+        f"{completed} requests / {wall:.2f}s = {rec['throughput_rps']} req/s; "
+        f"interactive p50={rec['interactive_p50_s'] * 1e3:.1f}ms "
+        f"p99={rec['interactive_p99_s'] * 1e3:.1f}ms; batch "
+        f"p99={rec['batch_p99_s'] * 1e3:.1f}ms"
+    )
+    log(
+        f"noisy tenant: {noisy['ok']} admitted, {noisy['rejected']} rejected "
+        f"({rec['noisy_rejected_frac'] * 100:.0f}% — quota "
+        f"rate={NOISY_RATE}/s burst={NOISY_BURST}); other tenants rejected: 0"
+    )
+    log(
+        f"cache: repeat hit in {rec['cache_hit_seconds'] * 1e3:.2f}ms "
+        f"({rec['cache_hits']} hits); coalesced {rec['coalesced_blocks']} "
+        f"blocks across requests"
+    )
+    return rec
+
+
+def smoke(log=print) -> None:
+    """Fast in-process control-plane gate: typed rejection, SLO fast path,
+    deadline drop, cache hit, and spec == legacy equivalence."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import warnings
+
+    from repro.core import glasso
+    from repro.core.instrument import count, reset
+    from repro.covariance import lambda_interval_for_k, paper_synthetic
+    from repro.engine.options import EngineOptions
+    from repro.launch.control_plane import (
+        DeadlineExceeded,
+        DenseSpec,
+        Overload,
+        Quota,
+        RequestMeta,
+    )
+    from repro.launch.serve_glasso import GlassoServer
+
+    S = paper_synthetic(3, 8, seed=5)
+    lo, hi = lambda_interval_for_k(S, 3)
+    lam = float(0.5 * (lo + hi))
+    options = EngineOptions(solver="bcd", solver_opts={"tol": 1e-8})
+
+    reset("serve")
+    with GlassoServer(
+        options=options,
+        quotas={"noisy": Quota(rate=1e-6, burst=1.0)},
+        result_cache=4,
+    ) as server:
+        # spec submit == direct engine solve, byte-for-byte
+        res = server.submit(DenseSpec(S, lam)).result(timeout=300)
+        ref = glasso(S, lam, options=options)
+        assert np.array_equal(res.Theta, ref.Theta), "spec submit != engine"
+        # cache: identical content (different buffer) returns the result
+        res2 = server.submit(DenseSpec(S.copy(), lam)).result(timeout=300)
+        assert res2 is res and count("serve.cache.hits") == 1
+        # quota: second noisy admission rejects synchronously, typed
+        server.submit(
+            DenseSpec(S, lam * 0.99), meta=RequestMeta(tenant="noisy")
+        ).result(timeout=300)
+        try:
+            server.submit(
+                DenseSpec(S, lam * 0.98), meta=RequestMeta(tenant="noisy")
+            )
+            raise AssertionError("noisy tenant was not throttled")
+        except Overload as e:
+            assert e.reason == "quota" and e.tenant == "noisy"
+        # legacy verb still equivalent (through its deprecation shim)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            res_legacy = server.submit(S, lam).result(timeout=300)
+        assert np.array_equal(res_legacy.Theta, ref.Theta)
+
+    # deadline: queued request expires before a late-starting batcher runs
+    server = GlassoServer(options=options, fast_path=False)
+    fut = server.submit(
+        DenseSpec(S, lam), meta=RequestMeta(slo="batch", deadline=0.02)
+    )
+    time.sleep(0.08)
+    server.start()
+    try:
+        fut.result(timeout=60)
+        raise AssertionError("expired request was solved anyway")
+    except DeadlineExceeded:
+        pass
+    finally:
+        server.stop()
+    assert count("serve.rejected.deadline") >= 1
+    log(
+        "serve smoke OK: spec==engine, cache hit, typed quota Overload, "
+        "deadline drop, legacy shim equivalent"
+    )
+
+
+def check(rec: dict, baseline_path: str, log=print) -> int:
+    """CI gate: >20% regression on interactive p99 or throughput fails
+    (with absolute floors — see module docstring)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    p99_cap = max(base["interactive_p99_s"] * 1.2, P99_FLOOR_S)
+    if rec["interactive_p99_s"] > p99_cap:
+        failures.append(
+            f"interactive p99 {rec['interactive_p99_s']}s > {p99_cap:.3f}s "
+            f"(baseline {base['interactive_p99_s']}s + 20%, floor "
+            f"{P99_FLOOR_S}s)"
+        )
+    tput_gate = base["throughput_rps"] * 0.8
+    if tput_gate > THROUGHPUT_FLOOR and rec["throughput_rps"] < tput_gate:
+        failures.append(
+            f"throughput {rec['throughput_rps']} req/s < {tput_gate:.2f} "
+            f"(baseline {base['throughput_rps']} - 20%)"
+        )
+    if rec["rejected_quota"] == 0:
+        failures.append("no quota rejections recorded (throttle inert)")
+    if rec["cache_hits"] < 1:
+        failures.append("result cache never hit")
+    for msg in failures:
+        log(f"REGRESSION: {msg}")
+    if not failures:
+        log(f"serve bench within baseline ({baseline_path})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--check", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
+    rec = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        sys.exit(check(rec, args.check))
+
+
+if __name__ == "__main__":
+    main()

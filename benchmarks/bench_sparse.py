@@ -115,7 +115,7 @@ def run_arm(arm: str, p: int, seed: int = 0) -> dict:
 
     jax.config.update("jax_enable_x64", True)
 
-    from repro.core import glasso
+    from repro.core import EngineOptions, glasso
     from repro.core.instrument import counts, reset
     from repro.core.solvers.kkt import kkt_residual_sparse
     from repro.core.sparse import SparseTheta
@@ -126,12 +126,14 @@ def run_arm(arm: str, p: int, seed: int = 0) -> dict:
     t0 = time.perf_counter()
     if arm == "dense":
         res = glasso(X=X, lam=LAM, from_data=True, stream=stream,
-                     output="dense", tol=1e-9)
+                     options=EngineOptions(output="dense",
+                                           solver_opts={"tol": 1e-9}))
         assert not isinstance(res.Theta, SparseTheta)
     elif arm in ("sparse", "huge"):
         # output="auto": the arm PROVES the auto threshold fires at p > 8192
         res = glasso(X=X, lam=LAM, from_data=True, stream=stream,
-                     output="auto", tol=1e-9)
+                     options=EngineOptions(output="auto",
+                                           solver_opts={"tol": 1e-9}))
         assert res.output == "sparse", f"auto did not resolve sparse at p={p}"
     else:
         raise ValueError(arm)
@@ -338,7 +340,7 @@ def smoke(log=print) -> None:
     import jax
 
     jax.config.update("jax_enable_x64", True)
-    from repro.core import glasso
+    from repro.core import EngineOptions, glasso
     from repro.core.solvers.kkt import kkt_residual_sparse
     from repro.core.sparse import SparseTheta
 
@@ -346,9 +348,11 @@ def smoke(log=print) -> None:
     X = _workload(p, seed=3)
     stream = {"tile": 512, "chunk": 64}
     rd = glasso(X=X, lam=LAM, from_data=True, stream=stream,
-                output="dense", tol=1e-9)
+                options=EngineOptions(output="dense",
+                                      solver_opts={"tol": 1e-9}))
     rs = glasso(X=X, lam=LAM, from_data=True, stream=stream,
-                output="sparse", tol=1e-9)
+                options=EngineOptions(output="sparse",
+                                      solver_opts={"tol": 1e-9}))
     assert isinstance(rs.Theta, SparseTheta)
     assert np.array_equal(rs.Theta.toarray(), rd.Theta), "sparse != dense"
     assert rs.Theta.nnz == np.count_nonzero(rd.Theta)

@@ -18,7 +18,7 @@ import numpy as np
 
 def run(rows=None, solvers=("bcd", "pg"), cc_backend="host", log=print) -> list[dict]:
     jax.config.update("jax_enable_x64", True)
-    from repro.core import glasso
+    from repro.core import EngineOptions, glasso
     from repro.covariance import lambda_interval_for_k, paper_synthetic
     from repro.engine import compiled_cache_stats
 
@@ -34,13 +34,22 @@ def run(rows=None, solvers=("bcd", "pg"), cc_backend="host", log=print) -> list[
                 # warm BOTH paths' executables first (the engine's compiled
                 # cache is process-global) — the paper's timings are solve
                 # times, not compile times (Fortran/MATLAB have no JIT)
-                glasso(S, lam, solver=solver, screen=True, cc_backend=cc_backend, tol=1e-7)
-                glasso(S, lam, solver=solver, screen=False, tol=1e-7)
+                glasso(S, lam, screen=True,
+                       options=EngineOptions(solver=solver, cc_backend=cc_backend,
+                                             solver_opts={"tol": 1e-7}))
+                glasso(S, lam, screen=False,
+                       options=EngineOptions(solver=solver,
+                                             solver_opts={"tol": 1e-7}))
                 t0 = time.perf_counter()
-                r_screen2 = glasso(S, lam, solver=solver, screen=True, cc_backend=cc_backend, tol=1e-7)
+                r_screen2 = glasso(S, lam, screen=True,
+                                   options=EngineOptions(
+                                       solver=solver, cc_backend=cc_backend,
+                                       solver_opts={"tol": 1e-7}))
                 t_screen = time.perf_counter() - t0
                 t0 = time.perf_counter()
-                r_full = glasso(S, lam, solver=solver, screen=False, tol=1e-7)
+                r_full = glasso(S, lam, screen=False,
+                                options=EngineOptions(
+                                    solver=solver, solver_opts={"tol": 1e-7}))
                 t_full = time.perf_counter() - t0
                 err = float(np.abs(r_screen2.Theta - r_full.Theta).max())
                 rec = {

@@ -25,7 +25,13 @@ import numpy as np
 
 def run(log=print) -> list[dict]:
     jax.config.update("jax_enable_x64", True)
-    from repro.core import glasso, glasso_path, lambda_for_max_component, merge_profile
+    from repro.core import (
+        EngineOptions,
+        glasso,
+        glasso_path,
+        lambda_for_max_component,
+        merge_profile,
+    )
     from repro.core.instrument import counts, reset
     from repro.covariance import microarray_like, sample_correlation
     import jax.numpy as jnp
@@ -39,10 +45,14 @@ def run(log=print) -> list[dict]:
         lam0 = lambda_for_max_component(R, p_max)
         prof = merge_profile(R)
         vals = prof["value"][1:]
-        lams = sorted(set(np.concatenate([[lam0 * 1.001], vals[vals > lam0][:4]])), reverse=True)[:5]
+        pool = np.concatenate([[lam0 * 1.001], vals[vals > lam0][:4]])
+        lams = sorted(set(pool), reverse=True)[:5]
         reset("planner")
         t0 = time.perf_counter()
-        results = glasso_path(R, lams, solver="bcd", tol=1e-6)
+        results = glasso_path(
+            R, lams,
+            options=EngineOptions(solver="bcd", solver_opts={"tol": 1e-6}),
+        )
         t_screen_total = time.perf_counter() - t0
         mx = [r.screen.max_comp for r in results]
         reused = counts("planner").get("planner.buckets_reused", 0)
@@ -51,7 +61,11 @@ def run(log=print) -> list[dict]:
         if feasible_full:
             for lam in lams:
                 t0 = time.perf_counter()
-                glasso(R, float(lam), solver="bcd", screen=False, tol=1e-6)
+                glasso(
+                    R, float(lam), screen=False,
+                    options=EngineOptions(solver="bcd",
+                                          solver_opts={"tol": 1e-6}),
+                )
                 t_full_total += time.perf_counter() - t0
         rec = {
             "table": "2", "p": 400, "regime": regime,
@@ -59,7 +73,8 @@ def run(log=print) -> list[dict]:
             "grid_size": len(lams),
             "with_screen_s": round(t_screen_total, 3),
             "without_screen_s": round(t_full_total, 3) if feasible_full else None,
-            "speedup": round(t_full_total / max(t_screen_total, 1e-9), 2) if feasible_full else None,
+            "speedup": (round(t_full_total / max(t_screen_total, 1e-9), 2)
+                        if feasible_full else None),
             "buckets_reused": int(reused),
         }
         out.append(rec)
@@ -78,7 +93,10 @@ def run(log=print) -> list[dict]:
         if len(lams) == 0:
             lams = [lam500 * 1.01]
         t0 = time.perf_counter()
-        results = glasso_path(R, [float(v) for v in lams], solver="bcd", tol=1e-6)
+        results = glasso_path(
+            R, [float(v) for v in lams],
+            options=EngineOptions(solver="bcd", solver_opts={"tol": 1e-6}),
+        )
         total = time.perf_counter() - t0
         parts = [r.screen.seconds for r in results]
         mx = [r.screen.max_comp for r in results]

@@ -27,7 +27,7 @@ def smoke() -> None:
     from repro.core import glasso, glasso_path
     from repro.core.instrument import count, reset
     from repro.covariance import lambda_interval_for_k, paper_synthetic
-    from repro.engine import available_cc_backends
+    from repro.engine import EngineOptions, available_cc_backends
 
     S = paper_synthetic(3, 12, seed=0)
     lam_min, lam_max = lambda_interval_for_k(S, 3)
@@ -36,19 +36,23 @@ def smoke() -> None:
     # route=False pins the reference arm to the iterative dense path — the
     # gate must compare the engine against the pre-ladder behavior, not two
     # arms of the new closed-form code
-    dense = glasso(S, lam, screen=False, route=False, tol=1e-9)
+    dense = glasso(S, lam, screen=False,
+                   options=EngineOptions(route=False, solver_opts={"tol": 1e-9}))
     for backend in available_cc_backends():
-        res = glasso(S, lam, cc_backend=backend, tol=1e-9)
+        res = glasso(S, lam,
+                     options=EngineOptions(cc_backend=backend,
+                                           solver_opts={"tol": 1e-9}))
         err = float(np.abs(res.Theta - dense.Theta).max())
         assert err < 1e-6, f"backend {backend}: engine vs dense diff {err:.2e}"
         print(f"smoke: cc_backend={backend:10s} matches dense (diff {err:.2e})")
 
     lams = sorted(np.linspace(lam_min * 0.8, lam_max * 1.05, 6), reverse=True)
     reset()
-    path = glasso_path(S, lams, tol=1e-9)
+    path = glasso_path(S, lams, options=EngineOptions(solver_opts={"tol": 1e-9}))
     assert count("partition.unionfind_passes") == 1, "path planner must plan in one pass"
     for r in path:
-        ref = glasso(S, r.lam, screen=False, route=False, tol=1e-9)
+        ref = glasso(S, r.lam, screen=False,
+                     options=EngineOptions(route=False, solver_opts={"tol": 1e-9}))
         err = float(np.abs(r.Theta - ref.Theta).max())
         assert err < 1e-5, f"path lam={r.lam:.4f}: engine vs dense diff {err:.2e}"
     print(f"smoke: {len(path)}-lambda warm-started path matches dense "
@@ -71,8 +75,10 @@ def smoke() -> None:
     for i, j, v in ladder_edges:
         Ss[i, j] = Ss[j, i] = v
     reset()
-    routed = glasso(Ss, 0.3, tol=1e-9)
-    unrouted = glasso(Ss, 0.3, route=False, tol=1e-9)
+    routed = glasso(Ss, 0.3, options=EngineOptions(solver_opts={"tol": 1e-9}))
+    unrouted = glasso(
+        Ss, 0.3, options=EngineOptions(route=False, solver_opts={"tol": 1e-9})
+    )
     err = float(np.abs(routed.Theta - unrouted.Theta).max())
     assert err < 1e-6, f"ladder: routed vs unrouted diff {err:.2e}"
     mix = route_mix_counts()
@@ -91,6 +97,12 @@ def smoke() -> None:
     from benchmarks import bench_sparse
 
     bench_sparse.smoke()
+
+    # serving control plane: typed specs == engine, tenant quota Overload,
+    # deadline drop, result-cache hit, legacy-verb shim equivalence
+    from benchmarks import bench_serve
+
+    bench_serve.smoke()
     print("smoke: OK")
 
 

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ShapeConfig, get_arch
-from repro.core import glasso, lambda_for_max_component
+from repro.core import EngineOptions, glasso, lambda_for_max_component
 from repro.covariance import sample_correlation
 from repro.data.specs import make_batch
 from repro.models import transformer as tfm
@@ -48,7 +48,10 @@ def main():
 
     R = np.asarray(sample_correlation(jnp.asarray(A)))
     lam = lambda_for_max_component(R, 24) * 1.0005
-    res = glasso(R, lam, solver="admm", tol=1e-7)
+    res = glasso(
+        R, lam,
+        options=EngineOptions(solver="admm", solver_opts={"tol": 1e-7}),
+    )
     print(f"lambda={lam:.3f}: {res.screen.n_components} feature modules, "
           f"max size {res.screen.max_comp}, solve {res.solve_seconds:.2f}s")
     nnz = int((np.abs(res.Theta) > 1e-8).sum() - cfg.d_model)

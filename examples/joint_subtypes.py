@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.instrument import counts, reset, route_mix_counts
 from repro.covariance import structured_synthetic
+from repro.core import EngineOptions
 from repro.joint import joint_glasso
 
 
@@ -38,7 +39,10 @@ def main():
 
     for penalty in ("group", "fused"):
         reset()
-        res = joint_glasso(list(Ss), lam1, lam2, penalty=penalty, tol=1e-8)
+        res = joint_glasso(
+            list(Ss), lam1, lam2, penalty=penalty,
+            options=EngineOptions(solver_opts={"tol": 1e-8}),
+        )
         shared_edges = res.support.sum() // 2
         per_class = [int(res.class_support(k).sum() // 2) for k in range(K)]
         print(f"[{penalty}] union components: {res.screen.n_components} "
@@ -64,7 +68,8 @@ def main():
         Xs.append(X)
     res = joint_glasso(
         Xs=Xs, lam1=0.35, lam2=0.05, penalty="group", from_data=True,
-        stream={"tile": 64, "chunk": 128}, tol=1e-8,
+        stream={"tile": 64, "chunk": 128},
+        options=EngineOptions(solver_opts={"tol": 1e-8}),
     )
     print(f"[from-data] K={res.K} p={p}: {res.screen.n_components} "
           f"components, {res.screen.candidate_pairs} candidate pairs "

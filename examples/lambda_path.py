@@ -18,7 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import glasso_path, is_refinement, lambda_for_max_component, merge_profile
+from repro.core import (
+    EngineOptions,
+    glasso_path,
+    is_refinement,
+    lambda_for_max_component,
+    merge_profile,
+)
 from repro.covariance import microarray_like, sample_correlation
 
 
@@ -36,7 +42,10 @@ def main():
     lams = sorted(vals[vals > lam_floor][::-1][:6].tolist(), reverse=True)
     print(f"path over {len(lams)} lambdas in [{lams[-1]:.3f}, {lams[0]:.3f}]")
 
-    results = glasso_path(R, lams, solver="bcd", tol=1e-6)
+    results = glasso_path(
+        R, lams,
+        options=EngineOptions(solver="bcd", solver_opts={"tol": 1e-6}),
+    )
     mgr = CheckpointManager(tempfile.mkdtemp(prefix="lampath_"), every=1, async_save=False)
     prev_labels = None
     for i, res in enumerate(results):

@@ -13,7 +13,13 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core import glasso, kkt_residual, partitions_equal, thresholded_components
+from repro.core import (
+    EngineOptions,
+    glasso,
+    kkt_residual,
+    partitions_equal,
+    thresholded_components,
+)
 from repro.core.components import connected_components_host
 from repro.covariance import lambda_interval_for_k, paper_synthetic
 
@@ -30,9 +36,10 @@ def main():
     print(f"screening: {stats.n_components} components, max size "
           f"{stats.max_comp}, partition took {stats.seconds*1e3:.2f} ms")
 
-    glasso(S, lam, solver="bcd", tol=1e-8)          # warm the jit caches
-    glasso(S, lam, solver="bcd", screen=False, tol=1e-8)
-    res = glasso(S, lam, solver="bcd", tol=1e-8)
+    opts = EngineOptions(solver="bcd", solver_opts={"tol": 1e-8})
+    glasso(S, lam, options=opts)                    # warm the jit caches
+    glasso(S, lam, screen=False, options=opts)
+    res = glasso(S, lam, options=opts)
     print(f"screened solve: {res.solve_seconds:.2f}s over blocks {res.block_sizes}")
 
     # Theorem 1: concentration-graph partition == thresholded partition
@@ -45,7 +52,7 @@ def main():
     import jax.numpy as jnp
 
     print(f"KKT residual: {float(kkt_residual(jnp.asarray(S), jnp.asarray(res.Theta), lam)):.2e}")
-    full = glasso(S, lam, solver="bcd", screen=False, tol=1e-8)
+    full = glasso(S, lam, screen=False, options=opts)
     print(f"max |Theta_screen - Theta_full| = {np.abs(res.Theta - full.Theta).max():.2e}")
     print(f"speedup: {full.solve_seconds / res.solve_seconds:.1f}x")
 

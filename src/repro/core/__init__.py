@@ -11,7 +11,7 @@ from repro.core.components import (
     partitions_equal,
     threshold_adjacency,
 )
-from repro.core.glasso import GlassoResult, glasso, glasso_path
+from repro.core.glasso import EngineOptions, GlassoResult, glasso, glasso_path
 from repro.core.partition import (
     component_size_distribution,
     labels_at_thresholds,
@@ -31,6 +31,7 @@ __all__ = [
     "glasso",
     "glasso_path",
     "GlassoResult",
+    "EngineOptions",
     "thresholded_components",
     "threshold_adjacency",
     "connected_components_host",

@@ -3,13 +3,19 @@
 ``glasso(S, lam)``        solve (1) — with exact covariance-thresholding
                           screening (Theorem 1) on by default, or screen=False
                           for the paper's "without screening" baseline column.
-                          ``cc_backend`` picks any registered screening backend
-                          ("host", "jax", "pallas", "shard_map", ...).
 ``glasso_path(S, lams)``  descending-lambda path exploiting Theorem 2: the
                           engine plans the whole grid from ONE union-find pass,
                           diffs consecutive plans so unchanged buckets skip
                           re-padding, and warm-starts every block from the
                           previous solution.
+
+ENGINE CONFIGURATION travels as one typed value: ``options=EngineOptions(
+solver=..., route=..., output=..., tol=...)`` (``repro.engine.EngineOptions``).
+The historical kwarg spelling — ``glasso(S, lam, route=False, tol=1e-9)`` —
+still works through a deprecation layer (one normalization chokepoint,
+``engine.options.normalize_options``) and raises a ``DeprecationWarning``;
+per-call arguments (``screen``, ``p_max``, ``warm_W``, ``warm_start``,
+``stream``) are not engine configuration and are not deprecated.
 
 The engine itself (``repro.engine``) is the extension surface: new screening
 backends register with ``@register_cc_backend``; the executor's compiled
@@ -19,13 +25,13 @@ solver cache is shared process-wide (lambda paths, benchmarks, and the
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.screening import ScreenStats  # noqa: F401  (re-export, API compat)
 from repro.engine.api import Engine, GlassoResult
+from repro.engine.options import EngineOptions, normalize_options
 
-__all__ = ["GlassoResult", "glasso", "glasso_path"]
+__all__ = ["GlassoResult", "EngineOptions", "glasso", "glasso_path"]
 
 
 def glasso(
@@ -35,47 +41,39 @@ def glasso(
     X: np.ndarray | None = None,
     from_data: bool = False,
     stream=None,
-    solver: str = "bcd",
     screen: bool = True,
     p_max: int | None = None,
-    dtype=jnp.float64,
-    cc_backend: str = "host",
     warm_W: np.ndarray | None = None,
-    route: bool = True,
-    oversize_threshold: int | None = None,
-    oversize_budget_mb: float | str | None = None,
-    output: str = "auto",
-    **solver_opts,
+    options: EngineOptions | None = None,
+    **engine_kwargs,
 ) -> GlassoResult:
-    """``route=False`` disables the structure-routed solver ladder (every
-    block takes the iterative solver — the pre-router baseline; used by the
-    equivalence gates and the route-mix benchmark).
+    """``options.route=False`` disables the structure-routed solver ladder
+    (every block takes the iterative solver — the pre-router baseline; used
+    by the equivalence gates and the route-mix benchmark).
 
-    ``oversize_threshold`` (block-size cap) or ``oversize_budget_mb``
-    (per-device memory budget; ``"auto"`` asks the backend) enable the
-    SHARDED route: components too large for one device solve across the
-    whole mesh (row-sharded iterate, no eigh — DESIGN.md Section 11), with
-    ``GlassoResult.oversize`` counting dispatches/inner iterations/
-    fallbacks.
+    ``options.oversize_threshold`` (block-size cap) or
+    ``options.oversize_budget_mb`` (per-device memory budget; ``"auto"`` asks
+    the backend) enable the SHARDED route: components too large for one
+    device solve across the whole mesh (row-sharded iterate, no eigh —
+    DESIGN.md Section 11), with ``GlassoResult.oversize`` counting
+    dispatches/inner iterations/fallbacks.
 
     ``glasso(X=X, lam=lam, from_data=True)`` solves from the (n, p) DATA
     matrix instead of a covariance: screening runs out-of-core through
     ``repro.stream`` (the dense (p, p) S is never materialized — only the
     per-component blocks the solvers consume), exactness unchanged; an
     oversize component then streams from X STRAIGHT into device shards.
-    ``stream`` passes a ``repro.stream.StreamConfig`` (or kwargs dict);
-    ``screen``/``cc_backend`` do not apply on this path (the streamed screen
-    IS the screening stage).
+    ``stream`` passes a ``repro.stream.StreamConfig`` (or kwargs dict) for
+    this call, overriding ``options.stream``; ``screen``/``cc_backend`` do
+    not apply on this path (the streamed screen IS the screening stage).
 
-    ``output`` picks the result representation: "dense" is the historical
-    (p, p) array, "sparse" returns a ``repro.core.sparse.SparseTheta``
-    assembled with zero (p, p) allocation, and "auto" (default) switches to
-    sparse above ``AUTO_SPARSE_P`` — see DESIGN.md Section 13."""
-    engine = Engine(
-        solver=solver, dtype=dtype, cc_backend=cc_backend, route=route,
-        oversize_threshold=oversize_threshold,
-        oversize_budget_mb=oversize_budget_mb, output=output, **solver_opts
-    )
+    ``options.output`` picks the result representation: "dense" is the
+    historical (p, p) array, "sparse" returns a
+    ``repro.core.sparse.SparseTheta`` assembled with zero (p, p) allocation,
+    and "auto" (default) switches to sparse above ``AUTO_SPARSE_P`` — see
+    DESIGN.md Section 13."""
+    opts = normalize_options(options, engine_kwargs, warn=True, context="glasso")
+    engine = Engine(options=opts)
     data = X if X is not None else (S if from_data else None)
     if from_data or X is not None:
         if data is None:
@@ -99,28 +97,22 @@ def glasso_path(
     X: np.ndarray | None = None,
     from_data: bool = False,
     stream=None,
-    solver: str = "bcd",
     warm_start: bool = True,
-    dtype=jnp.float64,
     screen: bool = True,
-    cc_backend: str = "host",
     p_max: int | None = None,
-    route: bool = True,
-    oversize_threshold: int | None = None,
-    oversize_budget_mb: float | str | None = None,
-    output: str = "auto",
-    **solver_opts,
+    options: EngineOptions | None = None,
+    **engine_kwargs,
 ) -> list[GlassoResult]:
     """Solve along a descending lambda path (one planning pass, warm starts).
 
     Theorem 2 guarantees the vertex partitions are nested (components only
     merge), so the previous Theta/W restricted to a new component's vertices
     is block-diagonal over its old sub-components — a valid PD warm start.
-    ``cc_backend`` is accepted for API symmetry with ``glasso``; path planning
-    always uses the host edge-sorted union-find (it IS the incremental
-    planner), which produces the identical partition.  ``screen=False`` is the
-    paper's unscreened baseline column: no planner, one dense solve per
-    lambda.
+    ``options.cc_backend`` is accepted for API symmetry with ``glasso``; path
+    planning always uses the host edge-sorted union-find (it IS the
+    incremental planner), which produces the identical partition.
+    ``screen=False`` is the paper's unscreened baseline column: no planner,
+    one dense solve per lambda.
 
     ``glasso_path(X=X, lambdas=lams, from_data=True)`` plans the whole grid
     from the data matrix via the out-of-core streaming screener: ONE tiled
@@ -128,12 +120,10 @@ def glasso_path(
     Theorem 2), materialized per-component blocks, the same diffed plans and
     warm starts — and never a (p, p) allocation in the screening stage.
     """
-    del cc_backend  # see docstring
-    engine = Engine(
-        solver=solver, dtype=dtype, route=route,
-        oversize_threshold=oversize_threshold,
-        oversize_budget_mb=oversize_budget_mb, output=output, **solver_opts
+    opts = normalize_options(
+        options, engine_kwargs, warn=True, context="glasso_path"
     )
+    engine = Engine(options=opts)
     data = X if X is not None else (S if from_data else None)
     if from_data or X is not None:
         if data is None:

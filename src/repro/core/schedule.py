@@ -35,9 +35,26 @@ class Assignment:
     balance: float                 # makespan / mean load (1.0 = perfect)
 
 
-def lpt_assign(sizes, n_workers: int, *, cost=default_cost) -> Assignment:
+def lpt_assign(
+    sizes, n_workers: int, *, cost=default_cost, priorities=None
+) -> Assignment:
+    """LPT greedy assignment; ``priorities`` (higher = more urgent, same
+    length as ``sizes``) makes the placement priority-aware: urgent items
+    are placed FIRST — they land on the least-loaded workers and sit at the
+    front of each worker's dispatch order — with LPT's cost-descending
+    order intact within a priority level, so the makespan bound is
+    unchanged for uniform priorities."""
     sizes = np.asarray(sizes)
-    order = np.argsort(-sizes, kind="stable")
+    if priorities is None:
+        order = np.argsort(-sizes, kind="stable")
+    else:
+        priorities = np.asarray(priorities, dtype=float)
+        if priorities.shape != sizes.shape:
+            raise ValueError(
+                f"priorities shape {priorities.shape} != sizes {sizes.shape}"
+            )
+        # lexsort: last key is primary — priority desc, then cost desc
+        order = np.lexsort((-sizes.astype(float), -priorities))
     loads = [(0.0, w) for w in range(n_workers)]
     heapq.heapify(loads)
     worker_of = np.zeros(sizes.size, dtype=np.int64)

@@ -41,10 +41,13 @@ from repro.engine.executor import (
     compiled_cache_stats,
 )
 from repro.engine.api import Engine, GlassoResult
+from repro.engine.options import EngineOptions, normalize_options
 
 __all__ = [
     "Engine",
+    "EngineOptions",
     "GlassoResult",
+    "normalize_options",
     "BucketExecutor",
     "PathPlan",
     "PathStep",

@@ -28,6 +28,7 @@ from repro.core.instrument import bump
 from repro.core.screening import ScreenStats, thresholded_components
 from repro.core.sparse import SparseTheta, resolve_output, result_nbytes
 from repro.engine.executor import BucketExecutor
+from repro.engine.options import EngineOptions, normalize_options
 from repro.engine.planner import build_plan_incremental, plan_path
 
 
@@ -238,39 +239,37 @@ class Engine:
     def __init__(
         self,
         *,
-        solver: str = "bcd",
-        dtype=jnp.float64,
-        cc_backend: str = "host",
+        options: EngineOptions | None = None,
         devices=None,
-        route: bool = True,
-        route_check_tol: float = 1e-6,
-        oversize_threshold: int | None = None,
-        oversize_budget_mb: float | str | None = None,
-        output: str = "auto",
-        **solver_opts,
+        **legacy_engine_kwargs,
     ):
+        """``options=EngineOptions(...)`` is the configuration surface; the
+        historical kwargs (``solver=``, ``route=``, ``tol=``, ...) still
+        work through the shared normalization chokepoint (they warn at the
+        PUBLIC wrappers — ``glasso``/``glasso_path`` — not here, so internal
+        constructions stay quiet)."""
         from repro.core.solvers import WARM_START_SOLVERS
 
-        if output not in ("dense", "sparse", "auto"):
-            raise ValueError(
-                f"output must be 'dense', 'sparse' or 'auto', got {output!r}"
-            )
-        self.output = output
-        self.solver = solver
-        self.dtype = dtype
-        self.np_dtype = np.dtype(jnp.dtype(dtype).name)  # host-side twin
-        self.cc_backend = cc_backend
-        self.warm_capable = solver in WARM_START_SOLVERS
+        opts = normalize_options(options, legacy_engine_kwargs, context="Engine")
+        self.options = opts
+        self.output = opts.output
+        self.solver = opts.resolved_solver("bcd")
+        self.dtype = opts.resolved_dtype()
+        self.np_dtype = np.dtype(jnp.dtype(self.dtype).name)  # host-side twin
+        self.cc_backend = opts.cc_backend
+        self.stream = opts.stream   # default StreamConfig for from-data runs
+        self.warm_capable = self.solver in WARM_START_SOLVERS
         self.oversize = resolve_oversize(
-            oversize_threshold, oversize_budget_mb, self.np_dtype, route=route
+            opts.oversize_threshold, opts.oversize_budget_mb, self.np_dtype,
+            route=opts.route,
         )
         self.executor = BucketExecutor(
-            solver=solver,
-            dtype=dtype,
-            solver_opts=solver_opts,
+            solver=self.solver,
+            dtype=self.dtype,
+            solver_opts=dict(opts.solver_opts),
             devices=devices,
-            route=route,
-            route_check_tol=route_check_tol,
+            route=opts.route,
+            route_check_tol=opts.route_check_tol,
         )
 
     # -- stages ------------------------------------------------------------
@@ -452,6 +451,8 @@ class Engine:
         ``StreamConfig`` or kwargs dict)."""
         from repro.stream import stream_screen
 
+        if stream is None:
+            stream = self.stream
         sc = stream_screen(X, [lam], config=stream, oversize=self.oversize)
         return self.run(
             sc.S,
@@ -479,6 +480,8 @@ class Engine:
         diffed-plan execution runs over materialized blocks."""
         from repro.stream import plan_path_streaming
 
+        if stream is None:
+            stream = self.stream
         path, sc = plan_path_streaming(
             X,
             lambdas,

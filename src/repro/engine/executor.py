@@ -431,12 +431,21 @@ class BucketExecutor:
             return n * float(bucket.size) ** 2
         return n * float(bucket.size) ** 3
 
-    def _place(self, buckets: list[blocks_mod.Bucket]) -> list:
-        """LPT assignment of buckets to local devices by estimated cost."""
+    def _place(
+        self, buckets: list[blocks_mod.Bucket], priorities=None
+    ) -> list:
+        """LPT assignment of buckets to local devices by estimated cost.
+
+        ``priorities`` (per-bucket, higher = more urgent) seats urgent
+        buckets first — the serving control plane passes its SLO class
+        through here so an interactive request's buckets dispatch ahead of
+        best-effort co-travellers on every device queue."""
         if len(self.devices) <= 1 or not buckets:
             return [None] * len(buckets)
         cost = [self._bucket_cost(b) for b in buckets]
-        assign = lpt_assign(cost, len(self.devices), cost=float)
+        assign = lpt_assign(
+            cost, len(self.devices), cost=float, priorities=priorities
+        )
         return [self.devices[w] for w in assign.worker_of]
 
     # -- warm starts -------------------------------------------------------
@@ -495,8 +504,12 @@ class BucketExecutor:
         reused_keys: frozenset = frozenset(),
         keep_solutions: bool = False,
         output: str = "dense",
+        priorities=None,
     ) -> np.ndarray:
         """Dispatch all buckets, then assemble Theta.
+
+        ``priorities`` (optional, per-bucket, higher = more urgent) makes
+        the multi-device placement priority-aware — see ``_place``.
 
         ``output="sparse"`` hands the per-bucket solution stacks to
         ``blocks.assemble_sparse`` — the result is a ``SparseTheta`` built
@@ -518,7 +531,7 @@ class BucketExecutor:
         if self.route and len(plan.isolated):
             bump("router.route.singleton", int(len(plan.isolated)))
         self.last_oversize = {}
-        placements = self._place(plan.buckets)
+        placements = self._place(plan.buckets, priorities=priorities)
         pending: list[_Pending] = []
         sharded_pending: list[_Pending] = []
         for bucket, device in zip(plan.buckets, placements):

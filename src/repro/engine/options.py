@@ -1,0 +1,152 @@
+"""One typed options object for the whole engine surface.
+
+Before this module, ``glasso``/``glasso_path``/``joint_glasso`` (and
+``Engine``/``JointEngine``/``GlassoServer`` underneath) each re-declared the
+same overlapping engine kwargs — ``route``, ``cc_backend``, ``oversize_*``,
+``output``, ``stream``, plus the free-form solver opts — and a request could
+not carry that configuration as a value (the serving control plane needs to
+ship it inside a spec).  ``EngineOptions`` collapses them into one frozen
+dataclass accepted everywhere as ``options=``.
+
+The legacy kwargs still work through a SINGLE normalization chokepoint,
+``normalize_options``: the public wrappers call it with ``warn=True`` so
+kwarg-style configuration raises a ``DeprecationWarning`` (tests pin this),
+while internal constructors normalize silently.  Passing both ``options=``
+and legacy kwargs is an error — there is exactly one source of truth per
+call.
+
+Field split (what belongs here vs. a call site):
+
+* **EngineOptions** — how solves are CONFIGURED: solver choice, dtype,
+  screening backend, routing ladder, oversize route, result representation,
+  stream defaults, joint tail verification, solver opts (``tol``,
+  ``max_iter``, ...).
+* **call kwargs** — what is being SOLVED: ``S``/``X``/``lam``/``lambdas``,
+  ``screen=False`` baselines, ``p_max``, ``warm_W``/``warm_start``,
+  ``penalty``, serving ``session``.  These are not deprecated.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Mapping
+
+__all__ = ["EngineOptions", "ENGINE_OPTION_KEYS", "normalize_options"]
+
+
+@dataclass(frozen=True)
+class EngineOptions:
+    """Engine configuration as a value.
+
+    ``solver=None`` means "the context default" — "bcd" for single-class
+    engines, "joint_admm" for the joint engine; ``dtype=None`` resolves to
+    ``jnp.float64``.  ``solver_opts`` holds the free-form per-solver knobs
+    (``tol``, ``max_iter``, ``rho``, ...) that used to travel as ``**kwargs``.
+    """
+
+    solver: str | None = None
+    dtype: Any = None
+    cc_backend: str = "host"
+    route: bool = True
+    route_check_tol: float = 1e-6
+    oversize_threshold: int | None = None
+    oversize_budget_mb: float | str | None = None
+    output: str = "auto"
+    stream: Any = None             # StreamConfig / kwargs dict default
+    verify_tail: bool = False      # joint-only: exact tail KKT verification
+    solver_opts: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.output not in ("dense", "sparse", "auto"):
+            raise ValueError(
+                f"output must be 'dense', 'sparse' or 'auto', got {self.output!r}"
+            )
+        object.__setattr__(self, "solver_opts", dict(self.solver_opts))
+
+    # -- derived views ----------------------------------------------------
+
+    def resolved_solver(self, default: str) -> str:
+        return self.solver if self.solver is not None else default
+
+    def resolved_dtype(self):
+        if self.dtype is None:
+            import jax.numpy as jnp
+
+            return jnp.float64
+        return self.dtype
+
+    def np_dtype(self):
+        """The numpy dtype mirroring ``resolved_dtype()`` (host-side
+        gathers/assembly use numpy; devices use the jax dtype)."""
+        import jax.numpy as jnp
+        import numpy as np
+
+        return np.dtype(jnp.dtype(self.resolved_dtype()).name)
+
+    def replace(self, **changes) -> "EngineOptions":
+        """``dataclasses.replace`` with solver_opts MERGED, not clobbered:
+        unknown keys in ``changes`` update solver_opts entry-wise (the same
+        absorption rule as the legacy kwargs layer)."""
+        known = {f.name for f in fields(self)}
+        direct = {k: v for k, v in changes.items() if k in known}
+        extra = {k: v for k, v in changes.items() if k not in known}
+        if extra:
+            merged = dict(self.solver_opts)
+            merged.update(extra)
+            direct.setdefault("solver_opts", merged)
+        return replace(self, **direct)
+
+
+#: Engine-configuration keys the legacy kwarg layer recognizes; anything
+#: else a caller passes is absorbed into ``solver_opts`` (the historical
+#: ``**solver_opts`` behavior — validated downstream by the executor).
+ENGINE_OPTION_KEYS = frozenset(
+    f.name for f in fields(EngineOptions) if f.name != "solver_opts"
+)
+
+_DEPRECATION_MSG = (
+    "configuring {context} via bare engine kwargs ({keys}) is deprecated; "
+    "pass options=EngineOptions(...) instead (repro.engine.EngineOptions)"
+)
+
+
+def normalize_options(
+    options: EngineOptions | None,
+    kwargs: Mapping[str, Any],
+    *,
+    warn: bool = False,
+    context: str = "the engine",
+) -> EngineOptions:
+    """THE normalization chokepoint: every options-accepting surface funnels
+    its ``options=``/legacy-kwargs pair through here.
+
+    * ``options`` given and ``kwargs`` empty — pass-through (validated).
+    * ``kwargs`` only — build an ``EngineOptions``, splitting recognized
+      engine keys from free-form solver opts; with ``warn=True`` (the public
+      wrappers) this is the deprecation layer and raises a
+      ``DeprecationWarning`` naming the legacy keys.
+    * both — ``TypeError``: one source of truth per call.
+    """
+    if options is not None:
+        if kwargs:
+            raise TypeError(
+                f"pass options=EngineOptions(...) OR legacy engine kwargs "
+                f"({sorted(kwargs)}), not both"
+            )
+        if not isinstance(options, EngineOptions):
+            raise TypeError(
+                f"options must be an EngineOptions, got {type(options).__name__}"
+            )
+        return options
+    if not kwargs:
+        return EngineOptions()
+    if warn:
+        warnings.warn(
+            _DEPRECATION_MSG.format(context=context, keys=sorted(kwargs)),
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    direct = {k: v for k, v in kwargs.items() if k in ENGINE_OPTION_KEYS}
+    solver_opts = {k: v for k, v in kwargs.items() if k not in ENGINE_OPTION_KEYS}
+    return EngineOptions(solver_opts=solver_opts, **direct)

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.instrument import bump
@@ -120,34 +119,32 @@ def joint_glasso(
     Xs=None,
     from_data: bool = False,
     stream=None,
-    solver: str = "joint_admm",
     screen: bool = True,
-    dtype=jnp.float64,
-    cc_backend: str = "host",
-    route: bool = True,
-    route_check_tol: float = 1e-6,
-    verify_tail: bool = False,
-    output: str = "auto",
-    **solver_opts,
+    options=None,
+    **engine_kwargs,
 ) -> JointGlassoResult:
     """Solve the K-class joint graphical lasso; see the module docstring.
 
-    ``route=False`` disables the joint routing ladder (every union block
-    takes the joint ADMM — the unrouted baseline of the equivalence gates);
-    ``cc_backend`` picks any registered screening backend for the
-    union-graph partition step; ``verify_tail=True`` opts in to exact
-    joint-KKT verification of the ADMM tail (see ``JointEngine``).
+    Engine configuration travels as ``options=EngineOptions(...)`` — the
+    same typed object ``glasso`` and the serving control plane accept
+    (``options.route=False`` disables the joint routing ladder,
+    ``options.cc_backend`` picks the union-graph partition backend,
+    ``options.verify_tail=True`` opts in to exact joint-KKT verification of
+    the ADMM tail; see ``JointEngine``).  The historical kwarg spelling
+    (``route=``, ``verify_tail=``, ``tol=``, ...) still works through the
+    shared deprecation layer and raises a ``DeprecationWarning``.
 
-    ``output`` picks the result representation: "dense" is the (K, p, p)
-    stack, "sparse" a ``JointSparseTheta`` assembled with zero (K, p, p)
-    allocation, "auto" (default) switches to sparse above ``AUTO_SPARSE_P``."""
+    ``options.output`` picks the result representation: "dense" is the
+    (K, p, p) stack, "sparse" a ``JointSparseTheta`` assembled with zero
+    (K, p, p) allocation, "auto" (default) switches to sparse above
+    ``AUTO_SPARSE_P``."""
+    from repro.engine.options import normalize_options
     from repro.joint.engine import JointEngine
 
-    engine = JointEngine(
-        solver=solver, dtype=dtype, cc_backend=cc_backend, route=route,
-        route_check_tol=route_check_tol, verify_tail=verify_tail,
-        output=output, **solver_opts,
+    opts = normalize_options(
+        options, engine_kwargs, warn=True, context="joint_glasso"
     )
+    engine = JointEngine(options=opts)
     if from_data or Xs is not None:
         if Xs is None:
             raise ValueError("from_data=True needs the data matrices (Xs=...)")

@@ -68,6 +68,7 @@ from repro.core.solvers.closed_form import kkt_ok_stack
 from repro.core.solvers.protocol import solver_spec
 from repro.core.sparse import resolve_output
 from repro.engine.executor import compiled_cached
+from repro.engine.options import EngineOptions, normalize_options
 from repro.joint.blocks import (
     JointPlan,
     assemble_joint,
@@ -241,34 +242,35 @@ class JointEngine:
     def __init__(
         self,
         *,
-        solver: str = "joint_admm",
-        dtype=jnp.float64,
-        cc_backend: str = "host",
-        route: bool = True,
-        route_check_tol: float = 1e-6,
-        verify_tail: bool = False,
-        output: str = "auto",
-        **solver_opts,
+        options: EngineOptions | None = None,
+        **legacy_engine_kwargs,
     ):
+        """Configured by one ``EngineOptions`` (``options=``); the historical
+        kwargs (``solver=``, ``route=``, ``verify_tail=``, solver opts)
+        normalize through the shared chokepoint without warning — the public
+        ``joint_glasso`` wrapper owns the deprecation signal."""
+        opts = normalize_options(
+            options, legacy_engine_kwargs, context="JointEngine"
+        )
+        self.options = opts
+        solver = opts.resolved_solver("joint_admm")
         spec = solver_spec(solver)
         if not spec.meta.get("joint"):
             raise ValueError(
                 f"solver {solver!r} is not a joint solver (spec.meta['joint'])"
             )
-        if output not in ("dense", "sparse", "auto"):
-            raise ValueError(
-                f"output must be 'dense', 'sparse' or 'auto', got {output!r}"
-            )
-        self.output = output
+        self.output = opts.output
         self.last_assemble_seconds = 0.0
         self.solver = solver
-        self.dtype = dtype
-        self.np_dtype = np.dtype(jnp.dtype(dtype).name)
-        self.cc_backend = cc_backend
-        self.route = route
-        self.route_check_tol = route_check_tol
-        self.verify_tail = verify_tail
-        self.solver_opts = dict(solver_opts)
+        self.dtype = opts.resolved_dtype()
+        self.np_dtype = np.dtype(jnp.dtype(self.dtype).name)
+        self.cc_backend = opts.cc_backend
+        self.route = opts.route
+        self.route_check_tol = opts.route_check_tol
+        self.verify_tail = opts.verify_tail
+        self.stream = opts.stream
+        solver_opts = dict(opts.solver_opts)
+        self.solver_opts = solver_opts
         self._opts_key = tuple(sorted(solver_opts.items()))
         # the "joint_shared" rung's single-class solver (identical blocks,
         # general union shape): bcd — the same solver the per-class
@@ -374,6 +376,8 @@ class JointEngine:
         stream``)."""
         from repro.joint.stream import joint_stream_screen
 
+        if stream is None:
+            stream = self.stream
         sc = joint_stream_screen(
             Xs, lam1, lam2, penalty=penalty, config=stream
         )

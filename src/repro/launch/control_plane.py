@@ -1,0 +1,414 @@
+"""Serving control plane: typed request specs, tenant admission, bounded
+queues, and result caching for ``launch.serve_glasso.GlassoServer``.
+
+The server's three historical verbs (``submit``/``submit_data``/
+``submit_joint``) each grew their own kwarg surface; this module is the
+redesign's vocabulary.  WHAT to solve travels as one typed spec —
+
+    DenseSpec(S, lam)                  covariance admission
+    DataSpec(X, lam, session=...)      out-of-core data-matrix admission
+    JointSpec(Ss=[...], lam1, lam2)    K-class joint admission (or Xs=)
+
+— and HOW to treat the request travels as ``RequestMeta``:
+
+    tenant     accounting identity for per-tenant token-bucket quotas
+    slo        "interactive" (admission fast path + priority dequeue) or
+               "batch" (best-effort; yields the batching window to
+               interactive co-travellers)
+    deadline   relative seconds; an expired request is dropped BEFORE
+               dispatch with ``DeadlineExceeded`` (never solved dead)
+    output     per-request result representation override
+
+Overload is EXPLICIT: a full bounded queue or an exhausted tenant bucket
+raises ``Overload`` synchronously from ``submit`` (typed, with ``reason``)
+instead of parking a future that will time out — backpressure the client
+can act on.  ``ResultCache`` closes the loop above the process-global
+compiled-solver cache: identical (spec bytes, lambdas, penalty, K, output)
+re-submissions return the finished result without touching the planner.
+
+Everything here is engine-agnostic plumbing (no jax imports): the server
+composes it; tests exercise it in isolation.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import queue
+import threading
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "SLO_CLASSES",
+    "AdmissionQueue",
+    "DataSpec",
+    "DeadlineExceeded",
+    "DenseSpec",
+    "JointSpec",
+    "Overload",
+    "Quota",
+    "RequestMeta",
+    "ResultCache",
+    "SolveSpec",
+    "TenantBuckets",
+    "TokenBucket",
+    "deadline_instant",
+    "fingerprint_array",
+    "spec_cache_key",
+]
+
+SLO_CLASSES = ("interactive", "batch")
+
+
+# ---------------------------------------------------------------------------
+# typed errors — backpressure the client can branch on
+# ---------------------------------------------------------------------------
+
+
+class Overload(RuntimeError):
+    """The control plane rejected a request at admission.
+
+    ``reason`` is machine-readable: "queue" (bounded queue full) or
+    "quota" (tenant token bucket exhausted).  Raised synchronously from
+    ``submit`` — an overloaded server never hands back a future that will
+    hang out a timeout."""
+
+    def __init__(self, message: str, *, reason: str, tenant: str | None = None):
+        super().__init__(message)
+        self.reason = reason
+        self.tenant = tenant
+
+
+class DeadlineExceeded(TimeoutError):
+    """The request's deadline expired before dispatch; delivered through the
+    request future (the drop happens queue-side, never mid-solve)."""
+
+
+# ---------------------------------------------------------------------------
+# request specs: WHAT to solve
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DenseSpec:
+    """A single-class request from the dense (p, p) covariance."""
+
+    S: object
+    lam: float
+
+    @property
+    def p(self) -> int:
+        return int(np.asarray(self.S).shape[0])
+
+
+@dataclass(frozen=True)
+class DataSpec:
+    """A single-class request from the raw (n, p) data matrix: screening
+    runs out-of-core (``repro.stream``) — the dense S never exists.
+
+    ``session`` names a pinned screen state for later incremental
+    ``append_rows``; ``stream`` is a ``repro.stream.StreamConfig`` (or a
+    kwargs dict) for this request."""
+
+    X: object
+    lam: float
+    session: str | None = None
+    stream: object = None
+
+    @property
+    def p(self) -> int:
+        return int(np.asarray(self.X).shape[1])
+
+
+@dataclass(frozen=True)
+class JointSpec:
+    """A K-class joint request (``repro.joint``): pass ``Ss`` (class
+    covariances) or ``Xs`` (per-class data matrices, screened out-of-core),
+    never both."""
+
+    Ss: object = None
+    lam1: float = 0.0
+    lam2: float = 0.0
+    penalty: str = "group"
+    Xs: object = None
+    stream: object = None
+
+    def __post_init__(self):
+        if (self.Ss is None) == (self.Xs is None):
+            raise ValueError("JointSpec needs exactly one of Ss or Xs")
+
+    @property
+    def K(self) -> int:
+        mats = self.Ss if self.Ss is not None else self.Xs
+        return len(mats)
+
+    @property
+    def p(self) -> int:
+        if self.Ss is not None:
+            return int(np.asarray(self.Ss[0]).shape[0])
+        return int(np.asarray(self.Xs[0]).shape[1])
+
+
+SolveSpec = DenseSpec | DataSpec | JointSpec
+
+
+# ---------------------------------------------------------------------------
+# request meta: HOW to treat it
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RequestMeta:
+    """Per-request serving policy; orthogonal to the spec.
+
+    ``deadline`` is RELATIVE seconds from admission (converted to an
+    absolute monotonic instant inside the server); ``output`` overrides the
+    server-level representation ("dense" | "sparse" | "auto")."""
+
+    tenant: str = "default"
+    slo: str = "interactive"
+    deadline: float | None = None
+    output: str | None = None
+
+    def __post_init__(self):
+        if self.slo not in SLO_CLASSES:
+            raise ValueError(
+                f"slo must be one of {SLO_CLASSES}, got {self.slo!r}"
+            )
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError("deadline must be positive seconds")
+
+
+# ---------------------------------------------------------------------------
+# per-tenant token buckets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Quota:
+    """Tenant admission budget: ``rate`` requests/second refill, ``burst``
+    bucket capacity (momentary spike allowance)."""
+
+    rate: float
+    burst: float
+
+    def __post_init__(self):
+        if self.rate <= 0 or self.burst <= 0:
+            raise ValueError("quota rate and burst must be positive")
+
+
+class TokenBucket:
+    """Classic token bucket; thread-safe; clock injectable for tests."""
+
+    def __init__(self, quota: Quota, *, clock=time.monotonic):
+        self.quota = quota
+        self._clock = clock
+        self._tokens = float(quota.burst)
+        self._stamp = clock()
+        self._lock = threading.Lock()
+
+    def try_acquire(self, n: float = 1.0) -> bool:
+        with self._lock:
+            now = self._clock()
+            self._tokens = min(
+                self.quota.burst,
+                self._tokens + (now - self._stamp) * self.quota.rate,
+            )
+            self._stamp = now
+            if self._tokens >= n:
+                self._tokens -= n
+                return True
+            return False
+
+    @property
+    def tokens(self) -> float:
+        with self._lock:
+            now = self._clock()
+            return min(
+                self.quota.burst,
+                self._tokens + (now - self._stamp) * self.quota.rate,
+            )
+
+
+# ---------------------------------------------------------------------------
+# bounded two-class priority queue
+# ---------------------------------------------------------------------------
+
+
+class AdmissionQueue:
+    """Bounded dispatch queue with two strict priority levels.
+
+    "interactive" items dequeue before any "batch" item (FIFO within a
+    level) — the priority half of the SLO contract; the bounded half is
+    ``try_put`` returning False when ``maxsize`` items are already waiting,
+    which the server surfaces as a typed ``Overload``.  API mirrors the
+    ``queue.Queue`` subset the batcher uses (``get(timeout)`` raising
+    ``queue.Empty``, ``get_nowait``) so the drain loop is unchanged."""
+
+    def __init__(self, maxsize: int = 0):
+        self.maxsize = int(maxsize)  # 0 = unbounded (legacy behavior)
+        self._interactive: deque = deque()
+        self._batch: deque = deque()
+        self._cond = threading.Condition()
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._interactive) + len(self._batch)
+
+    def try_put(self, item, *, slo: str = "interactive") -> bool:
+        with self._cond:
+            if self.maxsize > 0 and (
+                len(self._interactive) + len(self._batch) >= self.maxsize
+            ):
+                return False
+            (self._interactive if slo == "interactive" else self._batch).append(
+                item
+            )
+            self._cond.notify()
+            return True
+
+    def _pop_locked(self):
+        if self._interactive:
+            return self._interactive.popleft()
+        return self._batch.popleft()
+
+    def get(self, timeout: float | None = None):
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while not (self._interactive or self._batch):
+                remaining = (
+                    None if deadline is None else deadline - time.monotonic()
+                )
+                if remaining is not None and remaining <= 0:
+                    raise queue.Empty
+                self._cond.wait(remaining)
+            return self._pop_locked()
+
+    def get_nowait(self):
+        with self._cond:
+            if not (self._interactive or self._batch):
+                raise queue.Empty
+            return self._pop_locked()
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+
+def fingerprint_array(A) -> str:
+    """Content hash of one array: sha1 over (shape, dtype, C-contiguous
+    bytes) — the cache-key primitive for spec payloads."""
+    A = np.ascontiguousarray(np.asarray(A))
+    h = hashlib.sha1()
+    h.update(str(A.shape).encode())
+    h.update(str(A.dtype).encode())
+    h.update(A.tobytes())
+    return h.hexdigest()
+
+
+def spec_cache_key(spec, output: str) -> tuple | None:
+    """Hashable cache key for a spec + resolved output — or None when the
+    request is uncacheable (named sessions mutate; custom stream configs
+    may reorder float accumulation, so only the default tiling caches)."""
+    if isinstance(spec, DenseSpec):
+        return ("dense", fingerprint_array(spec.S), float(spec.lam), output)
+    if isinstance(spec, DataSpec):
+        if spec.session is not None or spec.stream is not None:
+            return None
+        return ("data", fingerprint_array(spec.X), float(spec.lam), output)
+    if isinstance(spec, JointSpec):
+        if spec.stream is not None:
+            return None
+        mats = spec.Ss if spec.Ss is not None else spec.Xs
+        kind = "joint" if spec.Ss is not None else "joint_data"
+        return (
+            kind,
+            tuple(fingerprint_array(M) for M in mats),
+            float(spec.lam1),
+            float(spec.lam2),
+            spec.penalty,
+            len(mats),
+            output,
+        )
+    return None
+
+
+class ResultCache:
+    """Thread-safe LRU over finished results, keyed by ``spec_cache_key``.
+
+    Sits ABOVE the process-global compiled-solver cache: a compiled-cache
+    hit still screens/plans/dispatches; a result-cache hit returns the
+    finished ``GlassoResult`` without touching the planner."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = int(maxsize)
+        self._data: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get(self, key):
+        if key is None or self.maxsize <= 0:
+            return None
+        with self._lock:
+            if key not in self._data:
+                return None
+            self._data.move_to_end(key)
+            return self._data[key]
+
+    def put(self, key, value) -> None:
+        if key is None or self.maxsize <= 0 or value is None:
+            return
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+
+# ---------------------------------------------------------------------------
+# deadline helper
+# ---------------------------------------------------------------------------
+
+
+def deadline_instant(meta: RequestMeta | None) -> float | None:
+    """Absolute monotonic expiry for a request admitted NOW (None = never)."""
+    if meta is None or meta.deadline is None:
+        return None
+    return time.monotonic() + float(meta.deadline)
+
+
+@dataclass
+class TenantBuckets:
+    """Per-tenant bucket registry: ``quotas`` maps tenant -> Quota;
+    ``default`` applies to unlisted tenants (None = unmetered)."""
+
+    quotas: dict = field(default_factory=dict)
+    default: Quota | None = None
+    clock: object = time.monotonic
+
+    def __post_init__(self):
+        self._buckets: dict[str, TokenBucket] = {}
+        self._lock = threading.Lock()
+
+    def try_admit(self, tenant: str) -> bool:
+        quota = self.quotas.get(tenant, self.default)
+        if quota is None:
+            return True
+        with self._lock:
+            bucket = self._buckets.get(tenant)
+            if bucket is None or bucket.quota != quota:
+                bucket = self._buckets[tenant] = TokenBucket(
+                    quota, clock=self.clock
+                )
+        return bucket.try_acquire()

@@ -24,7 +24,25 @@ batching window behind an iterative co-traveller.
 
     PYTHONPATH=src python -m repro.launch.serve_glasso --requests 8 --p 60
 
-DATA-MATRIX ADMISSION (``submit_data``) accepts the raw (n, p) X instead of
+THE CONTROL PLANE (DESIGN.md Section 14; ``launch.control_plane``): every
+admission verb is one — ``submit(spec, meta=RequestMeta(...))`` — where the
+spec says WHAT to solve (``DenseSpec(S, lam)`` / ``DataSpec(X, lam,
+session=...)`` / ``JointSpec(Ss=..., lam1=..., lam2=...)``) and the meta says
+HOW to treat it: ``tenant`` charges a per-tenant token bucket (``quotas=`` /
+``default_quota=``; exhausted buckets raise a typed ``Overload`` from submit,
+reason="quota"); ``slo="interactive"`` keeps the admission fast path and
+dequeues ahead of every "batch" request, ``slo="batch"`` is best-effort and
+yields both; ``deadline`` (relative seconds) drops the request BEFORE
+dispatch with ``DeadlineExceeded`` once expired — a dead request never burns
+a solver.  ``max_queue=`` bounds the dispatch queue (full = ``Overload``
+reason="queue", raised synchronously — no future that hangs a timeout), and
+``result_cache=`` adds an LRU over finished results keyed by (payload
+fingerprint, lambdas, penalty, K, output) ABOVE the process-global compiled
+cache: an identical re-submission returns the finished result with zero
+planner work.  The historical verbs — ``submit(S, lam)``, ``submit_data``,
+``submit_joint`` — still work as deprecated shims over the same chokepoint.
+
+DATA-MATRIX ADMISSION (``DataSpec``) accepts the raw (n, p) X instead of
 a covariance: screening runs out-of-core through ``repro.stream`` (the dense
 S never exists — materialized per-component blocks flow through the same
 planner/batcher), and a named ``session`` pins the screen state so
@@ -34,7 +52,7 @@ merge/split, and the fresh solve warm-starts from the session's previous
 solution (untouched components start essentially converged — the serving
 analog of the path warm start).
 
-JOINT ADMISSION (``submit_joint``) accepts K class covariances (or K data
+JOINT ADMISSION (``JointSpec``) accepts K class covariances (or K data
 matrices via ``Xs=``) estimated jointly under the fused/group penalty
 (``repro.joint``): the exact hybrid thresholding screen and the joint plan
 run on the caller's thread, an all-closed-form plan (singletons +
@@ -54,8 +72,13 @@ COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
     serve.fastpath_requests      sum   requests solved at admission
     serve.fastpath_blocks        sum   blocks on a non-iterative route
     serve.fallback_blocks        sum   closed-form candidates repaired
-    serve.data_requests          sum   submit_data admissions
+    serve.data_requests          sum   DataSpec admissions
     serve.session_updates        sum   append_rows incremental re-screens
+    serve.rejected.quota         sum   admissions refused: tenant bucket dry
+    serve.rejected.queue         sum   admissions refused: bounded queue full
+    serve.rejected.deadline      sum   queued requests expired pre-dispatch
+    serve.cache.hits             sum   result-cache hits (no planner work)
+    serve.cache.misses           sum   cacheable admissions that missed
     stream.tiles_total           sum   tile pairs scheduled (per class)
     stream.tiles_skipped         sum   Cauchy-Schwarz prunes
     stream.tiles_rescreened      sum   session tiles recomputed on update
@@ -71,7 +94,7 @@ COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
     solver.oversize.cg_iters     sum   inner CG/Newton-Schulz iterations
     solver.oversize.fallbacks    sum   sharded rejections re-solved 1-device
     solver.oversize.device_bytes_peak  peak  accounting-model device bytes
-    joint.requests               sum   submit_joint admissions
+    joint.requests               sum   JointSpec admissions
     joint.fastpath_requests      sum   joint requests solved at admission
     joint.screens                sum   hybrid screens run (dense + streamed)
     joint.dispatches             sum   joint solver dispatches (all routes)
@@ -87,22 +110,23 @@ COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
 
 SPARSE RESULTS (``output=``): the server-level ``output`` ("dense" /
 "sparse" / "auto", default "auto") picks the result representation for
-every admission path, and each ``submit*`` call can override it
-per-request.  "auto" resolves per request from its p (sparse above
-``core.sparse.AUTO_SPARSE_P``); a sparse result's ``Theta`` is a
-``SparseTheta`` / ``JointSparseTheta`` — per-component padded block stacks,
-edge lists via ``support_edges()``, CSR via ``to_csr()`` — assembled with
-ZERO (p, p) allocation, so serving payloads for huge requests stay
-O(sum b_i^2).
+every admission path, and each request can override it via
+``RequestMeta(output=...)``.  "auto" resolves per request from its p
+(sparse above ``core.sparse.AUTO_SPARSE_P``); a sparse result's ``Theta``
+is a ``SparseTheta`` / ``JointSparseTheta`` — per-component padded block
+stacks, edge lists via ``support_edges()``, CSR via ``to_csr()`` —
+assembled with ZERO (p, p) allocation, so serving payloads for huge
+requests stay O(sum b_i^2).
 
-OVERSIZE ADMISSION (``oversize_threshold`` / ``oversize_budget_mb``): a
-request whose screen leaves a component past the single-device block cap is
-still admitted — the planner classes it "oversize", the admission fast path
-declines it (a mesh-wide solve is not microseconds-cheap), and the batcher
-dispatches it down the executor's sharded route: shard-direct gather, the
-mesh-spanning no-eigh ADMM, distributed KKT verification, single-device
-iterative fallback on rejection.  ``GlassoResult.oversize`` carries the
-per-request {dispatched, inner_iters, fallbacks}.
+OVERSIZE ADMISSION (``oversize_threshold`` / ``oversize_budget_mb`` on
+``EngineOptions``): a request whose screen leaves a component past the
+single-device block cap is still admitted — the planner classes it
+"oversize", the admission fast path declines it (a mesh-wide solve is not
+microseconds-cheap), and the batcher dispatches it down the executor's
+sharded route: shard-direct gather, the mesh-spanning no-eigh ADMM,
+distributed KKT verification, single-device iterative fallback on
+rejection.  ``GlassoResult.oversize`` carries the per-request
+{dispatched, inner_iters, fallbacks}.
 """
 
 from __future__ import annotations
@@ -111,12 +135,32 @@ import argparse
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.core.instrument import bump, counts
+from repro.launch.control_plane import (
+    AdmissionQueue,
+    DataSpec,
+    DeadlineExceeded,
+    DenseSpec,
+    JointSpec,
+    Overload,
+    RequestMeta,
+    ResultCache,
+    TenantBuckets,
+    deadline_instant,
+    spec_cache_key,
+)
+
+_LEGACY_VERB_MSG = (
+    "{verb} is deprecated; pass a typed spec — "
+    "server.submit({spec}, meta=RequestMeta(tenant=..., slo=..., "
+    "deadline=..., output=...)) — see launch.control_plane"
+)
 
 
 @dataclass
@@ -133,11 +177,16 @@ class GlassoRequest:
     plan: object = None
     # resolved result representation ("dense" | "sparse"), fixed at admission
     output: str = "dense"
+    # control-plane identity: accounting tenant, SLO class, and the absolute
+    # monotonic expiry (None = never) fixed at admission
+    tenant: str = "default"
+    slo: str = "interactive"
+    deadline_at: float | None = None
 
 
 @dataclass
 class JointRequest:
-    """A K-class joint request (``submit_joint``); rides the same queue and
+    """A K-class joint request (``JointSpec``); rides the same queue and
     shutdown drain as plain requests."""
 
     Ss: object                     # list of dense arrays or materialized covs
@@ -149,6 +198,9 @@ class JointRequest:
     stats: object = None
     plan: object = None
     output: str = "dense"
+    tenant: str = "default"
+    slo: str = "interactive"
+    deadline_at: float | None = None
 
 
 @dataclass
@@ -171,59 +223,67 @@ class _PlacedBucket:
 class GlassoServer:
     """Coalescing batch server over the engine executor.
 
-    ``submit`` is thread-safe and returns a Future resolving to the engine's
-    ``GlassoResult``.  ``max_delay`` is the batching window: the batcher waits
-    that long after the first queued request for co-travellers before
-    dispatching (classic serving latency/throughput knob)."""
+    ``submit(spec, meta=...)`` is thread-safe and returns a Future resolving
+    to the engine's ``GlassoResult`` (or raises ``Overload`` synchronously
+    when the control plane refuses admission).  ``max_delay`` is the
+    batching window: the batcher waits that long after the first queued
+    request for co-travellers before dispatching (classic serving
+    latency/throughput knob).
+
+    Engine configuration travels as ``options=EngineOptions(...)`` — the
+    same typed object ``glasso``/``joint_glasso`` accept; legacy bare
+    engine kwargs (``solver=``, ``route=``, ``tol=``, ...) still normalize
+    through the shared chokepoint.  Control-plane knobs are the server's
+    own: ``quotas`` (tenant -> ``control_plane.Quota``), ``default_quota``
+    (unlisted tenants; None = unmetered), ``max_queue`` (0 = unbounded),
+    ``result_cache`` (LRU entries; 0 = off — fingerprinting a request
+    costs one sha1 pass over its payload, so caching is opt-in)."""
 
     def __init__(
         self,
         *,
-        solver: str = "bcd",
-        dtype=None,
-        cc_backend: str = "host",
+        options=None,
         max_delay: float = 0.005,
         max_batch: int = 64,
-        route: bool = True,
         fast_path: bool = True,
-        route_check_tol: float = 1e-6,
-        oversize_threshold: int | None = None,
-        oversize_budget_mb: float | str | None = None,
-        output: str = "auto",
-        **solver_opts,
+        quotas: dict | None = None,
+        default_quota=None,
+        max_queue: int = 0,
+        result_cache: int = 0,
+        **legacy_engine_kwargs,
     ):
-        import jax.numpy as jnp
-        import numpy as _np
-
         from repro.core.solvers import SOLVERS
         from repro.engine.api import resolve_oversize
         from repro.engine.executor import BucketExecutor, _validate_solver_opts
+        from repro.engine.options import normalize_options
 
+        opts = normalize_options(
+            options, legacy_engine_kwargs, context="GlassoServer"
+        )
+        solver = opts.resolved_solver("bcd")
         if solver not in SOLVERS:
             raise ValueError(
                 f"unknown solver {solver!r}; available: {sorted(SOLVERS)}"
             )
-        if output not in ("dense", "sparse", "auto"):
-            raise ValueError(
-                f"output must be 'dense', 'sparse' or 'auto', got {output!r}"
-            )
+        solver_opts = dict(opts.solver_opts)
         _validate_solver_opts(solver, solver_opts)
+        self.options = opts
         self.solver = solver
-        self.output = output
-        self.dtype = jnp.float64 if dtype is None else dtype
-        self.cc_backend = cc_backend
+        self.output = opts.output
+        self.dtype = opts.resolved_dtype()
+        self.cc_backend = opts.cc_backend
         self.max_delay = max_delay
         self.max_batch = max_batch
-        self.route = route
-        self.fast_path = fast_path and route
-        self.route_check_tol = route_check_tol
+        self.route = opts.route
+        self.fast_path = fast_path and opts.route
+        self.route_check_tol = opts.route_check_tol
         # single-device block cap: larger components are ADMITTED (not
         # rejected) and routed down the mesh-spanning sharded path by the
         # batcher — an oversize request just never takes the synchronous
         # admission fast path (a mesh-wide solve is not "microseconds-cheap")
         self.oversize = resolve_oversize(
-            oversize_threshold, oversize_budget_mb,
-            _np.dtype(jnp.dtype(self.dtype).name), route=route,
+            opts.oversize_threshold, opts.oversize_budget_mb,
+            opts.np_dtype(), route=opts.route,
         )
         self.solver_opts = solver_opts
         self._opts_key = tuple(sorted(solver_opts.items()))
@@ -235,7 +295,7 @@ class GlassoServer:
             dtype=self.dtype,
             solver_opts=dict(solver_opts),
             route=True,
-            route_check_tol=route_check_tol,
+            route_check_tol=self.route_check_tol,
         )
         # data sessions: named streaming-screen states for append_rows; the
         # session executor honors the server's route setting (the admission
@@ -244,12 +304,18 @@ class GlassoServer:
             solver=solver,
             dtype=self.dtype,
             solver_opts=dict(solver_opts),
-            route=route,
-            route_check_tol=route_check_tol,
+            route=opts.route,
+            route_check_tol=self.route_check_tol,
         )
         self._sessions: dict[str, _SessionEntry] = {}
         self._sessions_lock = threading.Lock()
-        self._queue: queue.Queue = queue.Queue()
+        # control plane: per-tenant token buckets, the bounded two-class
+        # priority queue, and the finished-result LRU
+        self._quotas = TenantBuckets(
+            quotas=dict(quotas or {}), default=default_quota
+        )
+        self._queue = AdmissionQueue(maxsize=max_queue)
+        self._cache = ResultCache(result_cache)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._joint = None  # lazily-built JointEngine (repro.joint)
@@ -268,16 +334,15 @@ class GlassoServer:
             from repro.joint.engine import JointEngine
 
             accepted = set(inspect.signature(joint_admm).parameters)
-            opts = {
-                k: v for k, v in self.solver_opts.items() if k in accepted
-            }
-            self._joint = JointEngine(
-                dtype=self.dtype,
-                cc_backend=self.cc_backend,
-                route=self.route,
-                route_check_tol=self.route_check_tol,
-                **opts,
+            joint_opts = self.options.replace(
+                solver=None,  # JointEngine resolves its own default
+                oversize_threshold=None,
+                oversize_budget_mb=None,
+                solver_opts={
+                    k: v for k, v in self.solver_opts.items() if k in accepted
+                },
             )
+            self._joint = JointEngine(options=joint_opts)
         return self._joint
 
     # -- lifecycle ---------------------------------------------------------
@@ -295,8 +360,8 @@ class GlassoServer:
 
     def _fail_pending(self) -> None:
         """Fail queued requests fast instead of letting their clients block
-        out the full result() timeout.  Called from stop() and from submit()
-        when it loses the shutdown race."""
+        out the full result() timeout.  Called from stop() and from the
+        admission chokepoint when an enqueue loses the shutdown race."""
         while True:
             try:
                 req = self._queue.get_nowait()
@@ -314,30 +379,61 @@ class GlassoServer:
     # -- client API --------------------------------------------------------
 
     def _resolve_output(self, output: str | None, p: int) -> str:
-        """Fix a request's result representation at admission: the call-site
-        ``output=`` overrides the server default; "auto" resolves from p."""
+        """Fix a request's result representation at admission: the request
+        ``meta.output`` overrides the server default; "auto" resolves from
+        p."""
         from repro.core.sparse import resolve_output
 
         return resolve_output(self.output if output is None else output, p)
 
+    @staticmethod
+    def _fold_output(meta: RequestMeta | None, output: str | None) -> RequestMeta:
+        """Merge the legacy per-call ``output=`` kwarg into the meta."""
+        meta = meta if meta is not None else RequestMeta()
+        if output is None:
+            return meta
+        if meta.output is not None:
+            raise TypeError(
+                "output= conflicts with meta.output; set it in RequestMeta"
+            )
+        return replace(meta, output=output)
+
     def submit(
-        self, S: np.ndarray, lam: float, *, output: str | None = None
+        self,
+        spec,
+        lam: float | None = None,
+        *,
+        output: str | None = None,
+        meta: RequestMeta | None = None,
     ) -> Future:
-        req = GlassoRequest(S=np.asarray(S), lam=float(lam))
-        req.output = self._resolve_output(output, req.S.shape[0])
-        if self._stop.is_set():
-            # fail fast instead of parking a request no batcher will serve
-            req.future.set_exception(RuntimeError("GlassoServer stopped"))
-            return req.future
-        bump("serve.requests")
-        if self.fast_path and self._try_fast_path(req):
-            return req.future
-        self._queue.put(req)
-        if self._stop.is_set():
-            # lost the race against stop(): its drain may have run before our
-            # put landed, so sweep the queue ourselves
-            self._fail_pending()
-        return req.future
+        """Admit ONE request of any kind: ``submit(spec, meta=...)``.
+
+        ``spec`` is a ``DenseSpec`` / ``DataSpec`` / ``JointSpec``
+        (``launch.control_plane``); ``meta`` carries tenant, SLO class,
+        deadline, and the per-request output override.  Returns a Future
+        resolving to the engine result — or raises ``Overload``
+        synchronously when the tenant's token bucket is dry or the bounded
+        queue is full (backpressure is an exception, never a hung future).
+
+        The historical form ``submit(S, lam)`` still works as a deprecated
+        shim (one ``DeprecationWarning``) and is equivalent to
+        ``submit(DenseSpec(S, lam))``."""
+        if not isinstance(spec, (DenseSpec, DataSpec, JointSpec)):
+            warnings.warn(
+                _LEGACY_VERB_MSG.format(
+                    verb="submit(S, lam)", spec="DenseSpec(S, lam)"
+                ),
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if lam is None:
+                raise TypeError("legacy submit(S, lam) needs lam")
+            spec = DenseSpec(S=np.asarray(spec), lam=float(lam))
+        elif lam is not None:
+            raise TypeError(
+                "submit(spec) takes no positional lam — it lives on the spec"
+            )
+        return self._submit(spec, self._fold_output(meta, output))
 
     def submit_data(
         self,
@@ -348,60 +444,17 @@ class GlassoServer:
         stream=None,
         output: str | None = None,
     ) -> Future:
-        """Admit a request from the raw (n, p) DATA matrix.
-
-        Screening runs out-of-core on the caller's thread (``repro.stream``:
-        tiled Gram + compacted edges + materialized per-component blocks —
-        the dense S never exists), then the request takes the normal
-        admission path: solved synchronously if every bucket routes
-        non-iteratively, queued for the coalescing batcher otherwise.
-
-        ``session="name"`` pins the streaming screen state so later
-        ``append_rows("name", Y)`` calls re-screen incrementally; without it
-        the screen runs stateless (no per-tile records, no retained X —
-        nothing a one-shot request would ever use).  ``stream`` is a
-        ``repro.stream.StreamConfig`` (or kwargs dict)."""
-        from repro.engine.planner import build_plan_incremental
-        from repro.stream import DataSession, stream_screen
-
-        req = GlassoRequest(S=None, lam=float(lam))
-        req.output = self._resolve_output(output, int(np.asarray(X).shape[1]))
-        if self._stop.is_set():
-            req.future.set_exception(RuntimeError("GlassoServer stopped"))
-            return req.future
-        bump("serve.requests")
-        bump("serve.data_requests")
-        try:
-            if session is not None:
-                ses = DataSession(X, lam, config=stream, oversize=self.oversize)
-                req.S, req.labels, req.stats = ses.S, ses.labels, ses.stats
-                with self._sessions_lock:
-                    self._sessions[session] = _SessionEntry(
-                        session=ses, last=req.future
-                    )
-            else:
-                sc = stream_screen(
-                    X, [float(lam)], config=stream, oversize=self.oversize
-                )
-                req.S, req.labels, req.stats = sc.S, sc.labels[0], sc.stats[0]
-            req.plan, _ = build_plan_incremental(
-                req.S, req.lam, req.labels, classify_structures=self.route,
-                oversize=self.oversize,
-            )
-        except Exception as e:
-            req.future.set_exception(e)
-            return req.future
-        if self.fast_path:
-            try:
-                if self._solve_if_fastpath(req):
-                    return req.future
-            except Exception as e:  # pragma: no cover - defensive
-                req.future.set_exception(e)
-                return req.future
-        self._queue.put(req)
-        if self._stop.is_set():
-            self._fail_pending()
-        return req.future
+        """Deprecated shim: ``submit(DataSpec(X, lam, session=...,
+        stream=...))`` — see that path for semantics."""
+        warnings.warn(
+            _LEGACY_VERB_MSG.format(
+                verb="submit_data", spec="DataSpec(X, lam, session=...)"
+            ),
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        spec = DataSpec(X=X, lam=float(lam), session=session, stream=stream)
+        return self._submit(spec, self._fold_output(None, output))
 
     def submit_joint(
         self,
@@ -414,53 +467,204 @@ class GlassoServer:
         stream=None,
         output: str | None = None,
     ) -> Future:
-        """Admit a K-class JOINT request (``repro.joint``).
-
-        ``Ss`` is the list of K class covariances; ``Xs=`` instead screens
-        each class out-of-core from its (n_k, p) data matrix (the joint
-        analog of ``submit_data`` — no dense per-class S ever exists).  The
-        exact hybrid thresholding screen and the joint plan run on the
-        caller's thread; a plan whose every union bucket routes
-        non-iteratively (singletons + identical-block forest components)
-        is solved synchronously at admission, everything else queues for
-        the batcher.  Shutdown drains joint futures through the same
-        ``_fail_pending`` path as every other request kind."""
+        """Deprecated shim: ``submit(JointSpec(Ss=..., lam1=..., lam2=...))``
+        — see that path for semantics."""
+        warnings.warn(
+            _LEGACY_VERB_MSG.format(
+                verb="submit_joint", spec="JointSpec(Ss, lam1, lam2)"
+            ),
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if lam1 is None:
             raise ValueError("submit_joint needs lam1")
-        req = JointRequest(
-            Ss=None, lam1=float(lam1), lam2=float(lam2), penalty=penalty
-        )
-        if self._stop.is_set():
-            req.future.set_exception(RuntimeError("GlassoServer stopped"))
-            return req.future
-        bump("serve.requests")
-        bump("joint.requests")
         try:
-            engine = self._joint_engine()
-            if Xs is not None:
-                if Ss is not None:
-                    raise ValueError("pass either Ss or Xs=, not both")
-                from repro.joint.stream import joint_stream_screen
-
-                sc = joint_stream_screen(
-                    Xs, req.lam1, req.lam2, penalty=penalty, config=stream
-                )
-                req.Ss, req.labels, req.stats = sc.S, sc.labels, sc.stats
-            else:
-                if Ss is None:
-                    raise ValueError("submit_joint needs Ss (or Xs=)")
-                req.Ss = [np.asarray(S) for S in Ss]
-                req.labels, req.stats = engine.screen(
-                    req.Ss, req.lam1, req.lam2, penalty=penalty
-                )
-            req.plan = engine.plan(
-                req.Ss, req.lam1, req.lam2, req.labels, penalty=penalty
+            spec = JointSpec(
+                Ss=Ss, lam1=float(lam1), lam2=float(lam2),
+                penalty=penalty, Xs=Xs, stream=stream,
             )
-            req.output = self._resolve_output(output, int(req.plan.p))
+        except ValueError as e:
+            # legacy contract: malformed joint payloads fail via the future
+            fut: Future = Future()
+            fut.set_exception(e)
+            return fut
+        return self._submit(spec, self._fold_output(None, output))
+
+    # -- the admission chokepoint ------------------------------------------
+
+    def _submit(self, spec, meta: RequestMeta) -> Future:
+        """Every admission path in one place: stop-check, result cache,
+        tenant quota, then the spec-kind handoff.  Centralizing the
+        stop-check here (plus the post-enqueue sweep in ``_enqueue``) is
+        what closes the historical shutdown race where a data/joint
+        admission could enqueue after ``stop()``'s drain and hang its
+        client."""
+        if self._stop.is_set():
+            fut: Future = Future()
+            fut.set_exception(RuntimeError("GlassoServer stopped"))
+            return fut
+        out = self._resolve_output(meta.output, spec.p)
+        key = spec_cache_key(spec, out) if self._cache.maxsize > 0 else None
+        if key is not None:
+            cached = self._cache.get(key)
+            if cached is not None:
+                bump("serve.requests")
+                bump("serve.cache.hits")
+                fut = Future()
+                fut.set_result(cached)
+                return fut
+            bump("serve.cache.misses")
+        if not self._quotas.try_admit(meta.tenant):
+            bump("serve.rejected.quota")
+            raise Overload(
+                f"tenant {meta.tenant!r} exceeded its admission quota",
+                reason="quota",
+                tenant=meta.tenant,
+            )
+        bump("serve.requests")
+        if isinstance(spec, DenseSpec):
+            return self._admit_dense(spec, meta, out, key)
+        if isinstance(spec, DataSpec):
+            return self._admit_data(spec, meta, out, key)
+        return self._admit_joint(spec, meta, out, key)
+
+    def _attach_cache_fill(self, fut: Future, key) -> None:
+        """Write-through on success: a cacheable request's finished result
+        lands in the LRU whichever path (fast path, batcher, repair) solved
+        it."""
+        if key is None:
+            return
+
+        def _fill(f: Future, key=key):
+            try:
+                if f.exception() is None:
+                    self._cache.put(key, f.result())
+            except Exception:  # pragma: no cover - cancelled futures
+                pass
+
+        fut.add_done_callback(_fill)
+
+    def _enqueue(self, req) -> Future:
+        """Bounded enqueue + the shutdown-race sweep, shared by every
+        admission kind."""
+        if not self._queue.try_put(req, slo=req.slo):
+            bump("serve.rejected.queue")
+            raise Overload(
+                f"dispatch queue full (max_queue={self._queue.maxsize})",
+                reason="queue",
+                tenant=req.tenant,
+            )
+        if self._stop.is_set():
+            # lost the race against stop(): its drain may have run before our
+            # put landed, so sweep the queue ourselves
+            self._fail_pending()
+        return req.future
+
+    def _admit_dense(self, spec: DenseSpec, meta, out: str, key) -> Future:
+        req = GlassoRequest(
+            S=np.asarray(spec.S), lam=float(spec.lam), output=out,
+            tenant=meta.tenant, slo=meta.slo,
+            deadline_at=deadline_instant(meta),
+        )
+        self._attach_cache_fill(req.future, key)
+        # the fast path is the interactive SLO's half of the contract: batch
+        # requests always take the queue (and yield the window)
+        if self.fast_path and meta.slo == "interactive":
+            if self._try_fast_path(req):
+                return req.future
+        return self._enqueue(req)
+
+    def _admit_data(self, spec: DataSpec, meta, out: str, key) -> Future:
+        """Data-matrix admission: the out-of-core screen runs on the
+        caller's thread (``repro.stream``: tiled Gram + compacted edges +
+        materialized per-component blocks — the dense S never exists), then
+        the request takes the normal path: solved synchronously if every
+        bucket routes non-iteratively (interactive only), queued otherwise.
+
+        ``spec.session`` pins the streaming screen state so later
+        ``append_rows(name, Y)`` calls re-screen incrementally; without it
+        the screen runs stateless (no per-tile records, no retained X —
+        nothing a one-shot request would ever use)."""
+        from repro.engine.planner import build_plan_incremental
+        from repro.stream import DataSession, stream_screen
+
+        bump("serve.data_requests")
+        req = GlassoRequest(
+            S=None, lam=float(spec.lam), output=out,
+            tenant=meta.tenant, slo=meta.slo,
+            deadline_at=deadline_instant(meta),
+        )
+        self._attach_cache_fill(req.future, key)
+        try:
+            if spec.session is not None:
+                ses = DataSession(
+                    spec.X, req.lam, config=spec.stream, oversize=self.oversize
+                )
+                req.S, req.labels, req.stats = ses.S, ses.labels, ses.stats
+                with self._sessions_lock:
+                    self._sessions[spec.session] = _SessionEntry(
+                        session=ses, last=req.future
+                    )
+            else:
+                sc = stream_screen(
+                    spec.X, [req.lam], config=spec.stream,
+                    oversize=self.oversize,
+                )
+                req.S, req.labels, req.stats = sc.S, sc.labels[0], sc.stats[0]
+            req.plan, _ = build_plan_incremental(
+                req.S, req.lam, req.labels, classify_structures=self.route,
+                oversize=self.oversize,
+            )
         except Exception as e:
             req.future.set_exception(e)
             return req.future
-        if self.fast_path:
+        if self.fast_path and meta.slo == "interactive":
+            try:
+                if self._solve_if_fastpath(req):
+                    return req.future
+            except Exception as e:  # pragma: no cover - defensive
+                req.future.set_exception(e)
+                return req.future
+        return self._enqueue(req)
+
+    def _admit_joint(self, spec: JointSpec, meta, out: str, key) -> Future:
+        """K-class joint admission (``repro.joint``): the exact hybrid
+        thresholding screen and the joint plan run on the caller's thread;
+        a plan whose every union bucket routes non-iteratively (singletons
+        + identical-block forest components) is solved synchronously at
+        admission (interactive only), everything else queues for the
+        batcher.  Shutdown drains joint futures through the same
+        ``_fail_pending`` path as every other request kind."""
+        bump("joint.requests")
+        req = JointRequest(
+            Ss=None, lam1=float(spec.lam1), lam2=float(spec.lam2),
+            penalty=spec.penalty, output=out,
+            tenant=meta.tenant, slo=meta.slo,
+            deadline_at=deadline_instant(meta),
+        )
+        self._attach_cache_fill(req.future, key)
+        try:
+            engine = self._joint_engine()
+            if spec.Xs is not None:
+                from repro.joint.stream import joint_stream_screen
+
+                sc = joint_stream_screen(
+                    spec.Xs, req.lam1, req.lam2, penalty=spec.penalty,
+                    config=spec.stream,
+                )
+                req.Ss, req.labels, req.stats = sc.S, sc.labels, sc.stats
+            else:
+                req.Ss = [np.asarray(S) for S in spec.Ss]
+                req.labels, req.stats = engine.screen(
+                    req.Ss, req.lam1, req.lam2, penalty=spec.penalty
+                )
+            req.plan = engine.plan(
+                req.Ss, req.lam1, req.lam2, req.labels, penalty=spec.penalty
+            )
+        except Exception as e:
+            req.future.set_exception(e)
+            return req.future
+        if self.fast_path and meta.slo == "interactive":
             from repro.engine.registry import route_for
 
             if not any(
@@ -476,10 +680,7 @@ class GlassoServer:
                     if not req.future.done():
                         req.future.set_exception(e)
                     return req.future
-        self._queue.put(req)
-        if self._stop.is_set():
-            self._fail_pending()
-        return req.future
+        return self._enqueue(req)
 
     def _solve_joint_request(self, req: JointRequest) -> None:
         """Solve one planned joint request through the shared JointEngine
@@ -525,7 +726,7 @@ class GlassoServer:
         if entry is None:
             raise KeyError(
                 f"unknown data session {session!r}; open one with "
-                "submit_data(..., session=...)"
+                "submit(DataSpec(X, lam, session=...))"
             )
         bump("serve.session_updates")
         fut: Future = Future()
@@ -674,17 +875,45 @@ class GlassoServer:
                 break
         return batch
 
+    def _expire(self, batch: list) -> list:
+        """Deadline propagation: drop expired requests BEFORE dispatch —
+        a dead request never reaches ``solve_batch``."""
+        now = time.monotonic()
+        live = []
+        for req in batch:
+            if req.deadline_at is not None and now >= req.deadline_at:
+                bump("serve.rejected.deadline")
+                if not req.future.done():
+                    req.future.set_exception(
+                        DeadlineExceeded(
+                            f"deadline expired before dispatch "
+                            f"(tenant={req.tenant!r})"
+                        )
+                    )
+            else:
+                live.append(req)
+        return live
+
     def _loop(self) -> None:
         while not self._stop.is_set():
-            batch = self._drain()
+            batch = self._expire(self._drain())
             if not batch:
                 continue
-            try:
-                self.solve_batch(batch)
-            except Exception as e:  # pragma: no cover - defensive
-                for req in batch:
-                    if not req.future.done():
-                        req.future.set_exception(e)
+            # strict SLO ordering: the interactive sub-batch dispatches
+            # first (batch-class work trades its coalescing opportunity for
+            # the interactive class's latency — the queue already dequeues
+            # interactive first, this keeps a mixed drain honest too)
+            interactive = [r for r in batch if r.slo == "interactive"]
+            best_effort = [r for r in batch if r.slo != "interactive"]
+            for sub in (interactive, best_effort):
+                if not sub:
+                    continue
+                try:
+                    self.solve_batch(sub)
+                except Exception as e:  # pragma: no cover - defensive
+                    for req in sub:
+                        if not req.future.done():
+                            req.future.set_exception(e)
 
     # -- the coalescing solve (callable synchronously too) -----------------
 
@@ -692,7 +921,10 @@ class GlassoServer:
         """Screen+plan each request, coalesce same-size buckets across ALL
         requests into one solver dispatch per (padded size, route), scatter
         back.  Closed-form groups carry their KKT flags through the same
-        verify-then-iterative-fallback contract as the engine executor."""
+        verify-then-iterative-fallback contract as the engine executor.
+        Groups containing an interactive request dispatch first (the queue
+        and drain loop already order whole batches; this orders the
+        dispatches inside one)."""
         import jax
         import jax.numpy as jnp
 
@@ -743,12 +975,22 @@ class GlassoServer:
                 )
 
         bump("serve.batches")
+
+        def _group_priority(item):
+            gkey, placed = item
+            interactive = any(
+                pb.request.slo == "interactive" for pb in placed
+            )
+            return (0 if interactive else 1,) + gkey
+
         # one dispatch per (padded size, route), blocks + per-block lambda
         # stacked across requests; all dispatched before any blocking
         outs: dict[tuple[int, str], object] = {}
         oks: dict[tuple[int, str], object] = {}
         oversize_by_req: dict[int, dict] = {}
-        for (size, route), placed in sorted(groups.items()):
+        for (size, route), placed in sorted(
+            groups.items(), key=_group_priority
+        ):
             n_blocks = sum(len(pb.bucket.comps) for pb in placed)
             lams_h = np.concatenate(
                 [
@@ -941,6 +1183,7 @@ def main():
 
     from repro.covariance import lambda_interval_for_k, paper_synthetic
     from repro.engine.executor import compiled_cache_stats
+    from repro.engine.options import EngineOptions
 
     reqs = []
     for i in range(args.requests):
@@ -948,9 +1191,13 @@ def main():
         lam_min, lam_max = lambda_interval_for_k(S, args.blocks)
         reqs.append((S, 0.5 * (lam_min + lam_max)))
 
-    with GlassoServer(solver=args.solver, tol=1e-7) as server:
+    options = EngineOptions(solver=args.solver, solver_opts={"tol": 1e-7})
+    with GlassoServer(options=options) as server:
         t0 = time.perf_counter()
-        futures = [server.submit(S, lam) for S, lam in reqs]
+        futures = [
+            server.submit(DenseSpec(S, lam), meta=RequestMeta(tenant="demo"))
+            for S, lam in reqs
+        ]
         results = [f.result(timeout=600) for f in futures]
         dt = time.perf_counter() - t0
 

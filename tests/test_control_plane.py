@@ -1,0 +1,331 @@
+"""Serving control plane: typed specs, tenant quotas, bounded queues,
+deadlines, and the result cache (launch.control_plane + the unified
+``GlassoServer.submit(spec, meta=...)`` chokepoint)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.instrument import count, reset
+from repro.covariance import lambda_interval_for_k, paper_synthetic
+from repro.launch.control_plane import (
+    AdmissionQueue,
+    DataSpec,
+    DeadlineExceeded,
+    DenseSpec,
+    JointSpec,
+    Overload,
+    Quota,
+    RequestMeta,
+    ResultCache,
+    TokenBucket,
+    spec_cache_key,
+)
+from repro.launch.serve_glasso import GlassoServer
+
+
+def _dense_case(seed=0):
+    S = paper_synthetic(3, 8, seed=seed)
+    lam_min, lam_max = lambda_interval_for_k(S, 3)
+    return S, float(0.5 * (lam_min + lam_max))
+
+
+# ---------------------------------------------------------------------------
+# primitives in isolation
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_burst_and_refill():
+    now = [0.0]
+    b = TokenBucket(Quota(rate=2.0, burst=3.0), clock=lambda: now[0])
+    # burst: 3 immediate admissions, then dry
+    assert all(b.try_acquire() for _ in range(3))
+    assert not b.try_acquire()
+    # refill at `rate` per second, capped at burst
+    now[0] = 1.0
+    assert b.try_acquire() and b.try_acquire()
+    assert not b.try_acquire()
+    now[0] = 100.0
+    assert b.tokens == pytest.approx(3.0)
+
+
+def test_admission_queue_bounded_and_priority():
+    q = AdmissionQueue(maxsize=3)
+    assert q.try_put("b1", slo="batch")
+    assert q.try_put("i1", slo="interactive")
+    assert q.try_put("b2", slo="batch")
+    assert not q.try_put("i2", slo="interactive")  # full, even for priority
+    # strict two-class priority: interactive first, FIFO within a class
+    assert [q.get(timeout=1) for _ in range(3)] == ["i1", "b1", "b2"]
+    import queue as _q
+
+    with pytest.raises(_q.Empty):
+        q.get(timeout=0.01)
+    # maxsize=0 is unbounded (the legacy default)
+    q0 = AdmissionQueue(maxsize=0)
+    assert all(q0.try_put(i) for i in range(100))
+    assert len(q0) == 100
+
+
+def test_result_cache_lru_eviction():
+    c = ResultCache(maxsize=2)
+    c.put(("a",), 1)
+    c.put(("b",), 2)
+    assert c.get(("a",)) == 1          # touch "a": "b" becomes LRU
+    c.put(("c",), 3)
+    assert c.get(("b",)) is None       # evicted
+    assert c.get(("a",)) == 1 and c.get(("c",)) == 3
+    assert c.get(None) is None         # uncacheable key: always a miss
+    c.put(None, 9)
+    assert len(c) == 2
+
+
+def test_spec_cache_keys():
+    S, lam = _dense_case()
+    k1 = spec_cache_key(DenseSpec(S, lam), "dense")
+    k2 = spec_cache_key(DenseSpec(S.copy(), lam), "dense")
+    assert k1 == k2                    # content-addressed, not identity
+    assert k1 != spec_cache_key(DenseSpec(S, lam * 0.9), "dense")
+    assert k1 != spec_cache_key(DenseSpec(S, lam), "sparse")
+    X = np.ones((6, 4))
+    assert spec_cache_key(DataSpec(X, 0.1), "dense") is not None
+    # sessions mutate and custom stream configs may re-tile: uncacheable
+    assert spec_cache_key(DataSpec(X, 0.1, session="s"), "dense") is None
+    assert spec_cache_key(DataSpec(X, 0.1, stream={"tile": 2}), "dense") is None
+    kj = spec_cache_key(JointSpec(Ss=[S, S], lam1=lam, lam2=0.1), "dense")
+    assert kj is not None
+    assert kj != spec_cache_key(
+        JointSpec(Ss=[S, S], lam1=lam, lam2=0.1, penalty="fused"), "dense"
+    )
+
+
+def test_meta_and_spec_validation():
+    with pytest.raises(ValueError, match="slo"):
+        RequestMeta(slo="realtime")
+    with pytest.raises(ValueError, match="deadline"):
+        RequestMeta(deadline=0.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        JointSpec(lam1=0.1)
+    with pytest.raises(ValueError, match="exactly one"):
+        JointSpec(Ss=[np.eye(2)], Xs=[np.ones((3, 2))], lam1=0.1)
+    with pytest.raises(ValueError):
+        Quota(rate=0.0, burst=1.0)
+
+
+def test_lpt_priorities_place_urgent_first():
+    from repro.core.schedule import lpt_assign
+
+    sizes = [4, 4, 4, 4]
+    base = lpt_assign(sizes, 2)
+    uniform = lpt_assign(sizes, 2, priorities=[1, 1, 1, 1])
+    # uniform priorities preserve plain LPT exactly (stable tie-break)
+    np.testing.assert_array_equal(base.worker_of, uniform.worker_of)
+    # the single urgent equal-cost item is placed first -> worker 0
+    urgent = lpt_assign(sizes, 2, priorities=[0, 0, 1, 0])
+    assert urgent.worker_of[2] == 0
+    with pytest.raises(ValueError, match="priorities"):
+        lpt_assign(sizes, 2, priorities=[1, 2])
+
+
+# ---------------------------------------------------------------------------
+# unified submit: equivalence with the legacy verbs (byte-identical)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_submit_matches_legacy_dense(rng):
+    S, lam = _dense_case(seed=3)
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        r_spec = server.submit(DenseSpec(S, lam)).result(timeout=300)
+        with pytest.warns(DeprecationWarning, match="submit"):
+            r_legacy = server.submit(S, lam).result(timeout=300)
+    np.testing.assert_array_equal(r_spec.Theta, r_legacy.Theta)
+    np.testing.assert_array_equal(r_spec.labels, r_legacy.labels)
+    assert r_spec.solver == r_legacy.solver
+
+
+def test_spec_submit_matches_legacy_data(rng):
+    p = 24
+    X = rng.standard_normal((40, p)) * (0.1 + rng.random(p))
+    lam = 0.08
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        r_spec = server.submit(
+            DataSpec(X, lam, stream={"tile": 8, "chunk": 16})
+        ).result(timeout=300)
+        with pytest.warns(DeprecationWarning, match="submit_data"):
+            r_legacy = server.submit_data(
+                X, lam, stream={"tile": 8, "chunk": 16}
+            ).result(timeout=300)
+    np.testing.assert_array_equal(r_spec.Theta, r_legacy.Theta)
+    np.testing.assert_array_equal(r_spec.labels, r_legacy.labels)
+
+
+def test_spec_submit_matches_legacy_joint():
+    Ss = [np.eye(8) + 0.6 * (1 - np.eye(8)) * (0.9 ** k) for k in range(2)]
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        r_spec = server.submit(
+            JointSpec(Ss=Ss, lam1=0.4, lam2=0.1, penalty="group")
+        ).result(timeout=300)
+        with pytest.warns(DeprecationWarning, match="submit_joint"):
+            r_legacy = server.submit_joint(Ss, 0.4, 0.1, penalty="group").result(
+                timeout=300
+            )
+    np.testing.assert_array_equal(r_spec.Theta, r_legacy.Theta)
+    assert r_spec.penalty == r_legacy.penalty == "group"
+
+
+def test_spec_plus_positional_lam_rejected():
+    S, lam = _dense_case()
+    with GlassoServer(solver="bcd", tol=1e-8) as server:
+        with pytest.raises(TypeError, match="spec"):
+            server.submit(DenseSpec(S, lam), lam)
+        with pytest.raises(TypeError, match="output"):
+            server.submit(
+                DenseSpec(S, lam), output="dense",
+                meta=RequestMeta(output="sparse"),
+            )
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_raises_typed_overload():
+    """A full bounded queue rejects SYNCHRONOUSLY with Overload — the
+    client never receives a future that would hang out its timeout."""
+    S, lam = _dense_case()
+    reset("serve")
+    # batcher never started and fast path off: everything parks in the queue
+    server = GlassoServer(solver="bcd", tol=1e-8, fast_path=False, max_queue=2)
+    f1 = server.submit(DenseSpec(S, lam))
+    f2 = server.submit(DenseSpec(S, lam))
+    with pytest.raises(Overload) as exc:
+        server.submit(DenseSpec(S, lam))
+    assert exc.value.reason == "queue"
+    assert count("serve.rejected.queue") == 1
+    assert not f1.done() and not f2.done()
+    server.stop()  # drains both with the standard shutdown error
+    for f in (f1, f2):
+        with pytest.raises(RuntimeError, match="GlassoServer stopped"):
+            f.result(timeout=5)
+
+
+def test_tenant_quota_isolates_noisy_tenant():
+    """The noisy tenant exhausts ITS bucket; the quiet tenant (unmetered
+    default) is untouched — per-tenant isolation, not global throttling."""
+    S, lam = _dense_case()
+    reset("serve")
+    quotas = {"noisy": Quota(rate=1e-6, burst=2.0)}
+    with GlassoServer(solver="bcd", tol=1e-8, quotas=quotas) as server:
+        noisy_ok = [
+            server.submit(DenseSpec(S, lam), meta=RequestMeta(tenant="noisy"))
+            for _ in range(2)
+        ]
+        with pytest.raises(Overload) as exc:
+            server.submit(DenseSpec(S, lam), meta=RequestMeta(tenant="noisy"))
+        assert exc.value.reason == "quota" and exc.value.tenant == "noisy"
+        # the quiet tenant admits freely AFTER the noisy rejection
+        quiet = [
+            server.submit(DenseSpec(S, lam), meta=RequestMeta(tenant="quiet"))
+            for _ in range(4)
+        ]
+        for f in noisy_ok + quiet:
+            assert f.result(timeout=300).Theta is not None
+    assert count("serve.rejected.quota") == 1
+    assert count("serve.requests") == 6
+
+
+def test_expired_deadline_never_reaches_solve_batch():
+    S, lam = _dense_case()
+    reset("serve")
+    server = GlassoServer(solver="bcd", tol=1e-8, fast_path=False)
+    seen = []
+    orig = server.solve_batch
+    server.solve_batch = lambda reqs: (seen.extend(reqs), orig(reqs))[1]
+    # queued while the batcher is down; expires before it ever starts
+    fut = server.submit(
+        DenseSpec(S, lam), meta=RequestMeta(slo="batch", deadline=0.02)
+    )
+    time.sleep(0.1)
+    server.start()
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=30)
+    server.stop()
+    assert seen == []  # dropped at the drain, pre-dispatch
+    assert count("serve.rejected.deadline") == 1
+
+
+def test_result_cache_hit_skips_planner():
+    S, lam = _dense_case(seed=7)
+    reset("serve")
+    with GlassoServer(solver="bcd", tol=1e-8, result_cache=8) as server:
+        r1 = server.submit(DenseSpec(S, lam)).result(timeout=300)
+        r2 = server.submit(DenseSpec(S.copy(), lam)).result(timeout=300)
+    assert r2 is r1                       # the FINISHED result, verbatim
+    assert count("serve.cache.hits") == 1
+    assert count("serve.cache.misses") == 1
+    assert count("serve.requests") == 2   # hits still count as admissions
+
+
+def test_interactive_slo_keeps_fast_path_batch_slo_queues():
+    """Same all-closed-form request: interactive solves at admission,
+    batch-SLO always takes the queue (and the batcher)."""
+    S, lam = _dense_case()
+    lam_hi = float(np.abs(S - np.diag(np.diag(S))).max() * 1.01)  # singletons
+    reset("serve")
+    with GlassoServer(solver="bcd", tol=1e-8, max_delay=0.01) as server:
+        fi = server.submit(DenseSpec(S, lam_hi))  # default slo=interactive
+        assert fi.done()                          # solved synchronously
+        fb = server.submit(
+            DenseSpec(S, lam_hi), meta=RequestMeta(slo="batch")
+        )
+        rb = fb.result(timeout=300)
+    assert count("serve.fastpath_requests") == 1
+    np.testing.assert_array_equal(fi.result().Theta, rb.Theta)
+
+
+def test_concurrent_stop_submit_never_hangs():
+    """Hammer the shutdown race: submissions racing stop() either solve or
+    fail fast with the standard shutdown error — no future is ever left
+    parked in a drained queue."""
+    S, lam = _dense_case()
+    futures, errors = [], []
+    lock = threading.Lock()
+    server = GlassoServer(
+        solver="bcd", tol=1e-8, route=False, fast_path=False, max_delay=0.001
+    ).start()
+
+    def client(seed):
+        for _ in range(25):
+            try:
+                f = server.submit(DenseSpec(S, lam))
+                with lock:
+                    futures.append(f)
+            except Exception as e:  # pragma: no cover - no Overload expected
+                with lock:
+                    errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    server.stop()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errors
+    # every future RESOLVES within the timeout: solved, or failed cleanly
+    outcomes = {"ok": 0, "stopped": 0}
+    for f in futures:
+        try:
+            f.result(timeout=30)
+            outcomes["ok"] += 1
+        except RuntimeError as e:
+            assert "GlassoServer stopped" in str(e)
+            outcomes["stopped"] += 1
+    assert sum(outcomes.values()) == len(futures) == 100
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,104 @@
+"""EngineOptions: one typed configuration object across glasso /
+glasso_path / joint_glasso / Engine / JointEngine / GlassoServer, with the
+legacy-kwarg deprecation layer behind a single normalization chokepoint."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import glasso, glasso_path
+from repro.covariance import lambda_interval_for_k, paper_synthetic
+from repro.engine import EngineOptions, normalize_options
+from repro.joint import joint_glasso
+
+
+def _case(seed=0):
+    S = paper_synthetic(3, 8, seed=seed)
+    lam_min, lam_max = lambda_interval_for_k(S, 3)
+    return S, float(0.5 * (lam_min + lam_max))
+
+
+def test_options_equivalent_to_legacy_kwargs_bitwise():
+    S, lam = _case()
+    with pytest.warns(DeprecationWarning, match="glasso"):
+        r_legacy = glasso(S, lam, solver="bcd", route=False, tol=1e-9)
+    r_opts = glasso(
+        S, lam,
+        options=EngineOptions(
+            solver="bcd", route=False, solver_opts={"tol": 1e-9}
+        ),
+    )
+    np.testing.assert_array_equal(r_legacy.Theta, r_opts.Theta)
+    np.testing.assert_array_equal(r_legacy.labels, r_opts.labels)
+    assert r_legacy.routed == r_opts.routed
+
+
+def test_options_path_and_no_warning():
+    S, _ = _case(seed=1)
+    lam_min, lam_max = lambda_interval_for_k(S, 3)
+    lams = [0.9 * lam_max, 0.5 * (lam_min + lam_max)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        path = glasso_path(
+            S, lams, options=EngineOptions(solver_opts={"tol": 1e-8})
+        )
+    assert len(path) == 2
+    assert path[0].lam > path[1].lam
+
+
+def test_options_and_kwargs_together_rejected():
+    S, lam = _case()
+    with pytest.raises(TypeError, match="not both"):
+        glasso(S, lam, options=EngineOptions(), tol=1e-8)
+    with pytest.raises(TypeError, match="EngineOptions"):
+        glasso(S, lam, options={"solver": "bcd"})
+
+
+def test_joint_options_equivalence():
+    Ss = [np.eye(8) + 0.6 * (1 - np.eye(8)) * (0.9 ** k) for k in range(2)]
+    with pytest.warns(DeprecationWarning, match="joint_glasso"):
+        r_legacy = joint_glasso(Ss, 0.4, 0.1, penalty="group", tol=1e-8)
+    r_opts = joint_glasso(
+        Ss, 0.4, 0.1, penalty="group",
+        options=EngineOptions(solver_opts={"tol": 1e-8}),
+    )
+    np.testing.assert_array_equal(r_legacy.Theta, r_opts.Theta)
+    assert r_opts.solver == r_legacy.solver
+
+
+def test_internal_constructors_normalize_silently():
+    """Engine/JointEngine/GlassoServer accept the same legacy kwargs WITHOUT
+    warning — only the public wrappers are the deprecation surface."""
+    from repro.engine.api import Engine
+    from repro.launch.serve_glasso import GlassoServer
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        Engine(solver="bcd", tol=1e-8)
+        GlassoServer(solver="bcd", tol=1e-8, route=False)
+
+
+def test_options_validation_and_replace():
+    with pytest.raises(ValueError, match="output"):
+        EngineOptions(output="csv")
+    base = EngineOptions(solver="bcd", solver_opts={"tol": 1e-8})
+    # replace(): known fields swap, unknown keys merge into solver_opts
+    r = base.replace(route=False, max_iter=50)
+    assert r.route is False and r.solver == "bcd"
+    assert r.solver_opts == {"tol": 1e-8, "max_iter": 50}
+    assert base.solver_opts == {"tol": 1e-8}  # frozen original untouched
+    # normalize_options splits engine keys from free-form solver opts
+    opts = normalize_options(None, {"route": False, "tol": 1e-7})
+    assert opts.route is False and opts.solver_opts == {"tol": 1e-7}
+    assert normalize_options(None, {}) == EngineOptions()
+
+
+def test_unknown_solver_opt_still_rejected_downstream():
+    S, lam = _case()
+    with pytest.raises(TypeError, match="option"):
+        glasso(S, lam, options=EngineOptions(solver_opts={"bogus": 1}))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])
