@@ -1,0 +1,292 @@
+"""Model-selection benchmark: warm homotopy vs cold restarts + EBIC recovery.
+
+The ``repro.select`` acceptance bench on the p=2400 path workload
+(``structured_synthetic`` with the chordless-cycle fraction raised so most
+planted blocks are solver-bound — warm starts only matter where a solver
+actually iterates): solve the same 20-point descending grid through the
+warm-started homotopy executor, and against the true cold-restart baseline
+— one independent ``glasso(S, lam)`` call per grid point, each paying its
+own screening, planning and cold solver starts (exactly the loop
+``select_path`` replaces).  A third diagnostic arm runs the homotopy with
+``warm_start=False`` (shared single-pass plan, cold solver starts) to
+separate the planner amortization from the solver warm-start savings.
+Reported:
+
+  * min-of-``reps`` wall clock for the homotopy and cold-restart arms and
+    the warm speedup (acceptance: warm is gated FASTER than cold-restart
+    via the committed baseline, >20% regression fails CI),
+  * the warm fraction from the ``select.warm.*`` counters — reused + merged
+    over all solver-bound buckets (acceptance, asserted here: >= 0.5 of
+    non-trivial buckets solve warm),
+  * per-stage attribution totals (``GlassoResult.stages_us``) for both arms
+    — where along screen/solve/assemble the homotopy saves its time,
+  * warm == cold exactness (max |Theta| diff vs the independent solves,
+    asserted < 1e-5).
+
+Both arms run ``output="sparse"``: selection criteria are computed from
+sparse results (DESIGN.md Section 14), and a dense (p, p) assembly per grid
+point would swamp the solver signal this bench exists to measure.
+
+``smoke()`` is the CI correctness gate: EBIC on a planted block-chain
+precision recovers the true support (F1 of the selected graph within 90% of
+the best-on-path F1, best >= 0.8), and ``submit(PathSpec(...))`` through the
+serving control plane returns bitwise the same selection as the offline
+``select_path`` call.
+
+    PYTHONPATH=src python -m benchmarks.bench_select [--quick] [--smoke] \
+        [--json BENCH_select.json] [--check benchmarks/baseline_select.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _workload(K: int, p1: int, n_lambdas: int, seed: int = 1):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.covariance import structured_synthetic
+
+    # tree/chordal fractions LOWERED vs bench_routes: chordless cycles route
+    # iterative, which is where warm starts pay — the route bench measures
+    # the ladder, this bench measures homotopy reuse on the solver-bound tail
+    S = structured_synthetic(K, p1, tree_frac=0.2, chordal_frac=0.2, seed=seed)
+    lams = [float(v) for v in np.linspace(0.75, 0.32, n_lambdas)]
+    return S, lams
+
+
+def run(
+    K: int = 60, p1: int = 40, n_lambdas: int = 20, reps: int = 3, log=print
+) -> dict:
+    from repro.core import EngineOptions, glasso
+    from repro.core.instrument import reset, tail_counts
+    from repro.select import homotopy_path
+
+    S, lams = _workload(K, p1, n_lambdas)
+    p = K * p1
+    opts = EngineOptions(output="sparse", solver_opts={"tol": 1e-7})
+    log(f"select bench: p={p} ({K} planted blocks of {p1}), {len(lams)} "
+        f"lambdas in [{lams[-1]:.3f}, {lams[0]:.3f}]")
+
+    # warm the compiled caches off the clock (compile time is not the metric):
+    # a full pass per arm — each grid point's bucket shapes compile once
+    homotopy_path(S, lambdas=lams, options=opts)
+    for lam in lams:
+        glasso(S, lam, options=opts)
+
+    wall_w, wall_c = [], []
+    warm_path = cold_path = None
+    warm_counts_rep: dict = {}
+    for rep in range(reps):
+        reset("select.warm.")
+        t0 = time.perf_counter()
+        warm_path = homotopy_path(S, lambdas=lams, options=opts)
+        wall_w.append(time.perf_counter() - t0)
+        warm_counts_rep = tail_counts("select.warm.")
+        if rep < max(1, reps - 1):  # the slow arm: one fewer rep
+            t0 = time.perf_counter()
+            cold_path = [glasso(S, lam, options=opts) for lam in lams]
+            wall_c.append(time.perf_counter() - t0)
+
+    # diagnostic arm: shared single-pass plan, cold solver starts — isolates
+    # the solver warm-start savings from the planner amortization
+    t0 = time.perf_counter()
+    homotopy_path(S, lambdas=lams, options=opts, warm_start=False)
+    wall_shared_cold = time.perf_counter() - t0
+
+    # order-insensitive block compare: the homotopy's lifetime bucketing
+    # enumerates components differently than an independent solve's plan
+    worst = 0.0
+    for rw, rc in zip(warm_path, cold_path):
+        by_comp = {
+            np.asarray(c).tobytes(): blk for c, blk in rw.Theta.blocks()
+        }
+        for c, blk in rc.Theta.blocks():
+            diff = np.abs(by_comp[np.asarray(c).tobytes()] - blk).max()
+            worst = max(worst, float(diff))
+    assert worst < 1e-5, f"warm vs cold-restart diverged: {worst:.2e}"
+
+    total = sum(warm_counts_rep.values())
+    reused = warm_counts_rep.get("reused", 0) + warm_counts_rep.get("merged", 0)
+    warm_fraction = reused / total if total else 0.0
+    # the tentpole acceptance criterion: at least half of the solver-bound
+    # buckets along the grid start warm
+    assert warm_fraction >= 0.5, (
+        f"homotopy warm fraction {warm_fraction:.2f} < 0.5 "
+        f"(counters: {warm_counts_rep})"
+    )
+
+    def _stage_totals(path):
+        tot = {"screen_us": 0, "solve_us": 0, "assemble_us": 0}
+        for r in path:
+            for k, v in r.stages_us.items():
+                tot[k] += v
+        return tot
+
+    rec = {
+        "p": p,
+        "planted_blocks": K,
+        "block_size": p1,
+        "n_lambdas": len(lams),
+        "reps": reps,
+        "wall_warm_s": round(min(wall_w), 3),
+        "wall_cold_s": round(min(wall_c), 3),
+        "wall_shared_plan_cold_s": round(wall_shared_cold, 3),
+        "warm_speedup": round(min(wall_c) / max(min(wall_w), 1e-9), 3),
+        "warm_fraction": round(warm_fraction, 4),
+        "warm_counts": warm_counts_rep,
+        "stages_warm_us": _stage_totals(warm_path),
+        "stages_cold_us": _stage_totals(cold_path),
+        "max_theta_diff": worst,
+    }
+    log(f"select bench: warm homotopy {rec['wall_warm_s']}s vs cold-restart "
+        f"{rec['wall_cold_s']}s -> {rec['warm_speedup']}x (shared-plan cold "
+        f"{rec['wall_shared_plan_cold_s']}s), warm fraction "
+        f"{warm_fraction:.3f} ({warm_counts_rep}), solve stage "
+        f"{rec['stages_warm_us']['solve_us']}us vs "
+        f"{rec['stages_cold_us']['solve_us']}us")
+    return rec
+
+
+def _planted_chain(K: int = 6, b: int = 10, n: int = 400, seed: int = 7):
+    """Block-diagonal chain precision: K blocks of b, tridiagonal with
+    alternating-sign 0.6 couplings — every true edge is comfortably above
+    the noise floor at n rows, so EBIC has a clean support to find."""
+    rng = np.random.default_rng(seed)
+    p = K * b
+    Theta0 = np.zeros((p, p))
+    for k in range(K):
+        i0 = k * b
+        blk = np.eye(b) * 2.0
+        for i in range(b - 1):
+            blk[i, i + 1] = blk[i + 1, i] = 0.6 * (1 if (i + k) % 2 == 0 else -1)
+        Theta0[i0:i0 + b, i0:i0 + b] = blk
+    L = np.linalg.cholesky(np.linalg.inv(Theta0))
+    return Theta0, rng.standard_normal((n, p)) @ L.T
+
+
+def smoke() -> None:
+    """CI correctness gate: EBIC planted-support recovery + served == offline."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import EngineOptions
+    from repro.launch.control_plane import PathSpec
+    from repro.launch.serve_glasso import GlassoServer
+    from repro.select import select_path
+
+    # -- EBIC recovers a planted chain support --------------------------
+    Theta0, X = _planted_chain()
+    sel = select_path(X=X, grid={"auto": 10}, criterion="ebic", gamma=1.0)
+    true_edges = set(map(tuple, np.argwhere(np.triu(np.abs(Theta0) > 1e-12, 1))))
+
+    def f1(r):
+        est = set(map(tuple, r.support_edges()))
+        tp = len(est & true_edges)
+        prec = tp / max(len(est), 1)
+        rec = tp / len(true_edges)
+        return 2 * prec * rec / max(prec + rec, 1e-12)
+
+    f1s = [f1(r) for r in sel.path]
+    best = max(f1s)
+    picked = f1s[sel.report.selected_index]
+    assert best >= 0.8, f"no grid point recovers the planted support: {f1s}"
+    assert picked >= 0.9 * best, (
+        f"EBIC picked F1={picked:.3f}, best on path {best:.3f}"
+    )
+    print(f"smoke: EBIC planted-support F1={picked:.3f} "
+          f"(best on path {best:.3f}, selected lam="
+          f"{sel.report.selected_lam:.4f})")
+
+    # -- submit(PathSpec) is bitwise the offline select_path ------------
+    rng = np.random.default_rng(3)
+    p = 24
+    A = rng.standard_normal((p, p)) * (rng.random((p, p)) < 0.15)
+    S = A @ A.T / p + np.eye(p)
+    grid = [0.6, 0.4, 0.25]
+    opts = EngineOptions(output="sparse", solver_opts={"tol": 1e-8})
+    offline = select_path(S, grid=grid, criterion="ebic", n=150, options=opts)
+    with GlassoServer(options=opts) as server:
+        served = server.submit(
+            PathSpec(S=S, grid=grid, criterion="ebic", n=150)
+        ).result(timeout=300)
+    assert served.report.scores == offline.report.scores
+    assert served.report.selected_index == offline.report.selected_index
+    for (ca, ba), (cb, bb) in zip(
+        served.result.Theta.blocks(), offline.result.Theta.blocks()
+    ):
+        assert np.array_equal(ca, cb) and np.array_equal(ba, bb)
+    assert np.array_equal(
+        served.result.support_edges(), offline.result.support_edges()
+    )
+    print("smoke: submit(PathSpec) == offline select_path (bitwise)")
+
+
+def check(rec: dict, baseline_path: str, log=print) -> int:
+    """CI regression gate: >20% warm-speedup regression, warm fraction below
+    the 0.5 acceptance floor (or below baseline - 20%), or a warm class that
+    the baseline exercised going dead."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    min_speedup = base["warm_speedup"] / 1.2
+    if rec["warm_speedup"] < min_speedup:
+        failures.append(
+            f"warm speedup {rec['warm_speedup']} < {min_speedup:.2f} "
+            f"(baseline {base['warm_speedup']} - 20%)"
+        )
+    if rec["warm_speedup"] < 1.0:
+        failures.append(
+            f"warm homotopy slower than cold restarts "
+            f"({rec['warm_speedup']}x)"
+        )
+    floor = max(0.5, base["warm_fraction"] / 1.2)
+    if rec["warm_fraction"] < floor:
+        failures.append(
+            f"warm fraction {rec['warm_fraction']} < {floor:.2f} "
+            f"(acceptance floor / baseline {base['warm_fraction']} - 20%)"
+        )
+    for cls in ("reused", "merged"):
+        # only classes the baseline exercised SOLIDLY (>2 buckets) gate —
+        # a class the workload barely grazes is plan-perturbation noise
+        if rec["warm_counts"].get(cls, 0) == 0 and base["warm_counts"].get(cls, 0) > 2:
+            failures.append(f"warm class {cls!r} was never taken")
+    for msg in failures:
+        log(f"REGRESSION: {msg}")
+    if not failures:
+        log(f"select bench within baseline ({baseline_path})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="p=640 smoke variant")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI correctness gate (EBIC recovery + served==offline)")
+    ap.add_argument("--json", default=None, help="write the record to FILE")
+    ap.add_argument("--check", default=None, help="baseline JSON to gate against")
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
+    if args.quick:
+        rec = run(K=20, p1=32, n_lambdas=10, reps=2)
+    else:
+        rec = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        sys.exit(check(rec, args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -103,6 +103,12 @@ def smoke() -> None:
     from benchmarks import bench_serve
 
     bench_serve.smoke()
+
+    # model selection: EBIC recovers a planted chain's support on a small
+    # grid, and submit(PathSpec) is bitwise-equal to offline select_path
+    from benchmarks import bench_select
+
+    bench_select.smoke()
     print("smoke: OK")
 
 
@@ -157,6 +163,16 @@ def main() -> None:
                                           n=100 if args.quick else 80)
     rows.append((f"planner/p{plan_rec['p']}", plan_rec["incremental_s"] * 1e6,
                  f"speedup={plan_rec['speedup']}"))
+
+    print("=" * 72)
+    print("Model selection: warm homotopy path vs per-lambda cold restarts")
+    print("=" * 72)
+    from benchmarks import bench_select
+
+    sel_rec = (bench_select.run(K=20, p1=32, n_lambdas=10, reps=2)
+               if args.quick else bench_select.run())
+    rows.append((f"select/p{sel_rec['p']}", sel_rec["wall_warm_s"] * 1e6,
+                 f"warm_speedup={sel_rec['warm_speedup']}"))
 
     print("=" * 72)
     print("Figure 1 analog: component-size profile across lambda")

@@ -138,6 +138,8 @@ def glasso_path(
     if S is None or lambdas is None:
         raise ValueError("glasso_path needs (S, lambdas) — or X=/from_data=True")
     if not screen:
-        lams = sorted((float(v) for v in np.asarray(list(lambdas)).ravel()), reverse=True)
+        from repro.select.grid import normalize_lambda_grid  # lazy: avoid cycle
+
+        lams = normalize_lambda_grid(lambdas)
         return [engine.run(S, lam, screen=False, p_max=p_max) for lam in lams]
     return engine.run_path(S, lambdas, warm_start=warm_start, p_max=p_max)

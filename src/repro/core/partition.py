@@ -21,12 +21,21 @@ import numpy as np
 from repro.core.instrument import bump
 
 
-def _sorted_edges(S: np.ndarray):
-    """Upper-triangle edges of |S| sorted by decreasing weight."""
+def _sorted_edges(S: np.ndarray, *, lam_min: float | None = None):
+    """Upper-triangle edges of |S| sorted by decreasing weight.
+
+    ``lam_min`` drops edges with |S_ij| <= lam_min BEFORE the sort: a path
+    planner whose grid is bounded below by lam_min never inserts them (strict
+    threshold, eq. (4)), and on sparse problems the argsort shrinks from
+    p^2/2 entries to the surviving-edge count — the difference between the
+    planner being cheaper or dearer than per-lambda re-screens."""
     S = np.asarray(S)
     p = S.shape[0]
     iu, ju = np.triu_indices(p, 1)
     w = np.abs(S[iu, ju])
+    if lam_min is not None:
+        keep = w > lam_min
+        iu, ju, w = iu[keep], ju[keep], w[keep]
     order = np.argsort(-w, kind="stable")
     return iu[order], ju[order], w[order]
 

@@ -12,7 +12,8 @@ so same-size component buckets batch onto the MXU:
              paper-faithful baseline.  Row/column sweeps with an inner cyclic
              coordinate-descent lasso; includes the eq.-(10) node-screening
              check the paper points out GLASSO 1.4 was missing.  Consumes a
-             W0 covariance warm start.
+             W0 covariance warm start plus a Theta0 seed for the inner-lasso
+             coefficients (path reuse: beta_j = -Theta0[:, j] / Theta0[j, j]).
 ``pg``       G-ISTA-style proximal gradient — the first-order stand-in for
              SMACS [Lu 2010] (same O(p^3)-per-iteration complexity class;
              DESIGN.md Section 3 records the adaptation).  Warm-starts from
@@ -55,6 +56,9 @@ register_solver(
         batched=True,
         warm_startable=True,
         description="GLASSO block coordinate descent (paper baseline)",
+        # consumes the Theta-side seed alongside W0: Theta0 seeds the inner
+        # lasso coefficients (B), which is where the sweep time actually goes
+        meta={"theta_warm": True},
     )
 )
 register_solver(

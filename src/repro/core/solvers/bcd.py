@@ -86,11 +86,16 @@ def glasso_bcd(
     tol: float = 1e-6,
     node_screen: bool = True,
     W0: jax.Array | None = None,
+    Theta0: jax.Array | None = None,
 ) -> jax.Array:
     """Solve the graphical lasso on one (b, b) block. Returns Theta.
 
     W0 warm-starts the covariance iterate (lambda-path reuse, Theorem 2);
-    default is the cold start W = S + lam*I.
+    default is the cold start W = S + lam*I.  Theta0 additionally seeds the
+    inner-lasso coefficients: column j of (9) relates to the precision column
+    via theta_12 = -beta * theta_22, so beta_j = -Theta0[:, j] / Theta0[j, j]
+    (diagonal pinned to 0).  Without it every column's coordinate descent —
+    the dominant cost — restarts from beta = 0 no matter how good W0 is.
     """
     b = S.shape[0]
     dtype = S.dtype
@@ -99,7 +104,12 @@ def glasso_bcd(
     W_init = (S + lam * eye) if W0 is None else W0
     # Diagonal KKT is exact at the solution; enforce from the start.
     W_init = jnp.where(jnp.eye(b, dtype=bool), jnp.diag(S) + lam, W_init)
-    B_init = jnp.zeros((b, b), dtype)
+    if Theta0 is None:
+        B_init = jnp.zeros((b, b), dtype)
+    else:
+        d = jnp.diagonal(Theta0)
+        d = jnp.where(d > 0, d, jnp.ones((), dtype))  # PD => d > 0; belt+braces
+        B_init = jnp.where(jnp.eye(b, dtype=bool), 0.0, -(Theta0 / d[None, :]))
     scale = jnp.mean(jnp.abs(S - jnp.diag(jnp.diag(S)))) + jnp.asarray(1e-12, dtype)
 
     cd_tol = jnp.asarray(tol, dtype) * scale

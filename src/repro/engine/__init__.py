@@ -33,6 +33,7 @@ from repro.engine.planner import (
     PathStep,
     bucket_key,
     build_plan_incremental,
+    component_lifetimes,
     plan_path,
 )
 from repro.engine.executor import (
@@ -59,6 +60,7 @@ __all__ = [
     "solver_spec",
     "bucket_key",
     "build_plan_incremental",
+    "component_lifetimes",
     "classify_component",
     "compiled_bucket_solver",
     "compiled_cache_stats",

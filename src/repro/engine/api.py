@@ -59,6 +59,19 @@ class GlassoResult:
         return float(self.screen.seconds) if self.screen is not None else 0.0
 
     @property
+    def stages_us(self) -> dict[str, int]:
+        """Per-result stage attribution in microseconds — the same values
+        this result bumped into the process-wide ``engine.screen_us`` /
+        ``engine.solve_us`` / ``engine.assemble_us`` counters, kept on the
+        result so path consumers (``repro.select``, bench_select) can
+        report where homotopy saves time per grid point."""
+        return {
+            "screen_us": int(self.screen_seconds * 1e6),
+            "solve_us": int(self.solve_seconds * 1e6),
+            "assemble_us": int(self.assemble_seconds * 1e6),
+        }
+
+    @property
     def support(self) -> np.ndarray:
         """Estimated concentration-graph adjacency (eq. (2)).
 
@@ -389,7 +402,7 @@ class Engine:
             schedule_mod.check_capacity(
                 [len(c) for b in step.plan.buckets for c in b.comps] or [1], p_max
             )
-            warm_W = None
+            warm_W = warm_Theta = None
             if warm_start and prev is not None and self.warm_capable:
                 # warm starts only matter for iterative-routed buckets; a
                 # closed-form/chordal block is solved directly regardless
@@ -403,19 +416,42 @@ class Engine:
                     )
                 ]
                 if fresh:
-                    # dense warm start only for merged buckets: blockwise
-                    # inverse of the previous Theta over its old components
-                    needed = np.zeros(S.shape[0], dtype=bool)
-                    for b in fresh:
-                        for c in b.comps:
-                            needed[c] = True
-                    warm_W = blockwise_inverse(prev.labels, prev.Theta, needed)
+                    # the previous Theta rides along untouched: merged
+                    # buckets gather their block-diagonal restriction from
+                    # it (cross-component entries are exact zeros) and the
+                    # executor inverts the gathered stacks batched on device
+                    # — no dense (p, p) W is ever built on the host.
+                    # theta_warm solvers additionally seed their inner
+                    # iterates from the same stack.
+                    warm_Theta = prev.Theta
+            # selection-layer warm accounting (select.warm.*): one count per
+            # solver-bound bucket — iterative/sharded routes only; closed-
+            # form and chordal blocks are solved directly either way.
+            # "reused" = the bucket resumes from its own previous padded
+            # solution, "merged" = a fresh iterative bucket starting from
+            # the merged-component blockwise inverse, "cold" = no warm
+            # source (first grid point, warm_start=False, a solver outside
+            # WARM_START_SOLVERS, or a fresh sharded block).
+            warmable = warm_start and prev is not None and self.warm_capable
+            for b in step.plan.buckets:
+                route = (
+                    route_for(b.structure) if self.executor.route else "iterative"
+                )
+                if route not in ("iterative", "sharded"):
+                    continue
+                if warmable and step.is_reused(b):
+                    bump("select.warm.reused")
+                elif warmable and route == "iterative":
+                    bump("select.warm.merged")
+                else:
+                    bump("select.warm.cold")
             t0 = time.perf_counter()
             Theta = self.executor.solve_plan(
                 step.plan,
                 step.lam,
                 S,
                 warm_W=warm_W,
+                warm_Theta=warm_Theta,
                 reused_keys=step.reused_keys if warm_start else frozenset(),
                 keep_solutions=warm_start,
                 output=out_mode,

@@ -451,7 +451,12 @@ class BucketExecutor:
     # -- warm starts -------------------------------------------------------
 
     def _warm_stack(
-        self, bucket: blocks_mod.Bucket, key, lam: float, warm_W: np.ndarray | None
+        self,
+        bucket: blocks_mod.Bucket,
+        key,
+        lam: float,
+        warm_W: np.ndarray | None,
+        warm_Theta: np.ndarray | None = None,
     ):
         """(W0 stack, Theta0 stack or None) for one bucket, or (None, None).
 
@@ -460,24 +465,44 @@ class BucketExecutor:
         inverse's padded diagonal is finite; it is then reset to 1+lam), and
         the previous Theta itself rides along as the Theta0 seed for solvers
         whose spec consumes it (no second inversion inside the solver).
-        Otherwise fall back to gathering from the dense warm_W (merged
-        components: block-diagonal of the old sub-components, valid PD warm
-        start by Theorem 2) — no Theta stack there."""
+        Merged/fresh buckets prefer ``warm_Theta`` (the previous solution
+        itself, dense or block-sparse — its cross-component entries are exact
+        zeros, so each gathered restriction is the Theorem-2 block-diagonal
+        PD warm start): the Theta stack is gathered once and W0 = inv(T0) is
+        computed batched on device, so no dense (p, p) W ever exists on the
+        host.  ``warm_W`` remains the fallback for callers that hold a W
+        iterate but no Theta (the single-solve ``warm_W=`` API) — no Theta
+        stack there."""
         T0 = None
         prev = self._prev_solutions.get(key)
+        np_dtype = np.dtype(jnp.dtype(self.dtype).name)
         if prev is not None:
             prev = jnp.asarray(prev, self.dtype)
             W0 = jnp.linalg.inv(prev)
             T0 = prev
+        elif warm_Theta is not None:
+            tstacks = [
+                blocks_mod.pad_block(
+                    blocks_mod.gather_submatrix(warm_Theta, c, dtype=np_dtype),
+                    bucket.size,
+                )
+                for c in bucket.comps
+            ]
+            T0 = jnp.asarray(np.stack(tstacks), self.dtype)
+            # padded T0 diagonal is the identity (pad_block), so the batched
+            # inverse is finite; the padded W diagonal is reset below anyway
+            W0 = jnp.linalg.inv(T0)
         elif warm_W is not None:
             # gather through the protocol: warm_W may be a dense array or a
             # block-sparse previous result (whose cross-component entries
             # are exact zeros — the merged-component block-diagonal restriction)
-            np_dtype = np.dtype(jnp.dtype(self.dtype).name)
-            stacks = []
-            for c in bucket.comps:
-                blk = blocks_mod.gather_submatrix(warm_W, c, dtype=np_dtype)
-                stacks.append(blocks_mod.pad_block(blk, bucket.size))
+            stacks = [
+                blocks_mod.pad_block(
+                    blocks_mod.gather_submatrix(warm_W, c, dtype=np_dtype),
+                    bucket.size,
+                )
+                for c in bucket.comps
+            ]
             W0 = jnp.asarray(np.stack(stacks), self.dtype)
         else:
             return None, None
@@ -501,6 +526,7 @@ class BucketExecutor:
         S: np.ndarray,
         *,
         warm_W: np.ndarray | None = None,
+        warm_Theta: np.ndarray | None = None,
         reused_keys: frozenset = frozenset(),
         keep_solutions: bool = False,
         output: str = "dense",
@@ -589,7 +615,9 @@ class BucketExecutor:
                 continue
             if self.solver in WARM_START_SOLVERS:
                 use_key = key if key in reused_keys else None
-                W0, T0 = self._warm_stack(bucket, use_key, lam, warm_W)
+                W0, T0 = self._warm_stack(
+                    bucket, use_key, lam, warm_W, warm_Theta
+                )
             else:
                 W0 = T0 = None  # solver discards W0: skip the inversions
             if not (T0 is not None and _theta_warm(self.solver)):

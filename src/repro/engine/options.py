@@ -24,6 +24,15 @@ Field split (what belongs here vs. a call site):
 * **call kwargs** — what is being SOLVED: ``S``/``X``/``lam``/``lambdas``,
   ``screen=False`` baselines, ``p_max``, ``warm_W``/``warm_start``,
   ``penalty``, serving ``session``.  These are not deprecated.
+
+Model-selection knobs (the lambda grid, the criterion and its parameters)
+are neither: they describe a QUESTION about the path, not how solves run,
+and travel on ``repro.select.select_path(...)`` arguments — or, over the
+serving surface, on ``launch.control_plane.PathSpec`` — always alongside
+an ``EngineOptions`` that configures the underlying solves.  One
+``EngineOptions`` therefore serves every grid point of a selection path
+unchanged (which is what lets the homotopy executor reuse compiled
+solvers and warm starts across the whole grid).
 """
 
 from __future__ import annotations

@@ -9,6 +9,17 @@ whose (padded size, member components) signature is unchanged keeps its padded
 block stack (no re-gather / re-pad) and is marked reusable so the executor can
 also recycle its previous solution as a warm start.
 
+Because the whole grid is planned upfront, the planner also knows each
+component's LIFETIME — the first and last step at which it exists (Theorem
+2: merges only, so lifetimes are intervals).  Buckets group components by
+(padded size, structure, lifetime): all members of a bucket appear and
+merge together, so a bucket's membership never changes during its life and
+it is reused — stack, device residency, warm-start solution — at every
+step it survives.  Without the lifetime split, one merge (or one newly
+completed component joining) anywhere in a size class evicted the whole
+bucket and forced every co-bucketed component back through the host gather
+path.
+
 Each component is also CLASSIFIED (``engine.structure``) so buckets are
 homogeneous in (padded size, structure class) and the executor can route a
 whole bucket down one rung of the solver ladder.  Structure is part of the
@@ -104,6 +115,20 @@ def _classifier(S, lam: float, oversize: int | None):
     return classify
 
 
+def component_lifetimes(labels_list) -> dict:
+    """Map component membership (``tobytes`` of its sorted vertex array) to
+    its (birth step, death step) over a descending-lambda sequence of label
+    snapshots.  Nested partitions (Theorem 2) mean a component exists on one
+    consecutive run of steps and then merges; one forward pass recording the
+    first and last sighting is exact."""
+    life: dict = {}
+    for t, labels in enumerate(labels_list):
+        for c in component_lists(labels):
+            b = c.tobytes()
+            life[b] = (life[b][0], t) if b in life else (t, t)
+    return life
+
+
 def build_plan_incremental(
     S: np.ndarray,
     lam: float,
@@ -113,8 +138,16 @@ def build_plan_incremental(
     dtype=np.float64,
     classify_structures: bool = True,
     oversize: int | None = None,
+    lifetime_of: dict | None = None,
 ) -> tuple[blocks_mod.Plan, frozenset]:
     """``blocks.build_plan`` with bucket reuse against a previous plan.
+
+    ``lifetime_of`` (``component_lifetimes`` of the full grid) splits each
+    (size, structure) group by member (birth, death) interval: every member
+    of a bucket appears and merges at the same steps, so bucket membership
+    is static for the bucket's whole life and reuse holds at every step of
+    it — the path planners pass this; single-solve callers don't and get
+    the plain grouping.
 
     ``classify_structures=False`` skips structure classification and tags
     every bucket "general" — the PR-1 plan shape.  Required when routing is
@@ -138,23 +171,37 @@ def build_plan_incremental(
     )
     buckets, reused = [], set()
     for (size, structure), members in by_key.items():
-        key = (
-            size,
-            structure,
-            tuple(np.asarray(c).tobytes() for c in members),
-        )
-        hit = prev_by_key.get(key)
-        if hit is not None:
-            buckets.append(hit)
-            reused.add(key)
-            bump("planner.buckets_reused")
+        if lifetime_of is None:
+            groups = [members]
         else:
-            buckets.append(
-                blocks_mod.make_bucket(
-                    S, size, members, dtype=dtype, structure=structure
-                )
+            by_life: dict = {}
+            for c in members:
+                by_life.setdefault(lifetime_of[np.asarray(c).tobytes()], []).append(c)
+            # order members by first vertex: canonical component labels are
+            # renumbered after every merge, so label order would shuffle a
+            # surviving bucket's membership tuple and break its reuse key
+            groups = [
+                sorted(by_life[d], key=lambda c: int(np.asarray(c)[0]))
+                for d in sorted(by_life)
+            ]
+        for mem in groups:
+            key = (
+                size,
+                structure,
+                tuple(np.asarray(c).tobytes() for c in mem),
             )
-            bump("planner.buckets_padded")
+            hit = prev_by_key.get(key)
+            if hit is not None:
+                buckets.append(hit)
+                reused.add(key)
+                bump("planner.buckets_reused")
+            else:
+                buckets.append(
+                    blocks_mod.make_bucket(
+                        S, size, mem, dtype=dtype, structure=structure
+                    )
+                )
+                bump("planner.buckets_padded")
     plan = blocks_mod.Plan(
         p=S.shape[0],
         lam=float(lam),
@@ -177,15 +224,22 @@ def plan_path(
     """Plan a whole descending-lambda path with one partition pass.
 
     Every requested lambda gets a PathStep whose ScreenStats are derived from
-    the snapshot (no per-lambda thresholding or union-find)."""
+    the snapshot (no per-lambda thresholding or union-find).  The grid is
+    canonicalized through THE shared chokepoint (``select.grid``): sorted
+    descending, deduped, non-positive values rejected."""
+    from repro.select.grid import normalize_lambda_grid  # lazy: select imports engine
+
     S = np.asarray(S)
-    lams = sorted((float(v) for v in np.asarray(list(lambdas)).ravel()), reverse=True)
+    lams = normalize_lambda_grid(lambdas)
     t0 = time.perf_counter()
-    edges = _sorted_edges(S)  # shared by the snapshot pass and edge counting
+    # shared by the snapshot pass and edge counting; the grid's smallest
+    # lambda bounds every insertion, so sub-threshold edges never sort
+    edges = _sorted_edges(S, lam_min=lams[-1])
     labels_list = labels_at_thresholds(S, lams, edges=edges)
     sorted_w = edges[2]
     snap_seconds = (time.perf_counter() - t0) / max(len(lams), 1)
 
+    life = component_lifetimes(labels_list)
     path = PathPlan(p=S.shape[0], lambdas=lams)
     prev_plan = None
     for lam, labels in zip(lams, labels_list):
@@ -193,6 +247,7 @@ def plan_path(
         plan, reused = build_plan_incremental(
             S, lam, labels, prev=prev_plan, dtype=dtype,
             classify_structures=classify_structures, oversize=oversize,
+            lifetime_of=life,
         )
         stats = _screen_stats(
             labels, lam, sorted_w, snap_seconds + (time.perf_counter() - t1)

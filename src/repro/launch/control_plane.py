@@ -8,6 +8,9 @@ redesign's vocabulary.  WHAT to solve travels as one typed spec —
     DenseSpec(S, lam)                  covariance admission
     DataSpec(X, lam, session=...)      out-of-core data-matrix admission
     JointSpec(Ss=[...], lam1, lam2)    K-class joint admission (or Xs=)
+    PathSpec(S|X, grid, criterion)     model selection over a lambda path
+                                       (grid = sequence | {"auto": n};
+                                       criterion = "ebic" | "cv" | "stars")
 
 — and HOW to treat the request travels as ``RequestMeta``:
 
@@ -49,6 +52,8 @@ __all__ = [
     "DenseSpec",
     "JointSpec",
     "Overload",
+    "PATH_CRITERIA",
+    "PathSpec",
     "Quota",
     "RequestMeta",
     "ResultCache",
@@ -152,7 +157,58 @@ class JointSpec:
         return int(np.asarray(self.Xs[0]).shape[1])
 
 
-SolveSpec = DenseSpec | DataSpec | JointSpec
+#: Criteria a ``PathSpec`` may name — mirrors ``repro.select.CRITERIA``
+#: (kept literal here so the control plane stays engine-import-free).
+PATH_CRITERIA = ("ebic", "cv", "stars")
+
+
+@dataclass(frozen=True)
+class PathSpec:
+    """A model-selection request: solve a descending lambda path (warm
+    homotopy, ``repro.select``) and return the criterion-selected graph
+    plus per-lambda diagnostics (a ``select.Selection``).
+
+    ``grid`` is an explicit sequence of lambdas, ``{"auto": n_points}`` or
+    a bare int (auto grid anchored at lambda_max), or None (auto, 20
+    points).  ``criterion`` is one of ``PATH_CRITERIA``; "cv" and "stars"
+    resample rows and therefore require the data-matrix form (``X=``).
+    ``n`` is the sample count EBIC needs when only the covariance ``S`` is
+    given; ``criterion_opts`` forwards criterion knobs (cv ``k``, stars
+    ``n_subsamples``/``beta``, ...).  Path requests default to the "batch"
+    SLO at admission — a whole grid of solves should not jump interactive
+    co-travellers — and never take the admission fast path."""
+
+    S: object = None
+    X: object = None
+    grid: object = None
+    criterion: str = "ebic"
+    n: int | None = None
+    gamma: float = 0.5
+    criterion_opts: object = None
+    stream: object = None
+
+    def __post_init__(self):
+        if (self.S is None) == (self.X is None):
+            raise ValueError("PathSpec needs exactly one of S or X")
+        if self.criterion not in PATH_CRITERIA:
+            raise ValueError(
+                f"criterion must be one of {PATH_CRITERIA}, "
+                f"got {self.criterion!r}"
+            )
+        if self.criterion in ("cv", "stars") and self.X is None:
+            raise ValueError(
+                f"criterion {self.criterion!r} resamples rows and needs "
+                "the data-matrix form (X=)"
+            )
+
+    @property
+    def p(self) -> int:
+        if self.S is not None:
+            return int(np.asarray(self.S).shape[0])
+        return int(np.asarray(self.X).shape[1])
+
+
+SolveSpec = DenseSpec | DataSpec | JointSpec | PathSpec
 
 
 # ---------------------------------------------------------------------------
@@ -310,10 +366,63 @@ def fingerprint_array(A) -> str:
     return h.hexdigest()
 
 
+def _grid_key(grid) -> tuple | None:
+    """Hashable form of a PathSpec grid — None = uncacheable spelling.
+    Distinct spellings of the same auto grid (None vs {"auto": 20}) key
+    differently; that only costs a cache miss, never a wrong hit."""
+    if grid is None:
+        return ("auto", None)
+    if isinstance(grid, (int, np.integer)):
+        return ("auto", int(grid))
+    if isinstance(grid, dict):
+        if set(grid) != {"auto"}:
+            return None
+        return ("auto", int(grid["auto"]))
+    try:
+        return ("grid",) + tuple(
+            float(v) for v in np.asarray(list(grid), dtype=float).ravel()
+        )
+    except (TypeError, ValueError):
+        return None
+
+
+def _opts_key(opts) -> tuple | None:
+    """Hashable form of criterion_opts — None = uncacheable (non-primitive
+    values)."""
+    if opts is None:
+        return ()
+    try:
+        items = tuple(sorted((str(k), v) for k, v in dict(opts).items()))
+        hash(items)
+        return items
+    except (TypeError, ValueError):
+        return None
+
+
 def spec_cache_key(spec, output: str) -> tuple | None:
     """Hashable cache key for a spec + resolved output — or None when the
     request is uncacheable (named sessions mutate; custom stream configs
-    may reorder float accumulation, so only the default tiling caches)."""
+    may reorder float accumulation, so only the default tiling caches).
+    Path requests key on (payload fingerprint, grid, criterion + its
+    parameters, output)."""
+    if isinstance(spec, PathSpec):
+        if spec.stream is not None:
+            return None
+        gk = _grid_key(spec.grid)
+        ok = _opts_key(spec.criterion_opts)
+        if gk is None or ok is None:
+            return None
+        payload = spec.S if spec.S is not None else spec.X
+        return (
+            "path" if spec.S is not None else "path_data",
+            fingerprint_array(payload),
+            gk,
+            spec.criterion,
+            None if spec.n is None else int(spec.n),
+            float(spec.gamma),
+            ok,
+            output,
+        )
     if isinstance(spec, DenseSpec):
         return ("dense", fingerprint_array(spec.S), float(spec.lam), output)
     if isinstance(spec, DataSpec):

@@ -52,6 +52,19 @@ merge/split, and the fresh solve warm-starts from the session's previous
 solution (untouched components start essentially converged — the serving
 analog of the path warm start).
 
+PATH ADMISSION (``PathSpec``) turns the server into a model-selection
+service: ``submit(PathSpec(S=S, grid={"auto": 20}, criterion="ebic",
+n=...))`` (or ``X=`` for the out-of-core form, required by the resampling
+criteria "cv"/"stars") runs the warm-started homotopy path over the whole
+descending grid on the batcher thread via ``repro.select.select_path`` —
+LITERALLY that function, so the served ``Selection`` (selected graph +
+per-lambda diagnostics + warm-start accounting) is bitwise identical to
+the offline call on the same inputs.  Path requests default to the
+"batch" SLO (a grid of solves should not jump interactive co-travellers;
+an explicit ``RequestMeta(slo="interactive")`` overrides), never take the
+admission fast path, and cache by (payload fingerprint, grid, criterion +
+parameters, output) like every other cacheable kind.
+
 JOINT ADMISSION (``JointSpec``) accepts K class covariances (or K data
 matrices via ``Xs=``) estimated jointly under the fused/group penalty
 (``repro.joint``): the exact hybrid thresholding screen and the joint plan
@@ -103,6 +116,17 @@ COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
     joint.fallbacks              sum   joint verifications re-dispatched
     joint.candidate_pairs        sum   streamed pairs completed for the rule
     joint.edges                  sum   union-graph edges retained
+    serve.path_requests          sum   PathSpec admissions (selection grids)
+    select.warm.reused           sum   path buckets resuming their own
+                                       previous padded solutions
+    select.warm.merged           sum   path buckets warm-started from the
+                                       merged-component blockwise inverse
+    select.warm.cold             sum   path buckets solved with no warm
+                                       source
+    select.grid.tiles_scanned    sum   tile pairs computed for lambda_max
+    select.grid.tiles_pruned     sum   tile pairs bound-pruned from it
+    select.stars.subsamples      sum   StARS subsample paths run
+    select.cv.folds              sum   CV fold paths run
     engine.screen_us             sum   screening wall time (microseconds)
     engine.solve_us              sum   dispatch+verify wall time (us)
     engine.assemble_us           sum   result-assembly wall time (us)
@@ -149,6 +173,7 @@ from repro.launch.control_plane import (
     DenseSpec,
     JointSpec,
     Overload,
+    PathSpec,
     RequestMeta,
     ResultCache,
     TenantBuckets,
@@ -200,6 +225,24 @@ class JointRequest:
     output: str = "dense"
     tenant: str = "default"
     slo: str = "interactive"
+    deadline_at: float | None = None
+
+
+@dataclass
+class PathRequest:
+    """A model-selection request (``PathSpec``): the whole homotopy grid +
+    criterion resolve on the batcher thread via ``repro.select.
+    select_path`` — literally that function, so a served selection is
+    bitwise identical to the offline call on the same inputs/options.
+    Rides the same queue, deadline expiry, and shutdown drain as every
+    other request kind; never takes the admission fast path (a grid of
+    solves is not microseconds-cheap) and defaults to the "batch" SLO."""
+
+    spec: PathSpec
+    future: Future = field(default_factory=Future)
+    output: str = "dense"
+    tenant: str = "default"
+    slo: str = "batch"
     deadline_at: float | None = None
 
 
@@ -387,9 +430,20 @@ class GlassoServer:
         return resolve_output(self.output if output is None else output, p)
 
     @staticmethod
-    def _fold_output(meta: RequestMeta | None, output: str | None) -> RequestMeta:
-        """Merge the legacy per-call ``output=`` kwarg into the meta."""
-        meta = meta if meta is not None else RequestMeta()
+    def _fold_output(
+        meta: RequestMeta | None, output: str | None, *, spec=None
+    ) -> RequestMeta:
+        """Merge the legacy per-call ``output=`` kwarg into the meta.
+
+        When the caller supplied no meta at all, the default SLO is spec-
+        aware: path requests (``PathSpec``) admit as "batch" — a whole grid
+        of solves should not jump interactive co-travellers — while every
+        other kind keeps the historical "interactive" default.  An explicit
+        ``RequestMeta(slo=...)`` always wins."""
+        if meta is None:
+            meta = RequestMeta(
+                slo="batch" if isinstance(spec, PathSpec) else "interactive"
+            )
         if output is None:
             return meta
         if meta.output is not None:
@@ -418,7 +472,7 @@ class GlassoServer:
         The historical form ``submit(S, lam)`` still works as a deprecated
         shim (one ``DeprecationWarning``) and is equivalent to
         ``submit(DenseSpec(S, lam))``."""
-        if not isinstance(spec, (DenseSpec, DataSpec, JointSpec)):
+        if not isinstance(spec, (DenseSpec, DataSpec, JointSpec, PathSpec)):
             warnings.warn(
                 _LEGACY_VERB_MSG.format(
                     verb="submit(S, lam)", spec="DenseSpec(S, lam)"
@@ -433,7 +487,7 @@ class GlassoServer:
             raise TypeError(
                 "submit(spec) takes no positional lam — it lives on the spec"
             )
-        return self._submit(spec, self._fold_output(meta, output))
+        return self._submit(spec, self._fold_output(meta, output, spec=spec))
 
     def submit_data(
         self,
@@ -526,6 +580,8 @@ class GlassoServer:
             return self._admit_dense(spec, meta, out, key)
         if isinstance(spec, DataSpec):
             return self._admit_data(spec, meta, out, key)
+        if isinstance(spec, PathSpec):
+            return self._admit_path(spec, meta, out, key)
         return self._admit_joint(spec, meta, out, key)
 
     def _attach_cache_fill(self, fut: Future, key) -> None:
@@ -681,6 +737,48 @@ class GlassoServer:
                         req.future.set_exception(e)
                     return req.future
         return self._enqueue(req)
+
+    def _admit_path(self, spec: PathSpec, meta, out: str, key) -> Future:
+        """Model-selection admission: validation already ran in the spec's
+        ``__post_init__``; the homotopy grid + criterion run entirely on the
+        batcher thread (``_solve_path_request``), so admission just queues.
+        There is deliberately NO fast path — even an all-closed-form grid is
+        n_points solves plus scoring, not a microseconds-cheap call."""
+        bump("serve.path_requests")
+        req = PathRequest(
+            spec=spec, output=out, tenant=meta.tenant, slo=meta.slo,
+            deadline_at=deadline_instant(meta),
+        )
+        self._attach_cache_fill(req.future, key)
+        return self._enqueue(req)
+
+    def _solve_path_request(self, req: PathRequest) -> None:
+        """Resolve one path request by calling ``repro.select.select_path``
+        — literally the offline entry point, with the server's options and
+        the admission-resolved output — so the served ``Selection`` (the
+        selected graph + per-lambda diagnostics) is bitwise identical to
+        the same call made locally."""
+        from repro.select import select_path
+
+        try:
+            spec = req.spec
+            req.future.set_result(
+                select_path(
+                    spec.S,
+                    X=spec.X,
+                    grid=spec.grid,
+                    criterion=spec.criterion,
+                    n=spec.n,
+                    gamma=spec.gamma,
+                    options=self.options,
+                    stream=spec.stream,
+                    output=req.output,
+                    criterion_opts=spec.criterion_opts,
+                )
+            )
+        except Exception as e:
+            if not req.future.done():
+                req.future.set_exception(e)
 
     def _solve_joint_request(self, req: JointRequest) -> None:
         """Solve one planned joint request through the shared JointEngine
@@ -945,13 +1043,22 @@ class GlassoServer:
         # joint requests ride the same queue but their buckets carry the K
         # class axis: each is solved through the shared JointEngine (whose
         # dispatches hit the same process-global compiled cache, keyed with
-        # K), then the plain requests coalesce as before
+        # K), then the plain requests coalesce as before.  Path requests
+        # (PathSpec) resolve whole selection grids through repro.select —
+        # their per-lambda bucket dispatches reuse the same process-global
+        # compiled cache, so they share executables with the batch even
+        # though they do not coalesce into it.
+        path_reqs = [r for r in requests if isinstance(r, PathRequest)]
         joint_reqs = [r for r in requests if isinstance(r, JointRequest)]
-        requests = [r for r in requests if not isinstance(r, JointRequest)]
+        requests = [
+            r for r in requests if not isinstance(r, (JointRequest, PathRequest))
+        ]
+        for pr in path_reqs:
+            self._solve_path_request(pr)
         for jr in joint_reqs:
             self._solve_joint_request(jr)
         if not requests:
-            if joint_reqs:
+            if joint_reqs or path_reqs:
                 bump("serve.batches")
             return
         per_req: list[tuple[GlassoRequest, np.ndarray, object, object]] = []
@@ -1159,6 +1266,7 @@ def serve_stats() -> dict[str, int | float]:
         **counts("stream."),
         **counts("solver.oversize."),
         **counts("joint."),
+        **counts("select."),
         **counts("engine."),
         **counts("result."),
     }

@@ -1,0 +1,57 @@
+"""Model selection as a service: the lambda path, scored and decided.
+
+The source paper's experiments are PATH experiments — screening makes the
+whole descending grid nearly free, components only merge as lambda drops
+(Theorem 2), and the interesting question becomes "which lambda?".  This
+package answers it end to end:
+
+    grid        normalize_lambda_grid (THE grid chokepoint shared with
+                glasso_path / run_path / stream_screen / PathSpec),
+                lambda_max (+ the exact streamed variant), lambda_grid
+    homotopy    warm-started path execution + select.warm.* accounting
+    criteria    per-component Gaussian loglik + EBIC (CovSource blocks)
+    stability   StARS over streamed subsample paths
+    cv          k-fold held-out log-likelihood
+    report      select_path -> Selection(result, report, path)
+
+Serving admission: ``launch.control_plane.PathSpec`` carries (grid,
+criterion, ...) through the same ``submit(spec, meta=)`` chokepoint as
+every other request kind; the batcher resolves it by calling
+``select_path`` — served and offline selections are bitwise identical.
+"""
+
+from repro.select.criteria import (
+    CovSource,
+    ebic_score,
+    gaussian_loglik,
+    loglik_terms,
+)
+from repro.select.cv import kfold_cv
+from repro.select.grid import (
+    lambda_grid,
+    lambda_max,
+    lambda_max_from_data,
+    normalize_lambda_grid,
+)
+from repro.select.homotopy import homotopy_path, warm_counts
+from repro.select.report import CRITERIA, Selection, SelectionReport, select_path
+from repro.select.stability import stars
+
+__all__ = [
+    "CRITERIA",
+    "CovSource",
+    "Selection",
+    "SelectionReport",
+    "ebic_score",
+    "gaussian_loglik",
+    "homotopy_path",
+    "kfold_cv",
+    "lambda_grid",
+    "lambda_max",
+    "lambda_max_from_data",
+    "loglik_terms",
+    "normalize_lambda_grid",
+    "select_path",
+    "stars",
+    "warm_counts",
+]

@@ -14,7 +14,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.planner import PathPlan, PathStep, build_plan_incremental
+from repro.engine.planner import (
+    PathPlan,
+    PathStep,
+    build_plan_incremental,
+    component_lifetimes,
+)
 from repro.stream.screen import StreamScreen, stream_screen
 
 
@@ -31,12 +36,14 @@ def plan_path_from_screen(
             "plan_path_from_screen needs a materialized screen "
             "(stream_screen(..., materialize=True))"
         )
+    life = component_lifetimes(sc.labels)
     path = PathPlan(p=sc.p, lambdas=list(sc.lambdas))
     prev_plan = None
     for lam, labels, stats in zip(sc.lambdas, sc.labels, sc.stats):
         plan, reused = build_plan_incremental(
             sc.S, lam, labels, prev=prev_plan, dtype=dtype,
             classify_structures=classify_structures, oversize=oversize,
+            lifetime_of=life,
         )
         path.steps.append(
             PathStep(

@@ -85,11 +85,13 @@ def stream_screen(
     larger than it are materialized DEFERRED (no host block — the sharded
     solve route streams them chunk-wise into device shards via
     ``materialize.shard_gather``)."""
+    from repro.select.grid import normalize_lambda_grid  # lazy: select imports engine
+
     cfg = as_config(config)
     t0 = time.perf_counter()
     X = np.asarray(X)
     n, p = X.shape
-    lams = sorted((float(v) for v in np.asarray(list(lambdas)).ravel()), reverse=True)
+    lams = normalize_lambda_grid(lambdas)
     lam_min = lams[-1]
 
     moments = column_moments(X, chunk=cfg.chunk)

@@ -1,0 +1,374 @@
+"""Model selection (``repro.select``): grid chokepoint, warm homotopy
+exactness, per-component criteria, and the serving ``PathSpec`` contract.
+
+The warm-start exactness test is the PR's property pillar: homotopy Thetas
+must match cold single-lambda solves within ``route_check_tol`` across all
+registered cc backends — including dyadic ``|S_ij| == lam`` ties (the strict
+eq.-(4) threshold excludes the tied edge) and a merge event mid-grid.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import lambda_between_edges, random_covariance
+from repro.core import glasso, glasso_path
+from repro.core.instrument import reset, tail_counts
+from repro.engine.options import EngineOptions
+from repro.engine.registry import available_cc_backends
+from repro.select import (
+    CovSource,
+    Selection,
+    SelectionReport,
+    ebic_score,
+    gaussian_loglik,
+    homotopy_path,
+    kfold_cv,
+    lambda_grid,
+    lambda_max,
+    lambda_max_from_data,
+    loglik_terms,
+    normalize_lambda_grid,
+    select_path,
+    stars,
+)
+
+TIGHT = EngineOptions(solver_opts={"tol": 1e-9})
+
+
+# -- grid normalization: the one chokepoint ------------------------------
+
+
+def test_normalize_sorts_descending_and_dedupes():
+    assert normalize_lambda_grid([0.1, 0.5, 0.3, 0.5, 0.1]) == [0.5, 0.3, 0.1]
+
+
+@pytest.mark.parametrize("bad", [[], [0.5, 0.0], [0.5, -1.0], [np.nan], [np.inf]])
+def test_normalize_rejects_degenerate_grids(bad):
+    with pytest.raises(ValueError):
+        normalize_lambda_grid(bad)
+
+
+def test_glasso_path_normalizes_at_every_entry_point(rng):
+    """Unsorted/duplicated grids give the same results as the canonical
+    grid through both the screened planner and the screen=False baseline."""
+    S = random_covariance(rng, 10)
+    lams = [lambda_between_edges(S, q) for q in (0.3, 0.6, 0.8)]
+    messy = [lams[0], lams[2], lams[1], lams[0]]  # unsorted + duplicate
+    for screen in (True, False):
+        a = glasso_path(S, messy, screen=screen, options=TIGHT)
+        b = glasso_path(
+            S, sorted(lams, reverse=True), screen=screen, options=TIGHT
+        )
+        assert [r.lam for r in a] == sorted(lams, reverse=True)
+        for ra, rb in zip(a, b):
+            np.testing.assert_allclose(ra.Theta, rb.Theta, atol=1e-7)
+    with pytest.raises(ValueError):
+        glasso_path(S, [0.5, -0.1])
+    with pytest.raises(ValueError):
+        glasso_path(S, [0.5, 0.0], screen=False)
+
+
+def test_from_data_path_normalizes_grid(rng):
+    X = rng.standard_normal((60, 12))
+    res = glasso_path(X=X, lambdas=[0.2, 0.5, 0.2], from_data=True)
+    assert [r.lam for r in res] == [0.5, 0.2]
+    with pytest.raises(ValueError):
+        glasso_path(X=X, lambdas=[0.5, 0.0], from_data=True)
+
+
+# -- lambda_max / auto grid ----------------------------------------------
+
+
+def test_lambda_max_matches_brute_force(rng):
+    S = random_covariance(rng, 17)
+    off = np.abs(S - np.diag(np.diag(S)))
+    assert lambda_max(S) == pytest.approx(off.max(), abs=0.0)
+    assert lambda_max(np.eye(1)) == 0.0
+
+
+def test_lambda_max_from_data_matches_dense(rng):
+    X = rng.standard_normal((40, 23))
+    S = np.cov(X, rowvar=False, bias=True)
+    reset("select.grid.")
+    got = lambda_max_from_data(X, config={"tile": 8, "chunk": 16})
+    assert got == pytest.approx(lambda_max(S), rel=1e-12)
+    c = tail_counts("select.grid.")
+    assert c.get("tiles_scanned", 0) >= 1
+    n_tiles = -(-23 // 8)
+    assert (
+        c.get("tiles_scanned", 0) + c.get("tiles_pruned", 0)
+        == n_tiles * (n_tiles + 1) // 2
+    )
+
+
+def test_lambda_grid_anchored_and_descending(rng):
+    S = random_covariance(rng, 9)
+    grid = lambda_grid(S, n_points=7)
+    assert len(grid) == 7
+    assert grid[0] == pytest.approx(lambda_max(S))
+    assert grid[-1] == pytest.approx(0.1 * lambda_max(S))
+    assert grid == sorted(grid, reverse=True)
+    lin = lambda_grid(S, n_points=5, scale="linear", lam_min_ratio=0.5)
+    assert np.allclose(np.diff(lin), np.diff(lin)[0])
+    with pytest.raises(ValueError):
+        lambda_grid(S, X=np.zeros((3, 3)))
+    with pytest.raises(ValueError):
+        lambda_grid(S, scale="sqrt")
+
+
+# -- warm-start exactness: the homotopy property pillar ------------------
+
+
+def _dyadic_merging_covariance():
+    """PD covariance with exactly-representable edge weights and a known
+    merge sequence: two 4-cliques at |S_ij| = 0.5, joined by one 0.25
+    cross edge.  Grid points AT 0.5 and 0.25 are strict-threshold ties."""
+    S = np.eye(8)
+    for block in (range(0, 4), range(4, 8)):
+        for i in block:
+            for j in block:
+                if i != j:
+                    S[i, j] = 0.5
+    S[3, 4] = S[4, 3] = 0.25
+    assert np.linalg.eigvalsh(S).min() > 0
+    return S
+
+
+@pytest.mark.parametrize("backend", available_cc_backends())
+def test_homotopy_matches_cold_solves_with_ties_and_merge(backend):
+    S = _dyadic_merging_covariance()
+    # 0.5: tie on every clique edge -> all singletons; 0.375: two cliques;
+    # 0.25: tie on the cross edge -> still two; 0.125: merged into one.
+    lams = [0.5, 0.375, 0.25, 0.125]
+    opts = EngineOptions(cc_backend=backend, solver_opts={"tol": 1e-9})
+    path = homotopy_path(S, lambdas=lams, options=opts)
+    comp_counts = []
+    for r, lam in zip(path, lams):
+        cold = glasso(S, lam, options=opts)
+        np.testing.assert_array_equal(r.labels, cold.labels)
+        np.testing.assert_allclose(
+            r.Theta, cold.Theta, atol=10 * opts.route_check_tol
+        )
+        comp_counts.append(int(r.screen.n_components))
+    assert comp_counts == [8, 2, 2, 1]  # ties excluded, merge mid-grid
+
+
+def test_homotopy_matches_cold_on_generic_covariance(rng):
+    S = random_covariance(rng, 14)
+    lams = [lambda_between_edges(S, q) for q in (0.85, 0.6, 0.4, 0.2)]
+    path = homotopy_path(S, lambdas=lams, options=TIGHT)
+    for r in path:
+        cold = glasso(S, r.lam, options=TIGHT)
+        np.testing.assert_allclose(r.Theta, cold.Theta, atol=1e-5)
+
+
+# -- warm accounting ------------------------------------------------------
+
+
+def test_warm_counters_classify_reused_merged_cold():
+    S = _dyadic_merging_covariance()
+    lams = [0.375, 0.3, 0.125]  # cliques, unchanged cliques, merged
+    # route=False -> every bucket is solver-bound, so every one is counted
+    opts = EngineOptions(route=False, solver_opts={"tol": 1e-8})
+    reset("select.warm.")
+    homotopy_path(S, lambdas=lams, options=opts)
+    warm = tail_counts("select.warm.")
+    # buckets, not components: the two same-shape cliques share one bucket
+    assert warm.get("cold", 0) >= 1     # first grid point's clique bucket
+    assert warm.get("reused", 0) >= 1   # unchanged clique bucket at 0.3
+    assert warm.get("merged", 0) >= 1   # the 0.125 merge
+    reset("select.warm.")
+    homotopy_path(S, lambdas=lams, options=opts, warm_start=False)
+    warm = tail_counts("select.warm.")
+    assert set(warm) <= {"cold"} and warm.get("cold", 0) >= 3
+
+
+# -- criteria -------------------------------------------------------------
+
+
+def test_loglik_and_ebic_match_manual_dense(rng):
+    S = random_covariance(rng, 12)
+    lam = lambda_between_edges(S, 0.5)
+    res = glasso(S, lam, options=TIGHT)
+    src = CovSource(S=S)
+    ld, tr = loglik_terms(res, src)
+    sign, manual_ld = np.linalg.slogdet(res.Theta)
+    assert sign > 0
+    assert ld == pytest.approx(manual_ld, rel=1e-10)
+    assert tr == pytest.approx(float(np.sum(S * res.Theta)), rel=1e-10)
+    n, gamma = 80, 0.5
+    E = res.support_edges().shape[0]
+    manual = -n * (manual_ld - np.sum(S * res.Theta)) + E * (
+        np.log(n) + 4 * gamma * np.log(S.shape[0])
+    )
+    assert ebic_score(res, src, n, gamma=gamma) == pytest.approx(manual)
+    assert gaussian_loglik(res, src, n) == pytest.approx(0.5 * n * (ld - tr))
+    with pytest.raises(ValueError):
+        ebic_score(res, src, 0)
+
+
+def test_criteria_agree_dense_vs_sparse_output(rng):
+    S = random_covariance(rng, 12)
+    lam = lambda_between_edges(S, 0.5)
+    dense = glasso(S, lam, options=TIGHT.replace(output="dense"))
+    sparse = glasso(S, lam, options=TIGHT.replace(output="sparse"))
+    src = CovSource(S=S)
+    ld_d, tr_d = loglik_terms(dense, src)
+    ld_s, tr_s = loglik_terms(sparse, src)
+    assert ld_s == pytest.approx(ld_d, rel=1e-8)
+    assert tr_s == pytest.approx(tr_d, rel=1e-8)
+
+
+def test_cov_source_from_data_matches_covariance(rng):
+    X = rng.standard_normal((50, 10))
+    S = np.cov(X, rowvar=False, bias=True)
+    src = CovSource(X=X)
+    idx = np.array([1, 4, 7])
+    np.testing.assert_allclose(src.block(idx), S[np.ix_(idx, idx)], atol=1e-12)
+    np.testing.assert_allclose(src.diag(idx), np.diag(S)[idx], atol=1e-12)
+    assert src.p == 10
+
+
+# -- select_path + SelectionReport ---------------------------------------
+
+
+def test_select_path_ebic_report_shape(rng):
+    S = random_covariance(rng, 12)
+    sel = select_path(S, grid=5, criterion="ebic", n=100, options=TIGHT)
+    assert isinstance(sel, Selection)
+    rep = sel.report
+    assert isinstance(rep, SelectionReport)
+    assert rep.criterion == "ebic"
+    assert len(rep.lambdas) == len(rep.scores) == 5
+    assert len(rep.support_sizes) == len(rep.n_components) == 5
+    assert len(rep.route_mixes) == len(rep.stages_us) == 5
+    assert rep.lambdas == sorted(rep.lambdas, reverse=True)
+    assert 0 <= rep.selected_index < 5
+    assert rep.selected_lam == rep.lambdas[rep.selected_index]
+    assert sel.result is sel.path[rep.selected_index]
+    assert rep.scores[rep.selected_index] == min(rep.scores)
+    assert rep.detail == {"gamma": 0.5, "n": 100}
+    assert 0.0 <= rep.warm_fraction <= 1.0
+    for st in rep.stages_us:
+        assert set(st) == {"screen_us", "solve_us", "assemble_us"}
+        assert all(v >= 0 for v in st.values())
+
+
+def test_select_path_validates_inputs(rng):
+    S = random_covariance(rng, 8)
+    with pytest.raises(ValueError):
+        select_path(S, X=np.zeros((4, 8)))
+    with pytest.raises(ValueError):
+        select_path(S, criterion="aic", n=10)
+    with pytest.raises(ValueError):
+        select_path(S, criterion="ebic")  # covariance input without n=
+    with pytest.raises(ValueError):
+        select_path(S, criterion="cv", n=10)  # cv resamples rows
+    with pytest.raises(ValueError):
+        select_path(S, grid={"auto": 5, "extra": 1}, n=10)
+    with pytest.raises(TypeError):
+        select_path(S, n=10, criterion_opts={"bogus": 1})
+
+
+def test_select_path_cv_and_stars_from_data(rng):
+    X = rng.standard_normal((60, 10))
+    grid = [0.6, 0.4, 0.25]
+    cv = select_path(X=X, grid=grid, criterion="cv", criterion_opts={"k": 3})
+    assert len(cv.report.scores) == 3
+    assert cv.report.scores[cv.report.selected_index] == max(cv.report.scores)
+    assert cv.report.detail["k"] == 3
+    st = select_path(
+        X=X, grid=grid, criterion="stars", criterion_opts={"n_subsamples": 4}
+    )
+    assert len(st.report.scores) == 3
+    assert all(0.0 <= d <= 0.5 + 1e-12 for d in st.report.scores)
+    mono = st.report.detail["monotone"]
+    assert all(a <= b + 1e-12 for a, b in zip(mono, mono[1:]))
+
+
+def test_kfold_cv_and_stars_direct(rng):
+    X = rng.standard_normal((45, 8))
+    out = kfold_cv(X, [0.5, 0.3], k=3, seed=1)
+    assert len(out["scores"]) == 2 and out["k"] == 3
+    out2 = stars(X, [0.5, 0.3], n_subsamples=3, seed=1)
+    assert len(out2["scores"]) == 2 and out2["n_subsamples"] == 3
+    with pytest.raises(ValueError):
+        kfold_cv(X, [0.5], k=1)
+
+
+# -- serving: PathSpec through the control plane -------------------------
+
+
+def test_pathspec_validation(rng):
+    from repro.launch.control_plane import PathSpec
+
+    S = random_covariance(rng, 6)
+    with pytest.raises(ValueError):
+        PathSpec(S=S, X=np.zeros((3, 6)))
+    with pytest.raises(ValueError):
+        PathSpec()
+    with pytest.raises(ValueError):
+        PathSpec(S=S, criterion="bic")
+    with pytest.raises(ValueError):
+        PathSpec(S=S, criterion="cv")  # resampling criteria need X
+    assert PathSpec(S=S).p == 6
+    assert PathSpec(X=np.zeros((4, 9))).p == 9
+
+
+def test_pathspec_cache_key(rng):
+    from repro.launch.control_plane import PathSpec, spec_cache_key
+
+    S = random_covariance(rng, 6)
+    k1 = spec_cache_key(PathSpec(S=S, grid={"auto": 5}), "sparse")
+    k2 = spec_cache_key(PathSpec(S=S, grid={"auto": 5}), "sparse")
+    assert k1 == k2 and k1[0] == "path"
+    # different grid / criterion / gamma / output -> different keys
+    assert spec_cache_key(PathSpec(S=S, grid=[0.5, 0.2]), "sparse") != k1
+    assert spec_cache_key(PathSpec(S=S, grid={"auto": 5}, gamma=1.0), "sparse") != k1
+    assert spec_cache_key(PathSpec(S=S, grid={"auto": 5}), "dense") != k1
+    # custom stream config -> uncacheable
+    assert spec_cache_key(
+        PathSpec(X=np.zeros((4, 6)), grid=[0.5], stream={"tile": 4}), "sparse"
+    ) is None
+
+
+def test_pathspec_defaults_to_batch_slo(rng):
+    from repro.launch.control_plane import DenseSpec, PathSpec
+    from repro.launch.serve_glasso import GlassoServer
+
+    S = random_covariance(rng, 6)
+    assert GlassoServer._fold_output(None, None, spec=PathSpec(S=S)).slo == "batch"
+    assert (
+        GlassoServer._fold_output(None, None, spec=DenseSpec(S=S, lam=0.5)).slo
+        == "interactive"
+    )
+
+
+def test_submit_pathspec_bitwise_equals_offline(rng):
+    from repro.launch.control_plane import PathSpec
+    from repro.launch.serve_glasso import GlassoServer, serve_stats
+
+    S = random_covariance(rng, 14)
+    grid = [lambda_between_edges(S, q) for q in (0.8, 0.5, 0.3)]
+    opts = EngineOptions(output="sparse", solver_opts={"tol": 1e-8})
+    offline = select_path(S, grid=grid, criterion="ebic", n=120, options=opts)
+    spec = PathSpec(S=S, grid=grid, criterion="ebic", n=120)
+    with GlassoServer(options=opts, result_cache=4) as server:
+        served = server.submit(spec).result(timeout=300)
+        again = server.submit(spec).result(timeout=300)
+    assert served.report.scores == offline.report.scores
+    assert served.report.selected_index == offline.report.selected_index
+    assert served.report.lambdas == offline.report.lambdas
+    np.testing.assert_array_equal(
+        served.result.support_edges(), offline.result.support_edges()
+    )
+    for (ca, ba), (cb, bb) in zip(
+        served.result.Theta.blocks(), offline.result.Theta.blocks()
+    ):
+        np.testing.assert_array_equal(ca, cb)
+        np.testing.assert_array_equal(ba, bb)  # bitwise, not approx
+    assert again is served  # second submit is a cache hit
+    st = serve_stats()
+    # the hit short-circuits before kind dispatch, so exactly one admission
+    assert st.get("serve.path_requests", 0) >= 1
+    assert st.get("serve.cache.hits", 0) >= 1
