@@ -1,0 +1,242 @@
+"""Fused wave-packer benchmark: one launch per bin per wave vs per-bucket
+dispatches (DESIGN.md Section 16).
+
+The workload is the regime the tentpole targets: MANY small solver-bound
+blocks — planted chordless cycles (structure "general", sizes spanning the
+fused bins) with staggered dyadic cross couplings so components keep merging
+down a descending lambda grid.  Lifetime bucketing then fragments every grid
+step into dozens of tiny iterative buckets (the warm-homotopy dispatch storm
+``bench_select`` first exposed as a stage-attribution anomaly), and the two
+arms solve the identical warm-started path:
+
+  * **unfused** — one compiled-solver launch per bucket per wave,
+  * **fused**   — all fused-eligible buckets re-packed across bucket
+    boundaries into size-binned megabatches, ONE launch per occupied bin.
+
+Reported: min-of-reps wall clock per arm and the fused speedup (gated via
+the committed baseline, >20% regression fails CI), per-stage attribution
+(solve/dispatch) per arm, dispatch counts (acceptance, asserted here: the
+fused arm's iterative-tail launches collapse to at most one per occupied
+bin per wave), ``solver.fused.*`` counters including the lockstep sweeps the
+in-kernel early exit would save on TPU, and fused == unfused BITWISE
+equality (asserted, not approximated — the packer's whole contract).
+
+``smoke()`` is the CI correctness gate: bitwise equality plus the dispatch
+collapse on a small merging grid.
+
+    PYTHONPATH=src python -m benchmarks.bench_fused [--quick] [--smoke] \
+        [--json BENCH_fused.json] [--check benchmarks/baseline_fused.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def _workload(K: int, seed: int = 0) -> np.ndarray:
+    """Block-diagonal S of K chordless cycles, sizes cycling over the fused
+    bins, dyadic in-cycle couplings in [0.453, 0.5] (above the whole grid,
+    so every block stays solver-bound) and staggered dyadic cross couplings
+    in [0.218, 0.406] between alternating neighbor blocks (each activates
+    at its own grid point — merges all along the path)."""
+    rng = np.random.default_rng(seed)
+    sizes = [(4, 5, 6, 8, 10, 12)[k % 6] for k in range(K)]
+    p = sum(sizes)
+    S = np.zeros((p, p))
+    off, starts = 0, []
+    for b in sizes:
+        starts.append(off)
+        for i in range(b):
+            j = (i + 1) % b
+            mag = rng.integers(29, 33) / 64.0
+            sgn = 1.0 if rng.random() < 0.5 else -1.0
+            S[off + i, off + j] = S[off + j, off + i] = sgn * mag
+        off += b
+    for k, (a, b) in enumerate(zip(starts, starts[1:])):
+        if k % 2 == 0:
+            S[a, b] = S[b, a] = (14 + (k * 3) % 13) / 64.0
+    np.fill_diagonal(S, 1.0)
+    return S
+
+
+def _grid(n_lambdas: int) -> list[float]:
+    return [float(v) for v in np.linspace(0.44, 0.18, n_lambdas)]
+
+
+def _assert_bitwise(path_a, path_b) -> None:
+    """Sparse results compare block by block, order-insensitively (the two
+    arms' planners enumerate identically here, but stay safe)."""
+    for ra, rb in zip(path_a, path_b):
+        assert np.array_equal(ra.labels, rb.labels), "labels diverged"
+        by_comp = {np.asarray(c).tobytes(): blk for c, blk in ra.Theta.blocks()}
+        for c, blk in rb.Theta.blocks():
+            ref = by_comp[np.asarray(c).tobytes()]
+            assert np.array_equal(ref, blk), (
+                f"fused != unfused at lam={ra.lam:.4f} (comp of {len(c)})"
+            )
+
+
+def run(K: int = 80, n_lambdas: int = 15, reps: int = 3, log=print) -> dict:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import EngineOptions, glasso_path
+    from repro.core.instrument import reset, tail_counts
+    from repro.engine.waves import FUSED_BINS
+
+    S = _workload(K)
+    p = S.shape[0]
+    lams = _grid(n_lambdas)
+    o_un = EngineOptions(
+        output="sparse", solver_opts={"tol": 1e-7}, fused=False
+    )
+    o_f = o_un.replace(fused=True)
+    log(f"fused bench: p={p} ({K} chordless-cycle blocks), "
+        f"{len(lams)} lambdas in [{lams[-1]:.3f}, {lams[0]:.3f}]")
+
+    # warm the compiled caches off the clock; the warm pass doubles as the
+    # bitwise gate — the packer's contract is exactness, not closeness
+    path_un = glasso_path(S, lams, options=o_un)
+    path_f = glasso_path(S, lams, options=o_f)
+    _assert_bitwise(path_un, path_f)
+    log("fused == unfused bitwise across the path: OK")
+
+    rec: dict = {"p": p, "planted_blocks": K, "n_lambdas": len(lams),
+                 "reps": reps}
+    for arm, opts in (("unfused", o_un), ("fused", o_f)):
+        reset("executor.")
+        reset("solver.fused.")
+        best, path = 1e9, None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            path = glasso_path(S, lams, options=opts)
+            best = min(best, time.perf_counter() - t0)
+        fused_c = tail_counts("solver.fused.")
+        rec[f"wall_{arm}_s"] = round(best, 3)
+        rec[f"stages_{arm}_us"] = {
+            k: sum(r.stages_us[k] for r in path)
+            for k in ("solve_us", "dispatch_us", "assemble_us")
+        }
+        rec[f"dispatches_{arm}"] = (
+            tail_counts("executor.")["dispatches"] // reps
+        )
+        if arm == "fused":
+            rec["fused_launches"] = fused_c.get("dispatches", 0) // reps
+            rec["blocks_packed"] = fused_c.get("blocks_packed", 0) // reps
+            rec["lockstep_sweeps_saved"] = (
+                fused_c.get("lockstep_sweeps_saved", 0) // reps
+            )
+    rec["fused_speedup"] = round(
+        rec["wall_unfused_s"] / max(rec["wall_fused_s"], 1e-9), 3
+    )
+
+    # acceptance: the iterative tail collapses to <= one launch per occupied
+    # bin per wave (closed-form/chordal dispatches are not fused-eligible
+    # and are excluded by construction: fused_launches counts only packer
+    # launches)
+    max_launches = len(lams) * len(FUSED_BINS)
+    assert rec["fused_launches"] <= max_launches, (
+        f"{rec['fused_launches']} fused launches > one-per-bin-per-wave "
+        f"bound {max_launches}"
+    )
+    assert rec["fused_speedup"] >= 1.0, (
+        f"fused arm slower than unfused ({rec['fused_speedup']}x)"
+    )
+    log(f"fused bench: unfused {rec['wall_unfused_s']}s vs fused "
+        f"{rec['wall_fused_s']}s -> {rec['fused_speedup']}x; dispatches "
+        f"{rec['dispatches_unfused']} -> {rec['dispatches_fused']} "
+        f"({rec['fused_launches']} fused launches, "
+        f"{rec['blocks_packed']} blocks packed, "
+        f"{rec['lockstep_sweeps_saved']} lockstep sweeps saved)")
+    return rec
+
+
+def smoke() -> None:
+    """CI correctness gate: bitwise fused == unfused + dispatch collapse."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import EngineOptions, glasso_path
+    from repro.core.instrument import count, reset
+    from repro.engine.waves import FUSED_BINS
+
+    S = _workload(12, seed=3)
+    lams = _grid(6)
+    o_un = EngineOptions(
+        output="sparse", solver_opts={"tol": 1e-7}, fused=False
+    )
+    path_un = glasso_path(S, lams, options=o_un)
+    reset("executor.")
+    reset("solver.fused.")
+    path_f = glasso_path(S, lams, options=o_un.replace(fused=True))
+    _assert_bitwise(path_un, path_f)
+    launches = count("solver.fused.dispatches")
+    assert 0 < launches <= len(lams) * len(FUSED_BINS), (
+        f"fused launches {launches} outside (0, one-per-bin-per-wave]"
+    )
+    assert count("solver.fused.blocks_packed") > 0
+    print(f"smoke: fused == unfused bitwise over {len(lams)}-lambda merging "
+          f"path ({launches} fused launches, "
+          f"{count('solver.fused.blocks_packed')} blocks packed)")
+
+
+def check(rec: dict, baseline_path: str, log=print) -> int:
+    """CI regression gate: >20% fused-speedup regression, a fused arm slower
+    than unfused, or the dispatch collapse coming undone (fused launch count
+    above the baseline's by more than 20%)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    min_speedup = base["fused_speedup"] / 1.2
+    if rec["fused_speedup"] < min_speedup:
+        failures.append(
+            f"fused speedup {rec['fused_speedup']} < {min_speedup:.2f} "
+            f"(baseline {base['fused_speedup']} - 20%)"
+        )
+    if rec["fused_speedup"] < 1.0:
+        failures.append(
+            f"fused arm slower than unfused ({rec['fused_speedup']}x)"
+        )
+    if rec["fused_launches"] > base["fused_launches"] * 1.2:
+        failures.append(
+            f"fused launches {rec['fused_launches']} > baseline "
+            f"{base['fused_launches']} + 20% (packing coming undone)"
+        )
+    for msg in failures:
+        log(f"REGRESSION: {msg}")
+    if not failures:
+        log(f"fused bench within baseline ({baseline_path})")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="K=24 smoke variant")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI correctness gate (bitwise + dispatch collapse)")
+    ap.add_argument("--json", default=None, help="write the record to FILE")
+    ap.add_argument("--check", default=None, help="baseline JSON to gate against")
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
+    if args.quick:
+        rec = run(K=24, n_lambdas=8, reps=2)
+    else:
+        rec = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        sys.exit(check(rec, args.check))
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,32 @@ def run(log=print) -> list[dict]:
         us = _time(fn) * 1e6
         out.append({"bench": name, "us_per_call": round(us, 1)})
         log(f"{name:26s} {us:12.1f} us")
+
+    # fused in-kernel BCD over a packed small-block stack (one megabatch
+    # lane per block; the wave packer's per-launch unit)
+    from repro.kernels.bucket_glasso.bucket_glasso import fused_bcd_pallas
+    from repro.kernels.bucket_glasso.ref import fused_bcd_ref_stack
+
+    N, b = 16, 16
+    A = rng.standard_normal((N, b, b)) * (rng.random((N, b, b)) < 0.4)
+    Sb = jnp.asarray(A @ A.transpose(0, 2, 1) / b + np.eye(b)[None])
+    lams = jnp.full(N, 0.3, Sb.dtype)
+    eye = jnp.eye(b, dtype=Sb.dtype)[None]
+    scales = jnp.abs(Sb - eye * jnp.diagonal(Sb, axis1=1, axis2=2)[:, None, :]
+                     * eye).mean(axis=(1, 2)) + 1e-12
+    W0 = Sb + lams[:, None, None] * eye
+    T0 = jnp.broadcast_to(jnp.eye(b, dtype=Sb.dtype), (N, b, b))
+    for name, fn in (
+        ("bucket_glasso_pallas_interp",
+         lambda: fused_bcd_pallas(Sb, lams.reshape(N, 1),
+                                  scales.reshape(N, 1), W0, T0,
+                                  interpret=True)),
+        ("bucket_glasso_ref",
+         lambda: fused_bcd_ref_stack(Sb, lams, scales, W0, T0)),
+    ):
+        us = _time(fn) * 1e6
+        out.append({"bench": name, "us_per_call": round(us, 1)})
+        log(f"{name:26s} {us:12.1f} us")
     return out
 
 

@@ -123,7 +123,12 @@ def run(
     )
 
     def _stage_totals(path):
-        tot = {"screen_us": 0, "solve_us": 0, "assemble_us": 0}
+        # dispatch_us is the stage that explains the old solve_us anomaly:
+        # the warm homotopy arm issues ~6x the dispatches of a cold solve
+        # (lifetime bucketing), and before the dispatch stage existed that
+        # host overhead was silently folded into solve_us — making the warm
+        # arm's "solve" look slower than cold despite a faster wall clock
+        tot = {"screen_us": 0, "solve_us": 0, "dispatch_us": 0, "assemble_us": 0}
         for r in path:
             for k, v in r.stages_us.items():
                 tot[k] += v

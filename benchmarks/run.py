@@ -109,6 +109,12 @@ def smoke() -> None:
     from benchmarks import bench_select
 
     bench_select.smoke()
+
+    # fused wave packer: megabatched in-kernel BCD == per-bucket dispatches
+    # bitwise, and the iterative tail collapses to one launch per bin per wave
+    from benchmarks import bench_fused
+
+    bench_fused.smoke()
     print("smoke: OK")
 
 
@@ -173,6 +179,16 @@ def main() -> None:
                if args.quick else bench_select.run())
     rows.append((f"select/p{sel_rec['p']}", sel_rec["wall_warm_s"] * 1e6,
                  f"warm_speedup={sel_rec['warm_speedup']}"))
+
+    print("=" * 72)
+    print("Fused wave packer: one launch per bin per wave vs per-bucket dispatch")
+    print("=" * 72)
+    from benchmarks import bench_fused
+
+    fus_rec = (bench_fused.run(K=24, n_lambdas=8, reps=2)
+               if args.quick else bench_fused.run())
+    rows.append((f"fused/p{fus_rec['p']}", fus_rec["wall_fused_s"] * 1e6,
+                 f"fused_speedup={fus_rec['fused_speedup']}"))
 
     print("=" * 72)
     print("Figure 1 analog: component-size profile across lambda")

@@ -10,6 +10,7 @@ safe: the serving endpoint bumps from worker threads.
 from __future__ import annotations
 
 import threading
+import time
 from collections import Counter
 
 _LOCK = threading.Lock()
@@ -19,6 +20,27 @@ _COUNTS: Counter[str] = Counter()
 def bump(name: str, n: int = 1) -> None:
     with _LOCK:
         _COUNTS[name] += n
+
+
+def timed_dispatch(call, *args, **kwargs):
+    """Run one bucket-dispatch chokepoint; returns ``(result, seconds)``.
+
+    Bumps ``engine.dispatch.count`` and ``engine.dispatch.us`` — the
+    process-wide ledger of how many solver launches the engines issued and
+    how much HOST time they spent issuing them.  For async device routes
+    (closed-form, iterative, fused, repairs) that is pure enqueue overhead
+    — the cost the wave packer exists to collapse; for host-executed routes
+    (chordal, sharded) the dispatch IS the solve, so their entries measure
+    the blocking host call.  Wrapped at every chokepoint: the single-class
+    executor, the joint engine, the sharded per-block loop, the chordal
+    host solve, and the serving batcher."""
+    t0 = time.perf_counter()
+    out = call(*args, **kwargs)
+    dt = time.perf_counter() - t0
+    with _LOCK:
+        _COUNTS["engine.dispatch.count"] += 1
+        _COUNTS["engine.dispatch.us"] += int(dt * 1e6)
+    return out, dt
 
 
 def set_peak(name: str, value: int) -> None:

@@ -57,8 +57,31 @@ register_solver(
         warm_startable=True,
         description="GLASSO block coordinate descent (paper baseline)",
         # consumes the Theta-side seed alongside W0: Theta0 seeds the inner
-        # lasso coefficients (B), which is where the sweep time actually goes
-        meta={"theta_warm": True},
+        # lasso coefficients (B), which is where the sweep time actually goes.
+        # fused_stack: kernels.bucket_glasso replays this solver's exact
+        # arithmetic over a packed megabatch, so the executor's wave packer
+        # may fuse its small buckets (DESIGN.md Section 16)
+        meta={"theta_warm": True, "fused_stack": True},
+    )
+)
+register_solver(
+    SolverSpec(
+        name="fused_bcd",
+        fn=glasso_bcd,
+        batched=True,
+        warm_startable=True,
+        description="bcd with the wave packer forced on: small iterative "
+                    "buckets fuse into one bucket_glasso launch per bin per "
+                    "wave; oversize-bin blocks dispatch as plain bcd",
+        # force_fused: picking this solver opts the executor into fusion even
+        # under EngineOptions(fused="auto"); identical bits to "bcd" —
+        # max_fused_size is the largest bin the packer may pad into
+        meta={
+            "theta_warm": True,
+            "fused_stack": True,
+            "force_fused": True,
+            "max_fused_size": 64,
+        },
     )
 )
 register_solver(

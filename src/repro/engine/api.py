@@ -39,7 +39,8 @@ class GlassoResult:
                                    # output resolved to "sparse"
     labels: np.ndarray
     screen: ScreenStats | None
-    solve_seconds: float           # dispatch + verify (assembly EXCLUDED)
+    solve_seconds: float           # device solve + verify (assembly and
+                                   # dispatch-issue overhead EXCLUDED)
     solver: str
     block_sizes: list[int] = field(default_factory=list)
     route_mix: dict = field(default_factory=dict)  # structure class -> #blocks
@@ -49,6 +50,13 @@ class GlassoResult:
     # process-wide view is instrument counts("solver.oversize.")
     oversize: dict = field(default_factory=dict)
     assemble_seconds: float = 0.0  # scatter/index-build slice of this solve
+    # host seconds spent ISSUING async solver launches — the per-dispatch
+    # overhead the wave packer collapses.  Reported as its own stage: before
+    # it existed this time was silently folded into solve_seconds, which is
+    # how a warm homotopy pass (many small reused buckets, ~6x the dispatch
+    # count of a cold pass) showed a LARGER solve stage than cold despite a
+    # faster wall clock (the bench_select stage-attribution anomaly)
+    dispatch_seconds: float = 0.0
     bytes_peak: int = 0            # resident bytes of Theta as assembled
     output: str = "dense"          # the representation actually returned
 
@@ -68,6 +76,7 @@ class GlassoResult:
         return {
             "screen_us": int(self.screen_seconds * 1e6),
             "solve_us": int(self.solve_seconds * 1e6),
+            "dispatch_us": int(self.dispatch_seconds * 1e6),
             "assemble_us": int(self.assemble_seconds * 1e6),
         }
 
@@ -111,7 +120,8 @@ class GlassoResult:
         if not total:
             return 1.0
         iterative = sum(
-            n for cls, n in self.route_mix.items() if route_for(cls) == "iterative"
+            n for cls, n in self.route_mix.items()
+            if route_for(cls) in ("iterative", "fused")
         )
         return 1.0 - iterative / total
 
@@ -214,12 +224,14 @@ def _blockwise_inverse_sparse(
 def _result(
     plan, labels, screen_stats, Theta, seconds, solver, lam, *,
     routed: bool = True, oversize: dict | None = None,
-    assemble_seconds: float = 0.0,
+    assemble_seconds: float = 0.0, dispatch_seconds: float = 0.0,
 ) -> GlassoResult:
     route_mix = {"singleton": len(plan.isolated)} if len(plan.isolated) else {}
     for b in plan.buckets:
         route_mix[b.structure] = route_mix.get(b.structure, 0) + len(b.comps)
-    solve_seconds = max(0.0, float(seconds) - float(assemble_seconds))
+    solve_seconds = max(
+        0.0, float(seconds) - float(assemble_seconds) - float(dispatch_seconds)
+    )
     bump("engine.solve_us", int(solve_seconds * 1e6))
     if screen_stats is not None:
         bump("engine.screen_us", int(float(screen_stats.seconds) * 1e6))
@@ -237,6 +249,7 @@ def _result(
         routed=routed,
         oversize=dict(oversize or {}),
         assemble_seconds=float(assemble_seconds),
+        dispatch_seconds=float(dispatch_seconds),
         bytes_peak=result_nbytes(Theta),
         output="sparse" if isinstance(Theta, SparseTheta) else "dense",
     )
@@ -261,7 +274,7 @@ class Engine:
         work through the shared normalization chokepoint (they warn at the
         PUBLIC wrappers — ``glasso``/``glasso_path`` — not here, so internal
         constructions stay quiet)."""
-        from repro.core.solvers import WARM_START_SOLVERS
+        from repro.core.solvers import WARM_START_SOLVERS, solver_spec
 
         opts = normalize_options(options, legacy_engine_kwargs, context="Engine")
         self.options = opts
@@ -276,6 +289,20 @@ class Engine:
             opts.oversize_threshold, opts.oversize_budget_mb, self.np_dtype,
             route=opts.route,
         )
+        # wave-packer resolution (EngineOptions.fused): True demands the
+        # capability, "auto" turns on only for solvers that force it
+        # ("fused_bcd") — buckets ROUTED "fused" via registry.set_route fuse
+        # in the executor regardless of this flag
+        meta = solver_spec(self.solver).meta
+        if opts.fused is True and not meta.get("fused_stack"):
+            raise ValueError(
+                f"fused=True requires a solver with the 'fused_stack' "
+                f"capability; {self.solver!r} lacks it"
+            )
+        fused = (
+            bool(meta.get("force_fused")) if opts.fused == "auto"
+            else bool(opts.fused)
+        )
         self.executor = BucketExecutor(
             solver=self.solver,
             dtype=self.dtype,
@@ -283,6 +310,7 @@ class Engine:
             devices=devices,
             route=opts.route,
             route_check_tol=opts.route_check_tol,
+            fused=fused,
         )
 
     # -- stages ------------------------------------------------------------
@@ -355,6 +383,7 @@ class Engine:
             plan, labels, screen_stats, Theta, seconds, self.solver, lam,
             routed=self.executor.route, oversize=self.executor.last_oversize,
             assemble_seconds=self.executor.last_assemble_seconds,
+            dispatch_seconds=self.executor.last_dispatch_seconds,
         )
 
     # -- lambda path -------------------------------------------------------
@@ -412,7 +441,7 @@ class Engine:
                     if not step.is_reused(b)
                     and (
                         not self.executor.route
-                        or route_for(b.structure) == "iterative"
+                        or route_for(b.structure) in ("iterative", "fused")
                     )
                 ]
                 if fresh:
@@ -437,11 +466,11 @@ class Engine:
                 route = (
                     route_for(b.structure) if self.executor.route else "iterative"
                 )
-                if route not in ("iterative", "sharded"):
+                if route not in ("iterative", "fused", "sharded"):
                     continue
                 if warmable and step.is_reused(b):
                     bump("select.warm.reused")
-                elif warmable and route == "iterative":
+                elif warmable and route in ("iterative", "fused"):
                     bump("select.warm.merged")
                 else:
                     bump("select.warm.cold")
@@ -462,6 +491,7 @@ class Engine:
                 step.lam, routed=self.executor.route,
                 oversize=self.executor.last_oversize,
                 assemble_seconds=self.executor.last_assemble_seconds,
+                dispatch_seconds=self.executor.last_dispatch_seconds,
             )
             results.append(res)
             prev = res

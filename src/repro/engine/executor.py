@@ -44,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blocks as blocks_mod
-from repro.core.instrument import bump, counts
+from repro.core.instrument import bump, counts, timed_dispatch
 from repro.core.schedule import lpt_assign
 from repro.core.solvers import SOLVERS, WARM_START_SOLVERS
 from repro.core.solvers.closed_form import (
@@ -106,6 +106,14 @@ def compiled_bucket_solver(
                                                          solvers whose spec
                                                          consumes the Theta
                                                          seed directly
+
+    Every returned callable enforces the MIN-BATCH-2 rule (``waves.
+    min_batch2``): a single-lane stack is duplicated to 2 and the result
+    sliced back, because XLA specializes away unit batch dims and the
+    resulting codegen differs from the same lane at batch >= 2 by 1 ulp.
+    Pinning every launch to batch >= 2 is what makes results independent of
+    batch size — the invariant the wave packer's bitwise fused == unfused
+    equality stands on.
     """
     key = (
         solver, int(size), jnp.dtype(dtype).name, bool(warm), bool(warm_theta),
@@ -117,6 +125,8 @@ def compiled_bucket_solver(
             bump("executor.compiled_hit")
             return fn
         bump("executor.compiled_miss")
+        from repro.engine.waves import min_batch2  # local: avoid cycle
+
         solver_fn = SOLVERS[solver]
         opts = dict(opts_key)
         if warm and warm_theta:
@@ -128,7 +138,7 @@ def compiled_bucket_solver(
                     )
                 )(blocks, lams, W0, T0)
 
-            fn = jax.jit(run, donate_argnums=(2,) if _donate_supported() else ())
+            jitted = jax.jit(run, donate_argnums=(2,) if _donate_supported() else ())
         elif warm:
 
             def run(blocks, lams, W0):
@@ -136,7 +146,7 @@ def compiled_bucket_solver(
                     lambda Sb, lm, w0: solver_fn(Sb, lm, W0=w0, **opts)
                 )(blocks, lams, W0)
 
-            fn = jax.jit(run, donate_argnums=(2,) if _donate_supported() else ())
+            jitted = jax.jit(run, donate_argnums=(2,) if _donate_supported() else ())
         else:
 
             def run(blocks, lams):
@@ -144,7 +154,11 @@ def compiled_bucket_solver(
                     blocks, lams
                 )
 
-            fn = jax.jit(run)
+            jitted = jax.jit(run)
+
+        def fn(*args, _jitted=jitted):
+            return min_batch2(_jitted, *args)
+
         _COMPILED[key] = fn
         return fn
 
@@ -228,8 +242,12 @@ def dispatch_repair(
     )
     bump("executor.dispatches")
     if theta_warm:
-        return fn(sub, lams_d, W0, T0)
-    return fn(sub, lams_d, W0) if warm else fn(sub, lams_d)
+        out, _ = timed_dispatch(fn, sub, lams_d, W0, T0)
+    elif warm:
+        out, _ = timed_dispatch(fn, sub, lams_d, W0)
+    else:
+        out, _ = timed_dispatch(fn, sub, lams_d)
+    return out
 
 
 def solve_sharded_bucket(
@@ -274,8 +292,9 @@ def solve_sharded_bucket(
         lam = float(lams[i])
         S_sh = shard_gather(S, comp, mesh, dtype=np_dtype)
         theta0 = None if warm_thetas is None else warm_thetas[i]
-        res = glasso_sharded(
-            S_sh, lam, mesh=mesh, b=b, Theta0=theta0, kkt_target=tol
+        res, _ = timed_dispatch(
+            glasso_sharded, S_sh, lam, mesh=mesh, b=b, Theta0=theta0,
+            kkt_target=tol,
         )
         info["dispatched"] += 1
         info["inner_iters"] += res.inner_iters
@@ -375,6 +394,23 @@ class _Pending:
 
 
 @dataclass
+class _FusedLane:
+    """One fused-eligible bucket deferred into a (device, bin) megabatch.
+
+    The wave packer collects these during the bucket loop and launches one
+    ``kernels.bucket_glasso`` call per group; ``pending.out`` receives the
+    lane's (n, size, size) slice of the packed result."""
+
+    pending: _Pending
+    size: int                      # source bucket size (bin >= size)
+    n: int                         # blocks in the bucket
+    lams: Any                      # (n,) device lambda vector
+    W0: Any = None                 # warm covariance stack or None (cold)
+    T0: Any = None                 # warm Theta stack or None (cold)
+    scales: Any = None             # (n,) source-shape convergence scales
+
+
+@dataclass
 class BucketExecutor:
     """Solves plans; owns the per-path warm-start state.
 
@@ -388,6 +424,10 @@ class BucketExecutor:
     devices: list | None = None
     route: bool = True             # structure-routed ladder; False = PR-1 path
     route_check_tol: float = 1e-6  # KKT acceptance for closed-form candidates
+    # wave packer: fuse all small iterative buckets of a plan step into one
+    # bucket_glasso launch per size bin (resolved to a bool by the Engine
+    # from EngineOptions.fused; buckets routed "fused" fuse regardless)
+    fused: bool = False
     # bucket_key -> previous padded solution / input stacks (device arrays):
     # reused buckets warm-start from their own previous solution and skip the
     # host->device re-upload of their bit-identical padded blocks.
@@ -399,8 +439,16 @@ class BucketExecutor:
     # assembly-stage seconds of the MOST RECENT solve_plan call — surfaced
     # as GlassoResult.assemble_seconds (process-wide: engine.assemble_us)
     last_assemble_seconds: float = 0.0
+    # host seconds spent ISSUING async dispatches (closed-form, iterative,
+    # fused, repairs) in the MOST RECENT solve_plan call — surfaced as
+    # GlassoResult.dispatch_seconds so the launch overhead the wave packer
+    # targets is attributed to its own stage, not folded into solve time
+    last_dispatch_seconds: float = 0.0
 
     def __post_init__(self):
+        from repro.core.solvers import solver_spec
+        from repro.engine.waves import FUSED_BINS
+
         if self.solver not in SOLVERS:
             raise ValueError(
                 f"unknown solver {self.solver!r}; available: {sorted(SOLVERS)}"
@@ -409,6 +457,14 @@ class BucketExecutor:
         if self.devices is None:
             self.devices = list(jax.local_devices())
         self._opts_key = tuple(sorted(self.solver_opts.items()))
+        # fused eligibility: the solver must declare the fused_stack
+        # capability AND every solver opt must be one the fused kernel
+        # replays (anything else would silently change the packed solve)
+        meta = solver_spec(self.solver).meta
+        self._max_fused = int(meta.get("max_fused_size", FUSED_BINS[-1]))
+        self._fused_capable = bool(meta.get("fused_stack")) and set(
+            self.solver_opts
+        ) <= {"max_sweeps", "n_cd", "tol", "node_screen"}
 
     # -- placement ---------------------------------------------------------
 
@@ -554,12 +610,16 @@ class BucketExecutor:
         from repro.engine.planner import bucket_key  # local: avoid cycle at import
         from repro.engine.registry import route_for  # local: avoid cycle at import
 
+        from repro.engine.waves import fused_bin
+
         if self.route and len(plan.isolated):
             bump("router.route.singleton", int(len(plan.isolated)))
         self.last_oversize = {}
+        self.last_dispatch_seconds = 0.0
         placements = self._place(plan.buckets, priorities=priorities)
         pending: list[_Pending] = []
         sharded_pending: list[_Pending] = []
+        fused_groups: dict[tuple, list[_FusedLane]] = {}
         for bucket, device in zip(plan.buckets, placements):
             key = bucket_key(bucket)
             n = len(bucket.comps)
@@ -578,8 +638,9 @@ class BucketExecutor:
                 # KKT failures are known IMMEDIATELY (host), so their repair
                 # dispatches into the same async wave as everything else
                 # instead of serializing after the barrier.
-                out, ok = solve_chordal_bucket(
-                    bucket, np.full(n, lam), tol=self.route_check_tol
+                (out, ok), _ = timed_dispatch(
+                    solve_chordal_bucket,
+                    bucket, np.full(n, lam), tol=self.route_check_tol,
                 )
                 p = _Pending(bucket=bucket, out=out, ok=None, key=key)
                 if not ok.all():
@@ -607,7 +668,8 @@ class BucketExecutor:
                     tol=self.route_check_tol,
                     verify=bucket.structure != "pair",
                 )
-                theta, ok = fn(stacked, lams)
+                (theta, ok), dt = timed_dispatch(fn, stacked, lams)
+                self.last_dispatch_seconds += dt
                 bump("executor.dispatches")
                 pending.append(
                     _Pending(bucket=bucket, out=theta, ok=ok, stacked=stacked, key=key)
@@ -626,6 +688,22 @@ class BucketExecutor:
                 W0 = jax.device_put(W0, device)
                 if T0 is not None:
                     T0 = jax.device_put(T0, device)
+            fuse = (
+                route == "fused" or (route == "iterative" and self.fused)
+            ) and self._fused_capable and bucket.size <= self._max_fused
+            bin_ = fused_bin(bucket.size) if fuse else None
+            if bin_ is not None:
+                # wave packer: defer into the (device, bin) megabatch — the
+                # launch happens once per group after this loop
+                p = _Pending(bucket=bucket, out=None, stacked=stacked, key=key)
+                pending.append(p)
+                fused_groups.setdefault((device, bin_), []).append(
+                    _FusedLane(
+                        pending=p, size=bucket.size, n=n, lams=lams,
+                        W0=W0, T0=T0,
+                    )
+                )
+                continue
             fn = compiled_bucket_solver(
                 self.solver,
                 bucket.size,
@@ -635,13 +713,16 @@ class BucketExecutor:
                 opts_key=self._opts_key,
             )
             if T0 is not None:
-                out = fn(stacked, lams, W0, T0)
+                out, dt = timed_dispatch(fn, stacked, lams, W0, T0)
             elif W0 is not None:
-                out = fn(stacked, lams, W0)
+                out, dt = timed_dispatch(fn, stacked, lams, W0)
             else:
-                out = fn(stacked, lams)
+                out, dt = timed_dispatch(fn, stacked, lams)
+            self.last_dispatch_seconds += dt
             bump("executor.dispatches")
             pending.append(_Pending(bucket=bucket, out=out, stacked=stacked, key=key))
+
+        fused_sweeps = self._dispatch_fused(fused_groups, lam)
 
         # oversize buckets: mesh-spanning sharded solves, one blocking call
         # per giant block, while the small async dispatches above are already
@@ -683,6 +764,16 @@ class BucketExecutor:
             [p.out for p in pending if isinstance(p.out, jax.Array)]
             + [p.repair[1] for p in pending if p.repair is not None]
         )
+        for sw in fused_sweeps:
+            # per-launch sweeps are ready (same barrier); the saving is what
+            # the megabatch's slowest lane would have cost every other lane
+            # had they iterated in lockstep without in-kernel early exit
+            sw = np.asarray(sw)
+            if sw.size:
+                bump(
+                    "solver.fused.lockstep_sweeps_saved",
+                    int(sw.max()) * int(sw.size) - int(sw.sum()),
+                )
         for p in pending:
             if p.repair is not None:
                 idx, fixed = p.repair
@@ -709,10 +800,97 @@ class BucketExecutor:
         bump("engine.assemble_us", int(self.last_assemble_seconds * 1e6))
         return Theta
 
+    def _dispatch_fused(
+        self, groups: dict[tuple, list[_FusedLane]], lam: float
+    ) -> list:
+        """Launch every (device, bin) megabatch: ONE fused solver call per
+        group per wave, scattered back into each lane's ``pending.out``.
+
+        Packing is bitwise-transparent (see ``engine.waves``): blocks re-pad
+        with an identity diagonal, warm W stacks with 1+lam (the diagonal
+        KKT of padded coordinates, matching ``_warm_stack``), cold lanes
+        synthesize the pair the solver would have built (W0 = S + lam*I,
+        Theta0 = I), and each lane's convergence scale is computed at its
+        SOURCE shape — one batched launch per (device, size) — so packing
+        changes which executable runs, never any lane's tolerance or bits.
+        Returns the per-launch sweep-count arrays (read after the barrier
+        for ``solver.fused.lockstep_sweeps_saved``)."""
+        if not groups:
+            return []
+        from repro.engine.waves import (
+            bucket_scales,
+            compiled_fused_solver,
+            min_batch2,
+            repad_stack,
+        )
+
+        by_size: dict[tuple, list[_FusedLane]] = {}
+        for (device, _), lanes in groups.items():
+            for ln in lanes:
+                by_size.setdefault((device, ln.size), []).append(ln)
+        for lanes in by_size.values():
+            stacks = (
+                lanes[0].pending.stacked
+                if len(lanes) == 1
+                else jnp.concatenate([ln.pending.stacked for ln in lanes])
+            )
+            scales = bucket_scales(stacks)
+            off = 0
+            for ln in lanes:
+                ln.scales = scales[off:off + ln.n]
+                off += ln.n
+
+        lam_c = jnp.asarray(lam, self.dtype)
+        one = jnp.ones((), self.dtype)
+        sweeps_out = []
+        for (device, bin_), lanes in sorted(
+            groups.items(), key=lambda kv: (str(kv[0][0]), kv[0][1])
+        ):
+            blk_p, lam_p, sc_p, w_p, t_p = [], [], [], [], []
+            for ln in lanes:
+                stacked = ln.pending.stacked
+                blk_p.append(repad_stack(stacked, bin_, one))
+                lam_p.append(ln.lams)
+                sc_p.append(ln.scales)
+                if ln.W0 is None:
+                    # cold init at SOURCE shape — off-diagonal S + 0 is
+                    # exact; the diagonal is reset in-solver either way
+                    w = stacked + lam_c * jnp.eye(ln.size, dtype=self.dtype)
+                else:
+                    w = ln.W0
+                w_p.append(repad_stack(w, bin_, one + lam_c))
+                if ln.T0 is None:
+                    t = jnp.zeros((ln.n, bin_, bin_), self.dtype) + jnp.eye(
+                        bin_, dtype=self.dtype
+                    )
+                else:
+                    t = repad_stack(ln.T0, bin_, one)
+                t_p.append(t)
+
+            def cat(xs):
+                return xs[0] if len(xs) == 1 else jnp.concatenate(xs)
+
+            fn = compiled_fused_solver(bin_, self.dtype, self._opts_key)
+            (theta, sweeps), dt = timed_dispatch(
+                min_batch2, fn, cat(blk_p), cat(lam_p), cat(sc_p),
+                cat(w_p), cat(t_p),
+            )
+            self.last_dispatch_seconds += dt
+            bump("executor.dispatches")
+            bump("solver.fused.dispatches")
+            bump("solver.fused.blocks_packed", sum(ln.n for ln in lanes))
+            off = 0
+            for ln in lanes:
+                ln.pending.out = theta[off:off + ln.n, :ln.size, :ln.size]
+                off += ln.n
+            sweeps_out.append(sweeps)
+        return sweeps_out
+
     def _dispatch_repair(
         self, bucket: blocks_mod.Bucket, idx: np.ndarray, candidates, lam: float
     ):
         """Bucket-shaped wrapper over the shared ``dispatch_repair``."""
+        t0 = time.perf_counter()
         out = dispatch_repair(
             self.solver,
             self.dtype,
@@ -722,6 +900,7 @@ class BucketExecutor:
             np.full(int(idx.size), lam),
             candidates,
         )
+        self.last_dispatch_seconds += time.perf_counter() - t0
         return (idx, out)
 
     def _verify_and_fallback(self, pending: list[_Pending], lam: float) -> None:

@@ -64,12 +64,22 @@ class EngineOptions:
     output: str = "auto"
     stream: Any = None             # StreamConfig / kwargs dict default
     verify_tail: bool = False      # joint-only: exact tail KKT verification
+    # wave packer (DESIGN.md Section 16): True fuses all small iterative
+    # buckets into one bucket_glasso megabatch launch per size bin per wave
+    # (requires a solver with the "fused_stack" capability); False never
+    # fuses; "auto" fuses when the solver forces it ("fused_bcd") or a
+    # structure class is routed to "fused" (registry.set_route)
+    fused: bool | str = "auto"
     solver_opts: Mapping[str, Any] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.output not in ("dense", "sparse", "auto"):
             raise ValueError(
                 f"output must be 'dense', 'sparse' or 'auto', got {self.output!r}"
+            )
+        if self.fused not in (True, False, "auto"):
+            raise ValueError(
+                f"fused must be True, False or 'auto', got {self.fused!r}"
             )
         object.__setattr__(self, "solver_opts", dict(self.solver_opts))
 

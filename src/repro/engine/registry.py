@@ -107,8 +107,14 @@ def label_components(S, lam: float, *, backend: str = "host", **opts) -> np.ndar
 
 #: executor routes, cheapest first; "iterative" is the ladder's tail and the
 #: fallback target of every verified fast path ("sharded" blocks fall back
-#: to a single-device iterative solve — correct, but memory-bound)
-ROUTES = ("assemble", "closed_form", "chordal", "iterative", "sharded")
+#: to a single-device iterative solve — correct, but memory-bound).
+#: "fused" is the iterative tail's megabatched variant: small same-dtype
+#: buckets are re-packed across bucket boundaries into size-binned stacks
+#: and solved with one ``kernels.bucket_glasso`` launch per bin per wave
+#: (DESIGN.md Section 16); buckets too large for a bin, or a solver without
+#: the ``fused_stack`` capability, fall through to plain "iterative" — like
+#: every ladder rung, re-routing changes cost, never the answer
+ROUTES = ("assemble", "closed_form", "chordal", "iterative", "fused", "sharded")
 
 _ROUTE_OF: dict[str, str] = {
     "singleton": "assemble",

@@ -1,0 +1,120 @@
+"""Wave packer: cross-bucket megabatching for the fused bucket BCD.
+
+The planner's lifetime bucketing is what makes warm starts exact — every
+(size, structure, membership) gets its own bucket so a component's previous
+padded solution can follow it along a lambda path.  The price is dispatch
+fragmentation: a p=2400 path step can carry a hundred-odd iterative buckets
+of a handful of tiny blocks each, and the per-launch host overhead (not the
+math) becomes the solve stage (the ``bench_select`` warm-arm anomaly).  This
+module re-packs all fused-eligible iterative buckets of one plan step —
+across bucket boundaries — into size-binned megabatches and solves each bin
+with ONE ``kernels.bucket_glasso`` launch per wave.
+
+Bitwise contract (pinned by tests/test_fused.py):
+
+* **Bin re-padding is exact.**  Re-padding a (s, s) padded block into a
+  (bin, bin) slot with an identity diagonal changes no lane's bits: padded
+  columns are eq.-(10)-screened no-ops, the cross region stays exactly
+  zero, and the extra zeros drop out of every max-reduction.  The ONE
+  quantity that would change is the convergence scale ``mean|S - diag S|``
+  (denominator s^2 vs bin^2) — so ``bucket_scales`` computes it at the
+  SOURCE shape and the kernel takes it as a per-lane input.
+
+* **Warm and cold lanes share one signature.**  Cold lanes synthesize the
+  warm pair the solver would have built itself — W0 = S + lam*I (off the
+  diagonal S + 0 is exact; the diagonal is reset in-solver either way) and
+  Theta0 = I — so a megabatch freely mixes warm and cold source buckets.
+
+* **No launch has leading dim 1.**  XLA specializes unit batch dims (the
+  vmap squeezes away and dot codegen changes), making batch-1 results
+  differ by 1 ulp from the same lane at batch >= 2 — the only batch-size
+  dependence we measured.  ``min_batch2`` duplicates a single lane and
+  slices the result; ``compiled_bucket_solver`` applies the same rule to
+  UNfused launches, so fused == unfused holds lane-for-lane under ``==``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: padded megabatch sizes — multiples of 8 (TPU sublane) spanning the small
+#: iterative tail; a block bigger than the last bin is not fused-eligible
+FUSED_BINS = (8, 16, 32, 64)
+
+
+def fused_bin(size: int) -> int | None:
+    """Smallest bin that fits ``size``, or None (too big to fuse)."""
+    for b in FUSED_BINS:
+        if size <= b:
+            return b
+    return None
+
+
+def min_batch2(fn, *args):
+    """Call ``fn`` with every arg's leading dim >= 2, slicing back to 1.
+
+    The batch-1 codegen rule above — applied to fused launches here and to
+    unfused ones inside ``compiled_bucket_solver``."""
+    if args[0].shape[0] != 1:
+        return fn(*args)
+    doubled = fn(*(jnp.concatenate([a, a]) for a in args))
+    if isinstance(doubled, tuple):
+        return tuple(o[:1] for o in doubled)
+    return doubled[:1]
+
+
+def bucket_scales(stacked: jax.Array) -> jax.Array:
+    """Per-lane convergence scale at the SOURCE bucket shape: (n,) of
+    ``mean|S - diag S| + 1e-12`` — what ``glasso_bcd`` would have derived
+    for each lane had it been dispatched unfused.  One compiled entry per
+    (size, dtype) in the process-global cache; lanes from every bucket of
+    a size are batched through one call per wave."""
+    from repro.engine.executor import compiled_cached  # local: avoid cycle
+
+    s = stacked.shape[1]
+    key = ("__bucket_scales__", int(s), jnp.dtype(stacked.dtype).name)
+
+    def build():
+        def one(Sb):
+            off = jnp.abs(Sb - jnp.diag(jnp.diag(Sb)))
+            return jnp.mean(off) + jnp.asarray(1e-12, Sb.dtype)
+
+        return jax.jit(jax.vmap(one))
+
+    return min_batch2(compiled_cached(key, build), stacked)
+
+
+def repad_stack(stack: jax.Array, bin_: int, diag) -> jax.Array:
+    """(n, s, s) -> (n, bin, bin): zero border, ``diag`` on the padded
+    diagonal.  diag=1.0 re-pads S/Theta stacks (identity padding, matching
+    ``blocks.pad_block``); diag=1+lam re-pads W stacks (diagonal KKT of the
+    padded coordinates, matching ``BucketExecutor._warm_stack``)."""
+    n, s, _ = stack.shape
+    if s == bin_:
+        return stack
+    eye = jnp.eye(bin_, dtype=stack.dtype)
+    base = jnp.zeros((n, bin_, bin_), stack.dtype) + diag * eye
+    return base.at[:, :s, :s].set(stack)
+
+
+def compiled_fused_solver(bin_: int, dtype, opts_key: tuple):
+    """Fetch-or-build the fused megabatch solver for one (bin, dtype, opts).
+
+    Returned callable: fn(blocks, lams, scales, W0, T0) -> (Theta, sweeps),
+    all leading dims N.  Cached alongside the unfused executables in the
+    process-global compiled cache."""
+    from repro.engine.executor import compiled_cached  # local: avoid cycle
+    from repro.kernels.bucket_glasso import fused_bcd_stack
+
+    key = ("__fused_bcd__", int(bin_), jnp.dtype(dtype).name, opts_key)
+
+    def build():
+        opts = dict(opts_key)
+
+        def run(blocks, lams, scales, W0, T0):
+            return fused_bcd_stack(blocks, lams, scales, W0, T0, **opts)
+
+        return run
+
+    return compiled_cached(key, build)

@@ -63,7 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.instrument import bump
+from repro.core.instrument import bump, timed_dispatch
 from repro.core.solvers.closed_form import kkt_ok_stack
 from repro.core.solvers.protocol import solver_spec
 from repro.core.sparse import resolve_output
@@ -408,8 +408,9 @@ class JointEngine:
                 # host direct solve: no device round-trip for the candidate
                 # (the padded class stack is only re-read on fallback, from
                 # the host copy the bucket already holds)
-                out, ok = solve_joint_chordal_bucket(
-                    bucket, plan, tol=self.route_check_tol
+                (out, ok), _ = timed_dispatch(
+                    solve_joint_chordal_bucket,
+                    bucket, plan, tol=self.route_check_tol,
                 )
                 bump("joint.dispatches")
                 bump("joint.closed_form_blocks", n)
@@ -423,7 +424,7 @@ class JointEngine:
                     bucket.size, plan.K, self.dtype, plan.penalty,
                     tol=self.route_check_tol, inner="forest",
                 )
-                out, ok = fn(stacked, lam1s, lam2s)
+                (out, ok), _ = timed_dispatch(fn, stacked, lam1s, lam2s)
                 bump("joint.dispatches")
                 bump("joint.closed_form_blocks", n)
             elif bucket.structure == "joint_shared" and self.route:
@@ -434,7 +435,7 @@ class JointEngine:
                     tol=self.route_check_tol, inner=self.effective_solver,
                     opts_key=self._effective_opts_key,
                 )
-                out, ok = fn(stacked, lam1s, lam2s)
+                (out, ok), _ = timed_dispatch(fn, stacked, lam1s, lam2s)
                 bump("joint.dispatches")
                 bump("joint.shared_blocks", n)
             else:
@@ -442,7 +443,7 @@ class JointEngine:
                     self.solver, bucket.size, plan.K, self.dtype,
                     plan.penalty, opts_key=self._opts_key,
                 )
-                out = fn(stacked, lam1s, lam2s)
+                out, _ = timed_dispatch(fn, stacked, lam1s, lam2s)
                 ok = None
                 bump("joint.dispatches")
             pending.append([bucket, out, ok])
@@ -539,7 +540,9 @@ class JointEngine:
             warm=True, opts_key=tuple(sorted(opts.items())),
         )
         bump("joint.dispatches")
-        return fn(
+        out, _ = timed_dispatch(
+            fn,
             sub, jnp.asarray(lam1s, self.dtype), jnp.asarray(lam2s, self.dtype),
             W0, T0,
         )
+        return out

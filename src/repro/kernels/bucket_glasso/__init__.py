@@ -1,0 +1,14 @@
+"""Fused in-kernel small-block BCD over a packed bucket stack.
+
+The kernel family behind the executor's wave packer (DESIGN.md Section 16):
+same-dtype iterative small buckets are re-packed across bucket boundaries
+into size-binned megabatches and solved with ONE launch per bin per wave —
+outer BCD sweeps, inner lasso CD, eq.-(10) node screening and per-block
+convergence all run inside the kernel, so a converged block exits early
+instead of sweeping in lockstep with the slowest block of its dispatch.
+"""
+
+from repro.kernels.bucket_glasso.ops import fused_bcd_stack
+from repro.kernels.bucket_glasso.ref import fused_bcd_ref_stack, fused_bcd_single
+
+__all__ = ["fused_bcd_stack", "fused_bcd_ref_stack", "fused_bcd_single"]

@@ -1,0 +1,60 @@
+"""Public wrapper for the fused bucket BCD (backend dispatch).
+
+``fused_bcd_stack`` is what the executor's wave packer calls: one launch per
+(bin, dtype, opts) megabatch.  On TPU it is the Pallas kernel — grid
+programs run sequentially per TensorCore, so each block's sweep loop exits
+the moment IT converges.  Off-TPU the vmapped jnp reference runs instead
+(same bits lane-for-lane; the lockstep compute waste is SIMD-inherent there
+and only the dispatch saving remains — which on CPU is the dominant cost of
+the many-tiny-buckets tail anyway, see bench_fused).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bucket_glasso.bucket_glasso import fused_bcd_pallas
+from repro.kernels.bucket_glasso.ref import fused_bcd_ref_stack
+
+#: above this padded bin, skip the one-tile-per-program Pallas path (the
+#: wave packer never bins past 64; anything larger is a direct caller)
+_PALLAS_SIZE_CAP = 256
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_bcd_stack(
+    blocks: jax.Array,
+    lams: jax.Array,
+    scales: jax.Array,
+    W0: jax.Array,
+    T0: jax.Array,
+    *,
+    max_sweeps: int = 100,
+    n_cd: int = 100,
+    tol: float = 1e-6,
+    node_screen: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Solve a packed (N, bin, bin) megabatch; returns (Theta, sweeps).
+
+    ``lams``/``scales`` are per-lane (N,) — lanes from different buckets
+    (and, over the serving path, different lambdas) share one executable.
+    Every lane carries its (W0, T0) warm pair; cold lanes are synthesized by
+    the packer (``engine.waves``)."""
+    N, b, _ = blocks.shape
+    opts = dict(
+        max_sweeps=max_sweeps, n_cd=n_cd, tol=tol, node_screen=node_screen
+    )
+    if not _is_tpu() or b > _PALLAS_SIZE_CAP:
+        return fused_bcd_ref_stack(blocks, lams, scales, W0, T0, **opts)
+    theta, sweeps = fused_bcd_pallas(
+        blocks,
+        lams.reshape(N, 1).astype(blocks.dtype),
+        scales.reshape(N, 1).astype(blocks.dtype),
+        W0,
+        T0,
+        **opts,
+    )
+    return theta, sweeps.reshape(N)

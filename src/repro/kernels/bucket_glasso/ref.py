@@ -1,0 +1,150 @@
+"""jnp reference for the fused bucket BCD — ``glasso_bcd`` per packed lane.
+
+``fused_bcd_single`` is ``core.solvers.bcd.glasso_bcd`` with two deltas that
+make it PACKABLE across bucket boundaries without changing any lane's bits:
+
+* **Warm inputs are mandatory.**  Every lane carries a (W0, Theta0) pair, so
+  one compiled signature covers a megabatch that mixes warm and cold source
+  buckets.  Cold lanes pass W0 = S + lam*I (bitwise-identical to the cold
+  init: the diagonal is reset from S either way and lam*0 adds nothing
+  off-diagonal) and Theta0 = I (B_init off-diagonal becomes -0.0 where the
+  cold path had +0.0 — equal under ``==``, the repo's bitwise gate).
+
+* **The convergence scale is an input.**  ``glasso_bcd`` derives its sweep
+  and CD tolerances from ``mean|S - diag S| + 1e-12`` of ITS OWN padded
+  block.  Re-padding a (s, s) lane into a (bin, bin) slot keeps every other
+  quantity exact (padded columns are screened no-ops, the cross region stays
+  exactly zero, extra zeros drop out of max-reductions) but changes the mean
+  denominator from s^2 to bin^2 — so the packer precomputes the scale at the
+  SOURCE shape (``engine.waves.bucket_scales``) and each lane solves against
+  the tolerance its unfused dispatch would have used.
+
+Everything else — inner ``_lasso_cd``, column update, sweep loop, Theta
+recovery — is imported from / verbatim to ``bcd.py``; tests/test_fused.py
+pins the lane-for-lane ``==``-equality against per-bucket ``glasso_bcd``.
+
+The second return is the per-lane SWEEP COUNT: under ``vmap`` the while_loop
+is select-masked (converged lanes freeze, so packing cannot change results)
+but every lane still pays the slowest lane's sweeps in compute — the count
+is what lets the executor report ``solver.fused.lockstep_sweeps_saved``, the
+work the Pallas kernel's genuine per-block early exit avoids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers.bcd import _lasso_cd
+
+
+def fused_bcd_single(
+    S: jax.Array,
+    lam: jax.Array,
+    scale: jax.Array,
+    W0: jax.Array,
+    Theta0: jax.Array,
+    *,
+    max_sweeps: int = 100,
+    n_cd: int = 100,
+    tol: float = 1e-6,
+    node_screen: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One packed lane: ``glasso_bcd`` with injected warm pair + scale.
+
+    Returns (Theta, sweeps).  ``S`` may be a source block re-padded into a
+    larger bin (identity diagonal, zero off-diagonal): padded columns are
+    eq.-(10)-screened exactly and the [:s, :s] slice of the result equals
+    the unfused solve of the (s, s) block bit for bit (up to zero signs).
+    """
+    b = S.shape[0]
+    dtype = S.dtype
+    lam = jnp.asarray(lam, dtype)
+    # Diagonal KKT is exact at the solution; enforce from the start.
+    W_init = jnp.where(jnp.eye(b, dtype=bool), jnp.diag(S) + lam, W0)
+    d = jnp.diagonal(Theta0)
+    d = jnp.where(d > 0, d, jnp.ones((), dtype))  # PD => d > 0; belt+braces
+    B_init = jnp.where(jnp.eye(b, dtype=bool), 0.0, -(Theta0 / d[None, :]))
+    cd_tol = jnp.asarray(tol, dtype) * scale
+
+    def column_update(j, W, B):
+        s12 = S[:, j].at[j].set(0.0)
+        screened = jnp.max(jnp.abs(s12)) <= lam
+
+        def solve_col(operand):
+            W, beta0 = operand
+            beta = _lasso_cd(W, s12, lam, beta0, j, n_cd=n_cd, tol=cd_tol)
+            return beta
+
+        def zero_col(operand):
+            _, beta0 = operand
+            return jnp.zeros_like(beta0)
+
+        if node_screen:
+            beta = jax.lax.cond(screened, zero_col, solve_col, (W, B[:, j]))
+        else:
+            beta = solve_col((W, B[:, j]))
+        w12 = (W @ beta).at[j].set(0.0)
+        W = W.at[:, j].set(w12.at[j].set(W[j, j]))
+        W = W.at[j, :].set(w12.at[j].set(W[j, j]))
+        return W, B.at[:, j].set(beta)
+
+    def sweep(carry):
+        W, B, _, it = carry
+        W_old = W
+
+        def body(j, wb):
+            W, B = wb
+            return column_update(j, W, B)
+
+        W, B = jax.lax.fori_loop(0, b, body, (W, B))
+        delta = jnp.max(jnp.abs(W - W_old))
+        return W, B, delta, it + 1
+
+    def cond(carry):
+        _, _, delta, it = carry
+        return jnp.logical_and(delta > tol * scale, it < max_sweeps)
+
+    W, B, delta, _ = sweep((W_init, B_init, jnp.asarray(jnp.inf, dtype), jnp.int32(0)))
+    W, B, _, sweeps = jax.lax.while_loop(cond, sweep, (W, B, delta, jnp.int32(1)))
+
+    # Recover Theta column-wise from the final (W, B).
+    def theta_col(j):
+        beta = B[:, j]
+        w12 = W[:, j].at[j].set(0.0)
+        t22 = 1.0 / (W[j, j] - w12 @ beta)
+        col = -beta * t22
+        return col.at[j].set(t22)
+
+    Theta = jax.vmap(theta_col, out_axes=1)(jnp.arange(b))
+    return 0.5 * (Theta + Theta.T), sweeps
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_sweeps", "n_cd", "tol", "node_screen")
+)
+def fused_bcd_ref_stack(
+    blocks: jax.Array,
+    lams: jax.Array,
+    scales: jax.Array,
+    W0: jax.Array,
+    T0: jax.Array,
+    *,
+    max_sweeps: int = 100,
+    n_cd: int = 100,
+    tol: float = 1e-6,
+    node_screen: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """vmapped reference over a packed (N, bin, bin) megabatch.
+
+    Returns (Theta (N, bin, bin), sweeps (N,) int32).  Under vmap the sweep
+    while_loop runs to the batch max with converged lanes select-frozen, so
+    per-lane results are independent of what the lane is packed with — the
+    property the wave packer's bitwise gate rests on."""
+    fn = functools.partial(
+        fused_bcd_single,
+        max_sweeps=max_sweeps, n_cd=n_cd, tol=tol, node_screen=node_screen,
+    )
+    return jax.vmap(fn)(blocks, lams, scales, W0, T0)

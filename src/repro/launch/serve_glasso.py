@@ -128,8 +128,23 @@ COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
     select.stars.subsamples      sum   StARS subsample paths run
     select.cv.folds              sum   CV fold paths run
     engine.screen_us             sum   screening wall time (microseconds)
-    engine.solve_us              sum   dispatch+verify wall time (us)
+    engine.solve_us              sum   device-solve+verify wall time (us)
     engine.assemble_us           sum   result-assembly wall time (us)
+    engine.dispatch.count        sum   bucket-dispatch chokepoint calls
+                                       (every solver launch any engine or
+                                       the serving batcher issued)
+    engine.dispatch.us           sum   host time spent issuing them (async
+                                       enqueue overhead for device routes;
+                                       the blocking host call for the
+                                       chordal/sharded routes)
+    solver.fused.dispatches      sum   fused megabatch launches (one per
+                                       size bin per wave — DESIGN.md S.16)
+    solver.fused.blocks_packed   sum   blocks packed across bucket
+                                       boundaries into those launches
+    solver.fused.lockstep_sweeps_saved
+                                 sum   per-launch sum of max(sweeps) -
+                                       sweeps_i: BCD sweeps the in-kernel
+                                       early exit avoids vs lockstep
     result.bytes_peak            peak  resident bytes of assembled results
 
 SPARSE RESULTS (``output=``): the server-level ``output`` ("dense" /
@@ -165,7 +180,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from repro.core.instrument import bump, counts
+from repro.core.instrument import bump, counts, timed_dispatch
 from repro.launch.control_plane import (
     AdmissionQueue,
     DataSpec,
@@ -1136,11 +1151,12 @@ class GlassoServer:
                 continue
             if route == "chordal":
                 solved = [
-                    solve_chordal_bucket(
+                    timed_dispatch(
+                        solve_chordal_bucket,
                         pb.bucket,
                         np.full(len(pb.bucket.comps), pb.request.lam),
                         tol=self.route_check_tol,
-                    )
+                    )[0]
                     for pb in placed
                 ]
                 outs[(size, route)] = np.concatenate([s[0] for s in solved])
@@ -1161,7 +1177,7 @@ class GlassoServer:
                             pb.bucket.structure != "pair" for pb in placed
                         ),
                     )
-                    theta, ok = fn(stacked, lams)
+                    (theta, ok), _ = timed_dispatch(fn, stacked, lams)
                     outs[(size, route)] = theta
                     oks[(size, route)] = ok
                     bump("serve.fastpath_blocks", n_blocks)
@@ -1173,7 +1189,9 @@ class GlassoServer:
                         warm=False,
                         opts_key=self._opts_key,
                     )
-                    outs[(size, route)] = fn(stacked, lams)
+                    outs[(size, route)], _ = timed_dispatch(
+                        fn, stacked, lams
+                    )
                 bump("serve.dispatches")
             n_reqs = len({id(pb.request) for pb in placed})
             if n_reqs > 1:
@@ -1265,6 +1283,7 @@ def serve_stats() -> dict[str, int | float]:
         **counts("serve."),
         **counts("stream."),
         **counts("solver.oversize."),
+        **counts("solver.fused."),
         **counts("joint."),
         **counts("select."),
         **counts("engine."),

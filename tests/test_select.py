@@ -250,7 +250,7 @@ def test_select_path_ebic_report_shape(rng):
     assert rep.detail == {"gamma": 0.5, "n": 100}
     assert 0.0 <= rep.warm_fraction <= 1.0
     for st in rep.stages_us:
-        assert set(st) == {"screen_us", "solve_us", "assemble_us"}
+        assert set(st) == {"screen_us", "solve_us", "dispatch_us", "assemble_us"}
         assert all(v >= 0 for v in st.values())
 
 
