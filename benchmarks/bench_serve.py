@@ -35,6 +35,17 @@ total throughput regresses >20% against the committed baseline (with
 absolute noise floors — CI timers are coarse).  ``--smoke`` is the fast
 in-process control-plane gate for CI.
 
+OBSERVABILITY PHASES (DESIGN.md Section 17): the measured loop's web
+latencies are re-derived SERVER-SIDE from the ``serve.request_seconds``
+histogram (``REGISTRY.quantile(..., tenant="web", slo="interactive")``)
+with an exact count reconciliation and a generous divergence gate against
+the client-side p99 (the histogram estimate is a bucket upper bound, one
+1.5x ratio wide).  A traced ``submit(PathSpec)`` request must produce a
+span tree that reconciles with its own wall time and exports valid Chrome
+trace JSON (written to ``TRACE_submit_path.json`` — a CI artifact); the
+same path spec through ``EngineOptions(trace=False)`` measures tracing
+overhead, gated at 5% (+10 ms slack for coarse CI timers).
+
     PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] \
         [--json BENCH_serve.json] [--check benchmarks/baseline_serve.json]
 """
@@ -63,6 +74,16 @@ NOISY_BURST = 3.0
 # push p99/throughput past baseline*1.2 AND the floor simultaneously
 P99_FLOOR_S = 0.25
 THROUGHPUT_FLOOR = 0.5  # req/s
+
+# tracing-overhead gate: traced median <= untraced * CAP + SLACK (the slack
+# absorbs coarse shared-CI timers on a tens-of-ms path solve)
+TRACE_OVERHEAD_CAP = 1.05
+TRACE_OVERHEAD_SLACK_S = 0.010
+# server-side histogram p99 vs client-side p99: the estimate is the upper
+# bound of a 1.5x-wide bucket and the client adds submit/wakeup overhead,
+# so the two only have to agree within a factor of 2 (+50 ms)
+P99_DIVERGENCE_FACTOR = 2.0
+P99_DIVERGENCE_SLACK_S = 0.05
 
 
 def _dense_cases():
@@ -107,10 +128,12 @@ def run(log=print) -> dict:
         DenseSpec,
         JointSpec,
         Overload,
+        PathSpec,
         Quota,
         RequestMeta,
     )
     from repro.launch.serve_glasso import GlassoServer
+    from repro.obs.metrics import REGISTRY
 
     (S_fp, lam_fp), (S_it, lam_it) = _dense_cases()
     X, lam_x = _data_case()
@@ -248,6 +271,87 @@ def run(log=print) -> dict:
         cache_hit_s = time.perf_counter() - t0
         cache_hits = count("serve.cache.hits") - hits0
 
+        # server-side latency: the same web/interactive p99 the clients
+        # measured, re-derived from the serve.request_seconds histogram
+        # (count reconciliation is exact; the quantile is a bucket upper
+        # bound, so the cross-check gate is generous by design)
+        n_web = len(lat["web"])
+        hist_count = REGISTRY.histogram_totals(
+            "serve.request_seconds", tenant="web", slo="interactive"
+        )["count"]
+        assert hist_count == n_web, (
+            f"histogram saw {hist_count} web/interactive requests, "
+            f"clients measured {n_web}"
+        )
+        server_p99 = REGISTRY.quantile(
+            "serve.request_seconds", 0.99, tenant="web", slo="interactive"
+        )
+        client_p99 = _percentile(lat["web"], 99)
+        lo_gate = client_p99 / P99_DIVERGENCE_FACTOR - P99_DIVERGENCE_SLACK_S
+        hi_gate = client_p99 * P99_DIVERGENCE_FACTOR + P99_DIVERGENCE_SLACK_S
+        assert lo_gate <= server_p99 <= hi_gate, (
+            f"server-side p99 {server_p99:.4f}s diverges from client-side "
+            f"{client_p99:.4f}s (gate [{lo_gate:.4f}, {hi_gate:.4f}])"
+        )
+        metrics_text = server.metrics()
+        assert "serve_request_seconds_bucket" in metrics_text, (
+            "metrics() exposition is missing the latency histogram"
+        )
+
+        # traced PathSpec: the span tree must reconcile with wall time and
+        # export valid Chrome trace JSON (a CI artifact)
+        path_spec = dict(grid=4, criterion="ebic", n=200)
+        sel = server.submit(
+            PathSpec(S=S_it, **path_spec),
+            meta=RequestMeta(tenant="web", slo="batch"),
+        ).result(timeout=600)
+        tr = sel.result.trace
+        assert tr is not None and tr.name == "serve.request", (
+            "served path result carried no request trace"
+        )
+        child_sum = sum(sp.seconds for sp in tr.children(tr.root_id))
+        assert child_sum <= tr.wall_seconds + 1e-3, (
+            f"direct-child span sum {child_sum:.4f}s exceeds request wall "
+            f"{tr.wall_seconds:.4f}s"
+        )
+        root = tr.root
+        for sp in tr.spans:
+            assert sp.t0 >= root.t0 - 1e-9 and sp.t1 <= root.t1 + 1e-9, (
+                f"span {sp.name} escapes the request window"
+            )
+        chrome = tr.to_chrome_json("TRACE_submit_path.json")
+        events = json.loads(chrome)["traceEvents"]
+        assert events and all(
+            e["ph"] == "M" or (e["ts"] >= 0 and e["dur"] >= 0)
+            for e in events
+        ), "Chrome trace export produced malformed events"
+        trace_spans = len(tr.spans)
+
+    # tracing-overhead arms: the identical path spec through a traced and
+    # an untraced server (compiled cache is process-global and warm, so
+    # the arms differ only by span recording)
+    def _path_arm(trace_flag):
+        arm_opts = EngineOptions(
+            solver="bcd", solver_opts={"tol": 1e-7}, trace=trace_flag
+        )
+        with GlassoServer(options=arm_opts) as srv:
+            srv.submit(PathSpec(S=S_it, **path_spec)).result(timeout=600)
+            samples = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                srv.submit(PathSpec(S=S_it, **path_spec)).result(timeout=600)
+                samples.append(time.perf_counter() - t0)
+        return float(np.median(samples))
+
+    untraced_path_s = _path_arm(False)
+    traced_path_s = _path_arm(True)
+    overhead_cap = untraced_path_s * TRACE_OVERHEAD_CAP + TRACE_OVERHEAD_SLACK_S
+    assert traced_path_s <= overhead_cap, (
+        f"tracing overhead: traced path median {traced_path_s:.4f}s > "
+        f"untraced {untraced_path_s:.4f}s * {TRACE_OVERHEAD_CAP} + "
+        f"{TRACE_OVERHEAD_SLACK_S}s"
+    )
+
     completed = sum(len(v) for v in lat.values()) + noisy["ok"]
     rec = {
         "clients": 6,
@@ -270,6 +374,13 @@ def run(log=print) -> dict:
         "coalesced_blocks": int(count("serve.coalesced_blocks")),
         "cache_hits": int(cache_hits),
         "cache_hit_seconds": round(cache_hit_s, 6),
+        "server_interactive_p99_s": round(server_p99, 5),
+        "traced_path_s": round(traced_path_s, 5),
+        "untraced_path_s": round(untraced_path_s, 5),
+        "trace_overhead_ratio": round(
+            traced_path_s / untraced_path_s if untraced_path_s > 0 else 1.0, 4
+        ),
+        "trace_spans": int(trace_spans),
     }
     # control-plane facts are hard asserts — quantities go to the baseline
     assert rec["rejected_quota"] > 0, "noisy tenant was never throttled"
@@ -292,6 +403,14 @@ def run(log=print) -> dict:
         f"cache: repeat hit in {rec['cache_hit_seconds'] * 1e3:.2f}ms "
         f"({rec['cache_hits']} hits); coalesced {rec['coalesced_blocks']} "
         f"blocks across requests"
+    )
+    log(
+        f"obs: server-side p99={rec['server_interactive_p99_s'] * 1e3:.1f}ms "
+        f"(client {rec['interactive_p99_s'] * 1e3:.1f}ms); traced path "
+        f"{rec['traced_path_s'] * 1e3:.1f}ms vs untraced "
+        f"{rec['untraced_path_s'] * 1e3:.1f}ms "
+        f"(x{rec['trace_overhead_ratio']}); {rec['trace_spans']} spans -> "
+        "TRACE_submit_path.json"
     )
     return rec
 
@@ -351,6 +470,12 @@ def smoke(log=print) -> None:
             warnings.simplefilter("ignore", DeprecationWarning)
             res_legacy = server.submit(S, lam).result(timeout=300)
         assert np.array_equal(res_legacy.Theta, ref.Theta)
+        # observability: the request trace rode the result and the /metrics
+        # surface exposes the labeled latency histogram
+        assert res.trace is not None and res.trace.name == "serve.request"
+        assert res.trace.root.attrs["kind"] == "dense"
+        m = server.metrics()
+        assert "serve_request_seconds_bucket" in m and "serve_requests" in m
 
     # deadline: queued request expires before a late-starting batcher runs
     server = GlassoServer(options=options, fast_path=False)
@@ -369,7 +494,7 @@ def smoke(log=print) -> None:
     assert count("serve.rejected.deadline") >= 1
     log(
         "serve smoke OK: spec==engine, cache hit, typed quota Overload, "
-        "deadline drop, legacy shim equivalent"
+        "deadline drop, legacy shim equivalent, trace + metrics surface"
     )
 
 

@@ -62,7 +62,9 @@ def save_checkpoint(directory, step: int, tree, *, mesh_shape=None) -> Path:
         "shapes": [list(np.shape(leaf)) for leaf in leaves],
         "dtypes": [str(np.asarray(leaf).dtype) for leaf in leaves],
         "mesh_shape": list(mesh_shape) if mesh_shape else None,
-        "time": time.time(),
+        # manifest wants a real epoch timestamp (when was this written),
+        # not a duration — the one legitimate wall-clock read in src/
+        "time": time.time(),  # noqa: TID251
     }
     with open(tmp / "manifest.json", "w") as f:
         json.dump(manifest, f)

@@ -5,21 +5,37 @@ union-find pass per ``glasso_path`` call", "this serving batch hit the
 compiled-solver cache N times" — so the counters live in one tiny module that
 every layer (core, engine, launch) can bump without import cycles.  Thread
 safe: the serving endpoint bumps from worker threads.
+
+Since the observability PR this module is a thin back-compat shim over
+``repro.obs.metrics.REGISTRY``: the flat dotted counter namespace is one
+store inside the labeled registry, so ``render_prometheus()`` exposes
+every counter here alongside the labeled serving histograms.  The shim
+preserves the original contract bitwise — every name, the
+``counts``/``tail_counts`` views, watermark semantics, and the int-typed
+read surface.  Internally values may accumulate as floats (the
+``engine.dispatch.us`` fix: ``int(dt * 1e6)`` per call dropped sub-µs
+enqueues to 0, undercounting fused-wave dispatch overhead); reads round
+once at the surface instead of truncating per event.
 """
 
 from __future__ import annotations
 
-import threading
 import time
-from collections import Counter
 
-_LOCK = threading.Lock()
-_COUNTS: Counter[str] = Counter()
+from repro.obs import trace as _trace
+from repro.obs.metrics import REGISTRY as _REGISTRY
+
+# Monotonic clock hook — tests monkeypatch this to a fake clock to pin
+# the float-accumulation contract of timed_dispatch.
+_clock = time.perf_counter
+
+
+def _as_int(v: float) -> int:
+    return v if isinstance(v, int) else int(round(v))
 
 
 def bump(name: str, n: int = 1) -> None:
-    with _LOCK:
-        _COUNTS[name] += n
+    _REGISTRY.bump_flat(name, n)
 
 
 def timed_dispatch(call, *args, **kwargs):
@@ -33,13 +49,21 @@ def timed_dispatch(call, *args, **kwargs):
     (chordal, sharded) the dispatch IS the solve, so their entries measure
     the blocking host call.  Wrapped at every chokepoint: the single-class
     executor, the joint engine, the sharded per-block loop, the chordal
-    host solve, and the serving batcher."""
-    t0 = time.perf_counter()
-    out = call(*args, **kwargs)
-    dt = time.perf_counter() - t0
-    with _LOCK:
-        _COUNTS["engine.dispatch.count"] += 1
-        _COUNTS["engine.dispatch.us"] += int(dt * 1e6)
+    host solve, and the serving batcher.
+
+    The µs ledger accumulates in FLOAT and rounds only at the read
+    surface (``count``/``counts``), so sub-microsecond enqueues aggregate
+    instead of truncating to zero.  When a request trace is active each
+    dispatch also records an ``engine.dispatch`` span, which is how every
+    chokepoint shows up in Chrome-trace exports for free."""
+    with _trace.span(
+        "engine.dispatch", call=getattr(call, "__name__", str(call))
+    ):
+        t0 = _clock()
+        out = call(*args, **kwargs)
+        dt = _clock() - t0
+    _REGISTRY.bump_flat("engine.dispatch.count", 1)
+    _REGISTRY.bump_flat("engine.dispatch.us", dt * 1e6)
     return out, dt
 
 
@@ -49,29 +73,25 @@ def set_peak(name: str, value: int) -> None:
     Watermarks (e.g. ``stream.bytes_peak``) share the counter namespace so
     they appear in ``counts()``/``serve_stats()`` like any other counter, but
     they record a maximum, not a sum."""
-    with _LOCK:
-        if value > _COUNTS[name]:
-            _COUNTS[name] = int(value)
+    _REGISTRY.set_peak_flat(name, int(value))
 
 
 def count(name: str) -> int:
-    with _LOCK:
-        return _COUNTS[name]
+    return _as_int(_REGISTRY.flat_value(name))
 
 
 def counts(prefix: str = "") -> dict[str, int]:
-    with _LOCK:
-        return {k: v for k, v in _COUNTS.items() if k.startswith(prefix)}
+    return {k: _as_int(v) for k, v in _REGISTRY.flat_items(prefix).items()}
 
 
 def tail_counts(prefix: str) -> dict[str, int]:
     """Counters under ``prefix``, keyed by the remainder of the name —
     e.g. ``tail_counts("router.route.")`` -> {"singleton": 812, "tree": 37}.
     The router/benchmark convenience view of the per-route counters."""
-    with _LOCK:
-        return {
-            k[len(prefix):]: v for k, v in _COUNTS.items() if k.startswith(prefix)
-        }
+    return {
+        k[len(prefix):]: _as_int(v)
+        for k, v in _REGISTRY.flat_items(prefix).items()
+    }
 
 
 def route_mix_counts() -> dict[str, int]:
@@ -81,7 +101,8 @@ def route_mix_counts() -> dict[str, int]:
 
 
 def reset(prefix: str = "") -> None:
-    """Reset all counters with the given prefix ('' resets everything)."""
-    with _LOCK:
-        for k in [k for k in _COUNTS if k.startswith(prefix)]:
-            del _COUNTS[k]
+    """Reset all counters with the given prefix ('' resets everything).
+    Labeled registry families under the same dotted prefix (e.g. the
+    ``serve.request_seconds`` histogram) reset with it, so benchmark
+    warmup resets clear both surfaces at once."""
+    _REGISTRY.reset(prefix)

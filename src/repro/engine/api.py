@@ -17,7 +17,7 @@ cross-request coalescing.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from contextlib import nullcontext
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,41 +30,105 @@ from repro.core.sparse import SparseTheta, resolve_output, result_nbytes
 from repro.engine.executor import BucketExecutor
 from repro.engine.options import EngineOptions, normalize_options
 from repro.engine.planner import build_plan_incremental, plan_path
+from repro.obs.trace import Trace, current_trace, span, trace_request
+
+#: canonical stage order of the ``result.stages()`` view
+STAGES = ("screen", "solve", "dispatch", "assemble")
 
 
-@dataclass
 class GlassoResult:
-    lam: float
-    Theta: np.ndarray              # dense (p, p) — or a SparseTheta when
+    """One solve's answer + attribution.
+
+    Timing lives in ONE place — the ``stages()`` view (seconds per
+    canonical stage: screen / solve / dispatch / assemble) — and the
+    historical per-stage attributes (``solve_seconds``,
+    ``assemble_seconds``, ``dispatch_seconds``, ``screen_seconds``,
+    ``stages_us``) are properties over it.  ``trace`` carries the full
+    request :class:`repro.obs.Trace` (span tree, per-wave dispatch
+    detail, cross-thread attribution) when the solve ran traced;
+    ``trace.to_chrome_json(path)`` exports it for Perfetto."""
+
+    def __init__(
+        self,
+        lam: float,
+        Theta,                     # dense (p, p) — or a SparseTheta when
                                    # output resolved to "sparse"
-    labels: np.ndarray
-    screen: ScreenStats | None
-    solve_seconds: float           # device solve + verify (assembly and
+        labels: np.ndarray,
+        screen: ScreenStats | None,
+        solve_seconds: float,      # device solve + verify (assembly and
                                    # dispatch-issue overhead EXCLUDED)
-    solver: str
-    block_sizes: list[int] = field(default_factory=list)
-    route_mix: dict = field(default_factory=dict)  # structure class -> #blocks
-    routed: bool = True            # was the routing ladder enabled?
-    # sharded-route accounting for THIS solve: {dispatched, inner_iters,
-    # fallbacks} (empty when no block took the oversize route); the
-    # process-wide view is instrument counts("solver.oversize.")
-    oversize: dict = field(default_factory=dict)
-    assemble_seconds: float = 0.0  # scatter/index-build slice of this solve
-    # host seconds spent ISSUING async solver launches — the per-dispatch
-    # overhead the wave packer collapses.  Reported as its own stage: before
-    # it existed this time was silently folded into solve_seconds, which is
-    # how a warm homotopy pass (many small reused buckets, ~6x the dispatch
-    # count of a cold pass) showed a LARGER solve stage than cold despite a
-    # faster wall clock (the bench_select stage-attribution anomaly)
-    dispatch_seconds: float = 0.0
-    bytes_peak: int = 0            # resident bytes of Theta as assembled
-    output: str = "dense"          # the representation actually returned
+        solver: str,
+        block_sizes: list[int] | None = None,
+        route_mix: dict | None = None,  # structure class -> #blocks
+        routed: bool = True,       # was the routing ladder enabled?
+        # sharded-route accounting for THIS solve: {dispatched, inner_iters,
+        # fallbacks} (empty when no block took the oversize route); the
+        # process-wide view is instrument counts("solver.oversize.")
+        oversize: dict | None = None,
+        assemble_seconds: float = 0.0,  # scatter/index-build slice
+        # host seconds spent ISSUING async solver launches — the per-dispatch
+        # overhead the wave packer collapses.  Reported as its own stage:
+        # before it existed this time was silently folded into solve_seconds,
+        # which is how a warm homotopy pass (many small reused buckets, ~6x
+        # the dispatch count of a cold pass) showed a LARGER solve stage than
+        # cold despite a faster wall clock (the bench_select anomaly)
+        dispatch_seconds: float = 0.0,
+        bytes_peak: int = 0,       # resident bytes of Theta as assembled
+        output: str = "dense",     # the representation actually returned
+        trace: Trace | None = None,
+    ):
+        self.lam = lam
+        self.Theta = Theta
+        self.labels = labels
+        self.screen = screen
+        self.solver = solver
+        self.block_sizes = list(block_sizes) if block_sizes is not None else []
+        self.route_mix = dict(route_mix) if route_mix is not None else {}
+        self.routed = routed
+        self.oversize = dict(oversize) if oversize is not None else {}
+        self.bytes_peak = bytes_peak
+        self.output = output
+        self.trace = trace
+        self._stage_seconds = {
+            "screen": float(screen.seconds) if screen is not None else 0.0,
+            "solve": float(solve_seconds),
+            "dispatch": float(dispatch_seconds),
+            "assemble": float(assemble_seconds),
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"GlassoResult(lam={self.lam!r}, p={len(self.labels)}, "
+            f"solver={self.solver!r}, output={self.output!r})"
+        )
+
+    # -- unified timing view ------------------------------------------------
+
+    def stages(self) -> dict[str, float]:
+        """Seconds per canonical stage for THIS result: ``screen`` /
+        ``solve`` / ``dispatch`` / ``assemble`` — the single source the
+        legacy ``*_seconds`` properties and ``stages_us`` read from.  The
+        attached ``trace`` (when present) holds the same stages as spans
+        plus the nested detail no scalar can carry."""
+        return dict(self._stage_seconds)
+
+    @property
+    def solve_seconds(self) -> float:
+        return self._stage_seconds["solve"]
+
+    @property
+    def assemble_seconds(self) -> float:
+        return self._stage_seconds["assemble"]
+
+    @property
+    def dispatch_seconds(self) -> float:
+        return self._stage_seconds["dispatch"]
 
     @property
     def screen_seconds(self) -> float:
         """Screening-stage seconds (0.0 when screening was skipped or the
         labels were precomputed)."""
-        return float(self.screen.seconds) if self.screen is not None else 0.0
+        return self._stage_seconds["screen"]
 
     @property
     def stages_us(self) -> dict[str, int]:
@@ -73,12 +137,7 @@ class GlassoResult:
         ``engine.solve_us`` / ``engine.assemble_us`` counters, kept on the
         result so path consumers (``repro.select``, bench_select) can
         report where homotopy saves time per grid point."""
-        return {
-            "screen_us": int(self.screen_seconds * 1e6),
-            "solve_us": int(self.solve_seconds * 1e6),
-            "dispatch_us": int(self.dispatch_seconds * 1e6),
-            "assemble_us": int(self.assemble_seconds * 1e6),
-        }
+        return {f"{k}_us": int(v * 1e6) for k, v in self._stage_seconds.items()}
 
     @property
     def support(self) -> np.ndarray:
@@ -236,6 +295,7 @@ def _result(
     if screen_stats is not None:
         bump("engine.screen_us", int(float(screen_stats.seconds) * 1e6))
     return GlassoResult(
+        trace=current_trace(),
         lam=float(lam),
         Theta=Theta,
         labels=labels,
@@ -311,12 +371,24 @@ class Engine:
             route=opts.route,
             route_check_tol=opts.route_check_tol,
             fused=fused,
+            jax_annotations=opts.trace == "jax",
         )
+
+    def _trace_ctx(self, name: str, **attrs):
+        """Root a request trace for this run — or join the ambient one
+        (serving owns the root for submitted work).  ``EngineOptions
+        (trace=False)`` makes the engine span-free: nothing roots, and
+        ``span()`` calls below degrade to no-ops unless an outer layer
+        (the server) is tracing."""
+        if not self.options.trace:
+            return nullcontext()
+        return trace_request(name, **attrs)
 
     # -- stages ------------------------------------------------------------
 
     def screen(self, S: np.ndarray, lam: float) -> tuple[np.ndarray, ScreenStats]:
-        return thresholded_components(S, lam, backend=self.cc_backend)
+        with span("engine.screen", backend=self.cc_backend):
+            return thresholded_components(S, lam, backend=self.cc_backend)
 
     # -- single solve ------------------------------------------------------
 
@@ -341,50 +413,56 @@ class Engine:
         then ``labels`` is required, since dense screening needs dense S."""
         S = _as_cov_operand(S)
         p = S.shape[0]
-        screened = True
-        if labels is not None:
-            labels = np.asarray(labels)
-            if screen_stats is None:
-                from repro.core.screening import screen_stats_from_labels
+        with self._trace_ctx("engine.run", lam=float(lam), p=int(p)):
+            screened = True
+            if labels is not None:
+                labels = np.asarray(labels)
+                if screen_stats is None:
+                    from repro.core.screening import screen_stats_from_labels
 
-                screen_stats = screen_stats_from_labels(
-                    S, lam, labels, seconds=0.0
+                    screen_stats = screen_stats_from_labels(
+                        S, lam, labels, seconds=0.0
+                    )
+            elif hasattr(S, "gather_block"):
+                raise ValueError(
+                    "materialized covariances cannot be re-screened densely; "
+                    "pass the streamed labels (see Engine.run_from_data)"
                 )
-        elif hasattr(S, "gather_block"):
-            raise ValueError(
-                "materialized covariances cannot be re-screened densely; "
-                "pass the streamed labels (see Engine.run_from_data)"
+            elif screen:
+                labels, screen_stats = self.screen(S, lam)
+            else:
+                labels = np.zeros(p, dtype=np.int64)  # one global component
+                screen_stats = None
+                screened = False
+            # classify only when routing can use the tags AND the labels are
+            # a real screening partition (the screen=False pseudo-component
+            # is not connected, which the classifier requires — the
+            # unscreened baseline must stay on the dense iterative path)
+            with span("engine.plan"):
+                plan, _ = build_plan_incremental(
+                    S, lam, labels, dtype=self.np_dtype,
+                    classify_structures=self.executor.route and screened,
+                    oversize=self.oversize if screened else None,
+                )
+            schedule_mod.check_capacity(
+                [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
             )
-        elif screen:
-            labels, screen_stats = self.screen(S, lam)
-        else:
-            labels = np.zeros(p, dtype=np.int64)  # one global component
-            screen_stats = None
-            screened = False
-        # classify only when routing can use the tags AND the labels are a
-        # real screening partition (the screen=False pseudo-component is not
-        # connected, which the classifier requires — the unscreened baseline
-        # must stay on the dense iterative path)
-        plan, _ = build_plan_incremental(
-            S, lam, labels, dtype=self.np_dtype,
-            classify_structures=self.executor.route and screened,
-            oversize=self.oversize if screened else None,
-        )
-        schedule_mod.check_capacity(
-            [len(c) for b in plan.buckets for c in b.comps] or [1], p_max
-        )
-        out_mode = resolve_output(self.output if output is None else output, p)
-        t0 = time.perf_counter()
-        Theta = self.executor.solve_plan(
-            plan, float(lam), S, warm_W=warm_W, output=out_mode
-        )
-        seconds = time.perf_counter() - t0
-        return _result(
-            plan, labels, screen_stats, Theta, seconds, self.solver, lam,
-            routed=self.executor.route, oversize=self.executor.last_oversize,
-            assemble_seconds=self.executor.last_assemble_seconds,
-            dispatch_seconds=self.executor.last_dispatch_seconds,
-        )
+            out_mode = resolve_output(
+                self.output if output is None else output, p
+            )
+            t0 = time.perf_counter()
+            with span("engine.solve", lam=float(lam)):
+                Theta = self.executor.solve_plan(
+                    plan, float(lam), S, warm_W=warm_W, output=out_mode
+                )
+            seconds = time.perf_counter() - t0
+            return _result(
+                plan, labels, screen_stats, Theta, seconds, self.solver, lam,
+                routed=self.executor.route,
+                oversize=self.executor.last_oversize,
+                assemble_seconds=self.executor.last_assemble_seconds,
+                dispatch_seconds=self.executor.last_dispatch_seconds,
+            )
 
     # -- lambda path -------------------------------------------------------
 
@@ -406,13 +484,19 @@ class Engine:
         consecutive lambdas skip re-padding entirely and warm-start from their
         own previous padded solutions on device."""
         S = _as_cov_operand(S)
-        path = plan_path(
-            S, lambdas, dtype=self.np_dtype,
-            classify_structures=self.executor.route, oversize=self.oversize,
-        )
-        return self._execute_path(
-            S, path, warm_start=warm_start, p_max=p_max, output=output
-        )
+        lambdas = list(lambdas)
+        with self._trace_ctx(
+            "engine.path", n_lams=len(lambdas), p=int(S.shape[0])
+        ):
+            with span("engine.plan"):
+                path = plan_path(
+                    S, lambdas, dtype=self.np_dtype,
+                    classify_structures=self.executor.route,
+                    oversize=self.oversize,
+                )
+            return self._execute_path(
+                S, path, warm_start=warm_start, p_max=p_max, output=output
+            )
 
     def _execute_path(
         self, S, path, *, warm_start: bool, p_max: int | None,
@@ -475,16 +559,17 @@ class Engine:
                 else:
                     bump("select.warm.cold")
             t0 = time.perf_counter()
-            Theta = self.executor.solve_plan(
-                step.plan,
-                step.lam,
-                S,
-                warm_W=warm_W,
-                warm_Theta=warm_Theta,
-                reused_keys=step.reused_keys if warm_start else frozenset(),
-                keep_solutions=warm_start,
-                output=out_mode,
-            )
+            with span("engine.solve", lam=float(step.lam)):
+                Theta = self.executor.solve_plan(
+                    step.plan,
+                    step.lam,
+                    S,
+                    warm_W=warm_W,
+                    warm_Theta=warm_Theta,
+                    reused_keys=step.reused_keys if warm_start else frozenset(),
+                    keep_solutions=warm_start,
+                    output=out_mode,
+                )
             seconds = time.perf_counter() - t0
             res = _result(
                 step.plan, step.labels, step.screen, Theta, seconds, self.solver,
@@ -519,16 +604,22 @@ class Engine:
 
         if stream is None:
             stream = self.stream
-        sc = stream_screen(X, [lam], config=stream, oversize=self.oversize)
-        return self.run(
-            sc.S,
-            lam,
-            labels=sc.labels[0],
-            screen_stats=sc.stats[0],
-            p_max=p_max,
-            warm_W=warm_W,
-            output=output,
-        )
+        with self._trace_ctx(
+            "engine.run", lam=float(lam), p=int(np.shape(X)[1]), source="data"
+        ):
+            with span("engine.screen", backend="stream"):
+                sc = stream_screen(
+                    X, [lam], config=stream, oversize=self.oversize
+                )
+            return self.run(
+                sc.S,
+                lam,
+                labels=sc.labels[0],
+                screen_stats=sc.stats[0],
+                p_max=p_max,
+                warm_W=warm_W,
+                output=output,
+            )
 
     def run_path_from_data(
         self,
@@ -548,14 +639,20 @@ class Engine:
 
         if stream is None:
             stream = self.stream
-        path, sc = plan_path_streaming(
-            X,
-            lambdas,
-            config=stream,
-            dtype=self.np_dtype,
-            classify_structures=self.executor.route,
-            oversize=self.oversize,
-        )
-        return self._execute_path(
-            sc.S, path, warm_start=warm_start, p_max=p_max, output=output
-        )
+        lambdas = list(lambdas)
+        with self._trace_ctx(
+            "engine.path", n_lams=len(lambdas), p=int(np.shape(X)[1]),
+            source="data",
+        ):
+            with span("engine.plan", backend="stream"):
+                path, sc = plan_path_streaming(
+                    X,
+                    lambdas,
+                    config=stream,
+                    dtype=self.np_dtype,
+                    classify_structures=self.executor.route,
+                    oversize=self.oversize,
+                )
+            return self._execute_path(
+                sc.S, path, warm_start=warm_start, p_max=p_max, output=output
+            )

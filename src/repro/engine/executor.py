@@ -46,6 +46,7 @@ import numpy as np
 from repro.core import blocks as blocks_mod
 from repro.core.instrument import bump, counts, timed_dispatch
 from repro.core.schedule import lpt_assign
+from repro.obs.trace import span
 from repro.core.solvers import SOLVERS, WARM_START_SOLVERS
 from repro.core.solvers.closed_form import (
     glasso_chordal_host,
@@ -428,6 +429,10 @@ class BucketExecutor:
     # bucket_glasso launch per size bin (resolved to a bool by the Engine
     # from EngineOptions.fused; buckets routed "fused" fuse regardless)
     fused: bool = False
+    # EngineOptions(trace="jax"): wrap each solve_plan dispatch wave in a
+    # jax.profiler.TraceAnnotation so device-side profiler timelines line
+    # up with the host span tree
+    jax_annotations: bool = False
     # bucket_key -> previous padded solution / input stacks (device arrays):
     # reused buckets warm-start from their own previous solution and skip the
     # host->device re-upload of their bit-identical padded blocks.
@@ -607,6 +612,34 @@ class BucketExecutor:
         (``registry.route_for``), every non-iterative candidate is
         KKT-verified, and failures are re-dispatched to the iterative solver
         before assembly — see ``_verify_and_fallback``."""
+        if self.jax_annotations:
+            from jax.profiler import TraceAnnotation
+
+            with TraceAnnotation("glasso.solve_plan"):
+                return self._solve_plan(
+                    plan, lam, S, warm_W=warm_W, warm_Theta=warm_Theta,
+                    reused_keys=reused_keys, keep_solutions=keep_solutions,
+                    output=output, priorities=priorities,
+                )
+        return self._solve_plan(
+            plan, lam, S, warm_W=warm_W, warm_Theta=warm_Theta,
+            reused_keys=reused_keys, keep_solutions=keep_solutions,
+            output=output, priorities=priorities,
+        )
+
+    def _solve_plan(
+        self,
+        plan: blocks_mod.Plan,
+        lam: float,
+        S: np.ndarray,
+        *,
+        warm_W: np.ndarray | None = None,
+        warm_Theta: np.ndarray | None = None,
+        reused_keys: frozenset = frozenset(),
+        keep_solutions: bool = False,
+        output: str = "dense",
+        priorities=None,
+    ) -> np.ndarray:
         from repro.engine.planner import bucket_key  # local: avoid cycle at import
         from repro.engine.registry import route_for  # local: avoid cycle at import
 
@@ -760,10 +793,11 @@ class BucketExecutor:
             self.last_oversize = totals
 
         # single synchronization point: everything above was async dispatch
-        jax.block_until_ready(
-            [p.out for p in pending if isinstance(p.out, jax.Array)]
-            + [p.repair[1] for p in pending if p.repair is not None]
-        )
+        with span("engine.barrier"):
+            jax.block_until_ready(
+                [p.out for p in pending if isinstance(p.out, jax.Array)]
+                + [p.repair[1] for p in pending if p.repair is not None]
+            )
         for sw in fused_sweeps:
             # per-launch sweeps are ready (same barrier); the saving is what
             # the megabatch's slowest lane would have cost every other lane
@@ -791,11 +825,12 @@ class BucketExecutor:
         self._prev_solutions = new_solutions
         self._prev_blocks = new_blocks
         t0 = time.perf_counter()
-        sols = [np.asarray(p.out) for p in pending]
-        if output == "sparse":
-            Theta = blocks_mod.assemble_sparse(plan, sols, S)
-        else:
-            Theta = blocks_mod.assemble_dense(plan, sols, S)
+        with span("engine.assemble", output=output):
+            sols = [np.asarray(p.out) for p in pending]
+            if output == "sparse":
+                Theta = blocks_mod.assemble_sparse(plan, sols, S)
+            else:
+                Theta = blocks_mod.assemble_dense(plan, sols, S)
         self.last_assemble_seconds = time.perf_counter() - t0
         bump("engine.assemble_us", int(self.last_assemble_seconds * 1e6))
         return Theta

@@ -70,6 +70,13 @@ class EngineOptions:
     # fuses; "auto" fuses when the solver forces it ("fused_bcd") or a
     # structure class is routed to "fused" (registry.set_route)
     fused: bool | str = "auto"
+    # observability (DESIGN.md Section 17): True roots a request Trace per
+    # run/run_path (spans: screen -> plan -> per-step solve -> dispatch ->
+    # assemble) attached as ``GlassoResult.trace``; False makes the engine
+    # span-free (the <5%-overhead bench arm); "jax" additionally wraps each
+    # dispatch wave in ``jax.profiler.TraceAnnotation`` so device-side
+    # profiler timelines correlate with the host span tree
+    trace: bool | str = True
     solver_opts: Mapping[str, Any] = field(default_factory=dict)
 
     def __post_init__(self):
@@ -80,6 +87,10 @@ class EngineOptions:
         if self.fused not in (True, False, "auto"):
             raise ValueError(
                 f"fused must be True, False or 'auto', got {self.fused!r}"
+            )
+        if self.trace not in (True, False, "jax"):
+            raise ValueError(
+                f"trace must be True, False or 'jax', got {self.trace!r}"
             )
         object.__setattr__(self, "solver_opts", dict(self.solver_opts))
 

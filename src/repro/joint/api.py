@@ -46,6 +46,20 @@ class JointGlassoResult:
     assemble_seconds: float = 0.0  # scatter/index-build slice of this solve
     bytes_peak: int = 0            # resident bytes of Theta as assembled
     output: str = "dense"          # the representation actually returned
+    trace: object | None = None    # request Trace (repro.obs) when traced
+
+    def stages(self) -> dict[str, float]:
+        """Seconds per canonical stage — the same unified view as
+        ``GlassoResult.stages()`` (joint solves have no separate dispatch
+        ledger: host issue time rides inside ``solve``)."""
+        return {
+            "screen": (
+                float(self.screen.seconds) if self.screen is not None else 0.0
+            ),
+            "solve": float(self.solve_seconds),
+            "dispatch": 0.0,
+            "assemble": float(self.assemble_seconds),
+        }
 
     @property
     def K(self) -> int:
@@ -89,7 +103,10 @@ def _joint_result(
         route_mix[b.structure] = route_mix.get(b.structure, 0) + len(b.comps)
     solve_seconds = max(0.0, float(seconds) - float(assemble_seconds))
     bump("engine.solve_us", int(solve_seconds * 1e6))
+    from repro.obs.trace import current_trace
+
     return JointGlassoResult(
+        trace=current_trace(),
         lam1=plan.lam1,
         lam2=plan.lam2,
         penalty=plan.penalty,

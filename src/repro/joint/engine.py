@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.instrument import bump, timed_dispatch
+from repro.obs.trace import span, trace_request
 from repro.core.solvers.closed_form import kkt_ok_stack
 from repro.core.solvers.protocol import solver_spec
 from repro.core.sparse import resolve_output
@@ -290,14 +291,26 @@ class JointEngine:
             )
         )
 
+    def _trace_ctx(self, name: str, **attrs):
+        """Root a request trace — or join the ambient one (the serving
+        batcher owns the root for submitted joint work).  Mirrors
+        ``Engine._trace_ctx``; ``EngineOptions(trace=False)`` keeps the
+        joint engine span-free."""
+        from contextlib import nullcontext
+
+        if not self.options.trace:
+            return nullcontext()
+        return trace_request(name, **attrs)
+
     # -- stages ------------------------------------------------------------
 
     def screen(
         self, Ss, lam1: float, lam2: float, *, penalty: str
     ) -> tuple[np.ndarray, JointScreenStats]:
-        return joint_thresholded_components(
-            Ss, lam1, lam2, penalty=penalty, backend=self.cc_backend
-        )
+        with span("engine.screen", backend=self.cc_backend, kind="joint"):
+            return joint_thresholded_components(
+                Ss, lam1, lam2, penalty=penalty, backend=self.cc_backend
+            )
 
     def plan(
         self, Ss, lam1: float, lam2: float, labels, *, penalty: str,
@@ -305,10 +318,11 @@ class JointEngine:
     ) -> JointPlan:
         if classify is None:
             classify = self.route
-        return build_joint_plan(
-            Ss, lam1, lam2, labels, penalty=penalty, dtype=self.np_dtype,
-            classify_structures=classify,
-        )
+        with span("engine.plan", kind="joint"):
+            return build_joint_plan(
+                Ss, lam1, lam2, labels, penalty=penalty, dtype=self.np_dtype,
+                classify_structures=classify,
+            )
 
     # -- solve -------------------------------------------------------------
 
@@ -333,33 +347,42 @@ class JointEngine:
         if len({S.shape for S in Ss}) != 1:
             raise ValueError("all class covariances must share one shape")
         p = Ss[0].shape[0]
-        screened = True
-        if labels is not None:
-            labels = np.asarray(labels)
-        elif any(hasattr(S, "gather_block") for S in Ss):
-            raise ValueError(
-                "materialized covariances cannot be re-screened densely; "
-                "pass the streamed labels (see JointEngine.run_from_data)"
+        with self._trace_ctx(
+            "engine.joint", lam1=float(lam1), lam2=float(lam2),
+            K=len(Ss), p=int(p),
+        ):
+            screened = True
+            if labels is not None:
+                labels = np.asarray(labels)
+            elif any(hasattr(S, "gather_block") for S in Ss):
+                raise ValueError(
+                    "materialized covariances cannot be re-screened densely; "
+                    "pass the streamed labels (see JointEngine.run_from_data)"
+                )
+            elif screen:
+                labels, screen_stats = self.screen(
+                    Ss, lam1, lam2, penalty=penalty
+                )
+            else:
+                labels = np.zeros(p, dtype=np.int64)
+                screen_stats = None
+                screened = False
+            plan = self.plan(
+                Ss, lam1, lam2, labels, penalty=penalty,
+                classify=self.route and screened,
             )
-        elif screen:
-            labels, screen_stats = self.screen(Ss, lam1, lam2, penalty=penalty)
-        else:
-            labels = np.zeros(p, dtype=np.int64)
-            screen_stats = None
-            screened = False
-        plan = self.plan(
-            Ss, lam1, lam2, labels, penalty=penalty,
-            classify=self.route and screened,
-        )
-        out_mode = resolve_output(self.output if output is None else output, p)
-        t0 = time.perf_counter()
-        Theta, fallbacks = self.solve_plan(plan, Ss, output=out_mode)
-        seconds = time.perf_counter() - t0
-        return _joint_result(
-            plan, labels, screen_stats, Theta, seconds, self.solver,
-            routed=self.route, fallbacks=fallbacks,
-            assemble_seconds=self.last_assemble_seconds,
-        )
+            out_mode = resolve_output(
+                self.output if output is None else output, p
+            )
+            t0 = time.perf_counter()
+            with span("engine.solve", kind="joint"):
+                Theta, fallbacks = self.solve_plan(plan, Ss, output=out_mode)
+            seconds = time.perf_counter() - t0
+            return _joint_result(
+                plan, labels, screen_stats, Theta, seconds, self.solver,
+                routed=self.route, fallbacks=fallbacks,
+                assemble_seconds=self.last_assemble_seconds,
+            )
 
     def run_from_data(
         self,
@@ -378,13 +401,18 @@ class JointEngine:
 
         if stream is None:
             stream = self.stream
-        sc = joint_stream_screen(
-            Xs, lam1, lam2, penalty=penalty, config=stream
-        )
-        return self.run(
-            sc.S, lam1, lam2, penalty=penalty,
-            labels=sc.labels, screen_stats=sc.stats, output=output,
-        )
+        with self._trace_ctx(
+            "engine.joint", lam1=float(lam1), lam2=float(lam2), K=len(Xs),
+            source="data",
+        ):
+            with span("engine.screen", backend="stream", kind="joint"):
+                sc = joint_stream_screen(
+                    Xs, lam1, lam2, penalty=penalty, config=stream
+                )
+            return self.run(
+                sc.S, lam1, lam2, penalty=penalty,
+                labels=sc.labels, screen_stats=sc.stats, output=output,
+            )
 
     def solve_plan(
         self, plan: JointPlan, Ss, *, output: str = "dense"
@@ -449,9 +477,10 @@ class JointEngine:
             pending.append([bucket, out, ok])
 
         # single synchronization point for the primary wave
-        jax.block_until_ready(
-            [p[1] for p in pending if isinstance(p[1], jax.Array)]
-        )
+        with span("engine.barrier"):
+            jax.block_until_ready(
+                [p[1] for p in pending if isinstance(p[1], jax.Array)]
+            )
         # verify every bucket, DISPATCH all repairs, only then block once
         # more — repairs form their own async wave instead of serializing
         # (the single-class executor's repair shape)
@@ -488,10 +517,11 @@ class JointEngine:
             for pos, idx, fixed in repairs:
                 solutions[pos][idx] = np.asarray(fixed)
         t0 = time.perf_counter()
-        if output == "sparse":
-            Theta = assemble_joint_sparse(plan, solutions, Ss)
-        else:
-            Theta = assemble_joint(plan, solutions, Ss)
+        with span("engine.assemble", output=output):
+            if output == "sparse":
+                Theta = assemble_joint_sparse(plan, solutions, Ss)
+            else:
+                Theta = assemble_joint(plan, solutions, Ss)
         self.last_assemble_seconds = time.perf_counter() - t0
         bump("engine.assemble_us", int(self.last_assemble_seconds * 1e6))
         return Theta, fallbacks

@@ -74,78 +74,30 @@ everything else queues for the batcher, which dispatches joint buckets
 through the shared compiled cache (keys gain K, so a steady-state mix of
 single-class and joint traffic compiles nothing).
 
-COUNTER NAMESPACES surfaced by ``serve_stats()`` — one complete table;
-"sum" counters accumulate, "peak" entries are high-watermarks
-(``instrument.set_peak``), derived values need not be ints:
+COUNTER NAMESPACES surfaced by ``serve_stats()``: the complete name-by-name
+table (sum vs peak semantics, units, which layer bumps what) lives in
+DESIGN.md Section 17 next to the metric/label taxonomy.  The counters are
+flat entries in the process-global ``repro.obs`` registry, so every name in
+that table is also exported verbatim — dots sanitized to underscores — by
+``GlassoServer.metrics()`` (Prometheus text exposition) alongside the
+labeled ``serve.request_seconds`` latency histogram.
 
-    serve.requests               sum   requests admitted (all kinds)
-    serve.batches                sum   batcher iterations that dispatched
-    serve.dispatches             sum   coalesced solver calls (size x route)
-    serve.coalesced_blocks       sum   blocks sharing a call across requests
-    serve.fastpath_requests      sum   requests solved at admission
-    serve.fastpath_blocks        sum   blocks on a non-iterative route
-    serve.fallback_blocks        sum   closed-form candidates repaired
-    serve.data_requests          sum   DataSpec admissions
-    serve.session_updates        sum   append_rows incremental re-screens
-    serve.rejected.quota         sum   admissions refused: tenant bucket dry
-    serve.rejected.queue         sum   admissions refused: bounded queue full
-    serve.rejected.deadline      sum   queued requests expired pre-dispatch
-    serve.cache.hits             sum   result-cache hits (no planner work)
-    serve.cache.misses           sum   cacheable admissions that missed
-    stream.tiles_total           sum   tile pairs scheduled (per class)
-    stream.tiles_skipped         sum   Cauchy-Schwarz prunes
-    stream.tiles_rescreened      sum   session tiles recomputed on update
-    stream.tiles_revalidated     sum   session tiles kept by certificate
-    stream.sessions              sum   data sessions opened
-    stream.session_components_touched  sum  components merged/split/updated
-    stream.edges_emitted         sum   compacted edges streamed
-    stream.deferred_components   sum   oversize components left host-free
-    stream.deferred_gathers      sum   on-demand gathers of deferred blocks
-    stream.shard_chunks          sum   row chunks streamed into device shards
-    stream.bytes_peak            peak  screening-stage host bytes
-    solver.oversize.dispatched   sum   sharded mesh-spanning solves
-    solver.oversize.cg_iters     sum   inner CG/Newton-Schulz iterations
-    solver.oversize.fallbacks    sum   sharded rejections re-solved 1-device
-    solver.oversize.device_bytes_peak  peak  accounting-model device bytes
-    joint.requests               sum   JointSpec admissions
-    joint.fastpath_requests      sum   joint requests solved at admission
-    joint.screens                sum   hybrid screens run (dense + streamed)
-    joint.dispatches             sum   joint solver dispatches (all routes)
-    joint.closed_form_blocks     sum   blocks down the forest/chordal paths
-    joint.shared_blocks          sum   identical blocks solved once (1-class)
-    joint.fallbacks              sum   joint verifications re-dispatched
-    joint.candidate_pairs        sum   streamed pairs completed for the rule
-    joint.edges                  sum   union-graph edges retained
-    serve.path_requests          sum   PathSpec admissions (selection grids)
-    select.warm.reused           sum   path buckets resuming their own
-                                       previous padded solutions
-    select.warm.merged           sum   path buckets warm-started from the
-                                       merged-component blockwise inverse
-    select.warm.cold             sum   path buckets solved with no warm
-                                       source
-    select.grid.tiles_scanned    sum   tile pairs computed for lambda_max
-    select.grid.tiles_pruned     sum   tile pairs bound-pruned from it
-    select.stars.subsamples      sum   StARS subsample paths run
-    select.cv.folds              sum   CV fold paths run
-    engine.screen_us             sum   screening wall time (microseconds)
-    engine.solve_us              sum   device-solve+verify wall time (us)
-    engine.assemble_us           sum   result-assembly wall time (us)
-    engine.dispatch.count        sum   bucket-dispatch chokepoint calls
-                                       (every solver launch any engine or
-                                       the serving batcher issued)
-    engine.dispatch.us           sum   host time spent issuing them (async
-                                       enqueue overhead for device routes;
-                                       the blocking host call for the
-                                       chordal/sharded routes)
-    solver.fused.dispatches      sum   fused megabatch launches (one per
-                                       size bin per wave — DESIGN.md S.16)
-    solver.fused.blocks_packed   sum   blocks packed across bucket
-                                       boundaries into those launches
-    solver.fused.lockstep_sweeps_saved
-                                 sum   per-launch sum of max(sweeps) -
-                                       sweeps_i: BCD sweeps the in-kernel
-                                       early exit avoids vs lockstep
-    result.bytes_peak            peak  resident bytes of assembled results
+OBSERVABILITY (DESIGN.md Section 17; ``repro.obs``): every admitted request
+carries a ``Trace`` rooted at ``serve.request`` (attrs: tenant, slo, kind).
+Admission-time work — screen, plan, the synchronous fast path — records
+spans on the caller's thread; queued work re-enters the request's trace on
+the batcher thread through the EXPLICIT token handoff (``activate``; the
+contextvar does not follow the queue), and the finished trace rides both
+the result (``result.trace``) and the future (``future.trace``).  Export
+one with ``trace.to_chrome_json(path)`` and open it in Perfetto /
+chrome://tracing.  Request latency (admission to future resolution) lands
+in the ``serve.request_seconds`` histogram labeled (tenant, slo, kind in
+{dense, data, joint, path, session}), so the server itself answers
+p50/p99-per-tenant questions: ``REGISTRY.quantile("serve.request_seconds",
+0.99, slo="interactive")``.  One attribution rule: a COALESCED solver
+dispatch serves many requests at once and is therefore never recorded in
+any single request's trace — per-request spans cover plan and assembly;
+the shared dispatch stays visible in ``engine.dispatch.*``.
 
 SPARSE RESULTS (``output=``): the server-level ``output`` ("dense" /
 "sparse" / "auto", default "auto") picks the result representation for
@@ -180,7 +132,11 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from contextlib import nullcontext
+
 from repro.core.instrument import bump, counts, timed_dispatch
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import Trace, activate, span
 from repro.launch.control_plane import (
     AdmissionQueue,
     DataSpec,
@@ -222,6 +178,9 @@ class GlassoRequest:
     tenant: str = "default"
     slo: str = "interactive"
     deadline_at: float | None = None
+    # per-request obs.Trace (None when the server runs trace=False); the
+    # batcher re-enters it via _req_scope — the explicit thread handoff
+    trace: object = None
 
 
 @dataclass
@@ -241,6 +200,7 @@ class JointRequest:
     tenant: str = "default"
     slo: str = "interactive"
     deadline_at: float | None = None
+    trace: object = None
 
 
 @dataclass
@@ -259,6 +219,30 @@ class PathRequest:
     tenant: str = "default"
     slo: str = "batch"
     deadline_at: float | None = None
+    trace: object = None
+
+
+def _request_kind(spec) -> str:
+    """The histogram/trace ``kind`` label for one admission spec."""
+    if isinstance(spec, DenseSpec):
+        return "dense"
+    if isinstance(spec, DataSpec):
+        return "data"
+    if isinstance(spec, PathSpec):
+        return "path"
+    return "joint"
+
+
+def _req_scope(req):
+    """Re-enter a queued request's trace on the batcher thread.
+
+    The explicit cross-thread handoff from DESIGN.md Section 17: the
+    contextvar does not follow the queue, and implicit inheritance would
+    pin every batcher span to whichever request started the thread."""
+    tr = getattr(req, "trace", None)
+    if tr is None:
+        return nullcontext()
+    return activate((tr, tr.root_id))
 
 
 @dataclass
@@ -354,6 +338,7 @@ class GlassoServer:
             solver_opts=dict(solver_opts),
             route=True,
             route_check_tol=self.route_check_tol,
+            jax_annotations=opts.trace == "jax",
         )
         # data sessions: named streaming-screen states for append_rows; the
         # session executor honors the server's route setting (the admission
@@ -364,6 +349,7 @@ class GlassoServer:
             solver_opts=dict(solver_opts),
             route=opts.route,
             route_check_tol=self.route_check_tol,
+            jax_annotations=opts.trace == "jax",
         )
         self._sessions: dict[str, _SessionEntry] = {}
         self._sessions_lock = threading.Lock()
@@ -572,6 +558,8 @@ class GlassoServer:
             fut: Future = Future()
             fut.set_exception(RuntimeError("GlassoServer stopped"))
             return fut
+        kind = _request_kind(spec)
+        t_admit = time.perf_counter()
         out = self._resolve_output(meta.output, spec.p)
         key = spec_cache_key(spec, out) if self._cache.maxsize > 0 else None
         if key is not None:
@@ -579,6 +567,11 @@ class GlassoServer:
             if cached is not None:
                 bump("serve.requests")
                 bump("serve.cache.hits")
+                REGISTRY.observe(
+                    "serve.request_seconds",
+                    time.perf_counter() - t_admit,
+                    tenant=meta.tenant, slo=meta.slo, kind=kind,
+                )
                 fut = Future()
                 fut.set_result(cached)
                 return fut
@@ -591,13 +584,46 @@ class GlassoServer:
                 tenant=meta.tenant,
             )
         bump("serve.requests")
-        if isinstance(spec, DenseSpec):
-            return self._admit_dense(spec, meta, out, key)
-        if isinstance(spec, DataSpec):
-            return self._admit_data(spec, meta, out, key)
-        if isinstance(spec, PathSpec):
-            return self._admit_path(spec, meta, out, key)
-        return self._admit_joint(spec, meta, out, key)
+        tr = (
+            Trace("serve.request", tenant=meta.tenant, slo=meta.slo, kind=kind)
+            if self.options.trace
+            else None
+        )
+        # admission-time work (screen / plan / fast-path solve) records
+        # spans on THIS thread; queued remainders re-enter via _req_scope
+        with activate((tr, tr.root_id)) if tr is not None else nullcontext():
+            if isinstance(spec, DenseSpec):
+                fut = self._admit_dense(spec, meta, out, key, tr)
+            elif isinstance(spec, DataSpec):
+                fut = self._admit_data(spec, meta, out, key, tr)
+            elif isinstance(spec, PathSpec):
+                fut = self._admit_path(spec, meta, out, key, tr)
+            else:
+                fut = self._admit_joint(spec, meta, out, key, tr)
+        self._finish_on_done(fut, tr, t_admit, kind, meta)
+        return fut
+
+    def _finish_on_done(
+        self, fut: Future, tr, t_admit: float, kind: str, meta: RequestMeta
+    ) -> None:
+        """Terminal observability for one admitted request: the trace rides
+        the future, and whichever thread resolves it closes the trace and
+        records admission-to-resolution latency in the labeled
+        ``serve.request_seconds`` histogram (errors included — a rejected
+        dispatch is still a served request)."""
+        if tr is not None:
+            fut.trace = tr
+
+        def _done(_f, tr=tr, t_admit=t_admit, kind=kind, meta=meta):
+            if tr is not None:
+                tr.finish()
+            REGISTRY.observe(
+                "serve.request_seconds",
+                time.perf_counter() - t_admit,
+                tenant=meta.tenant, slo=meta.slo, kind=kind,
+            )
+
+        fut.add_done_callback(_done)
 
     def _attach_cache_fill(self, fut: Future, key) -> None:
         """Write-through on success: a cacheable request's finished result
@@ -631,11 +657,11 @@ class GlassoServer:
             self._fail_pending()
         return req.future
 
-    def _admit_dense(self, spec: DenseSpec, meta, out: str, key) -> Future:
+    def _admit_dense(self, spec: DenseSpec, meta, out: str, key, tr) -> Future:
         req = GlassoRequest(
             S=np.asarray(spec.S), lam=float(spec.lam), output=out,
             tenant=meta.tenant, slo=meta.slo,
-            deadline_at=deadline_instant(meta),
+            deadline_at=deadline_instant(meta), trace=tr,
         )
         self._attach_cache_fill(req.future, key)
         # the fast path is the interactive SLO's half of the contract: batch
@@ -645,7 +671,7 @@ class GlassoServer:
                 return req.future
         return self._enqueue(req)
 
-    def _admit_data(self, spec: DataSpec, meta, out: str, key) -> Future:
+    def _admit_data(self, spec: DataSpec, meta, out: str, key, tr) -> Future:
         """Data-matrix admission: the out-of-core screen runs on the
         caller's thread (``repro.stream``: tiled Gram + compacted edges +
         materialized per-component blocks — the dense S never exists), then
@@ -663,29 +689,33 @@ class GlassoServer:
         req = GlassoRequest(
             S=None, lam=float(spec.lam), output=out,
             tenant=meta.tenant, slo=meta.slo,
-            deadline_at=deadline_instant(meta),
+            deadline_at=deadline_instant(meta), trace=tr,
         )
         self._attach_cache_fill(req.future, key)
         try:
-            if spec.session is not None:
-                ses = DataSession(
-                    spec.X, req.lam, config=spec.stream, oversize=self.oversize
-                )
-                req.S, req.labels, req.stats = ses.S, ses.labels, ses.stats
-                with self._sessions_lock:
-                    self._sessions[spec.session] = _SessionEntry(
-                        session=ses, last=req.future
+            with span("serve.plan", source="data"):
+                if spec.session is not None:
+                    ses = DataSession(
+                        spec.X, req.lam, config=spec.stream,
+                        oversize=self.oversize,
                     )
-            else:
-                sc = stream_screen(
-                    spec.X, [req.lam], config=spec.stream,
+                    req.S, req.labels, req.stats = ses.S, ses.labels, ses.stats
+                    with self._sessions_lock:
+                        self._sessions[spec.session] = _SessionEntry(
+                            session=ses, last=req.future
+                        )
+                else:
+                    sc = stream_screen(
+                        spec.X, [req.lam], config=spec.stream,
+                        oversize=self.oversize,
+                    )
+                    req.S, req.labels, req.stats = (
+                        sc.S, sc.labels[0], sc.stats[0]
+                    )
+                req.plan, _ = build_plan_incremental(
+                    req.S, req.lam, req.labels, classify_structures=self.route,
                     oversize=self.oversize,
                 )
-                req.S, req.labels, req.stats = sc.S, sc.labels[0], sc.stats[0]
-            req.plan, _ = build_plan_incremental(
-                req.S, req.lam, req.labels, classify_structures=self.route,
-                oversize=self.oversize,
-            )
         except Exception as e:
             req.future.set_exception(e)
             return req.future
@@ -698,7 +728,7 @@ class GlassoServer:
                 return req.future
         return self._enqueue(req)
 
-    def _admit_joint(self, spec: JointSpec, meta, out: str, key) -> Future:
+    def _admit_joint(self, spec: JointSpec, meta, out: str, key, tr) -> Future:
         """K-class joint admission (``repro.joint``): the exact hybrid
         thresholding screen and the joint plan run on the caller's thread;
         a plan whose every union bucket routes non-iteratively (singletons
@@ -711,27 +741,29 @@ class GlassoServer:
             Ss=None, lam1=float(spec.lam1), lam2=float(spec.lam2),
             penalty=spec.penalty, output=out,
             tenant=meta.tenant, slo=meta.slo,
-            deadline_at=deadline_instant(meta),
+            deadline_at=deadline_instant(meta), trace=tr,
         )
         self._attach_cache_fill(req.future, key)
         try:
             engine = self._joint_engine()
-            if spec.Xs is not None:
-                from repro.joint.stream import joint_stream_screen
+            with span("serve.plan", kind="joint"):
+                if spec.Xs is not None:
+                    from repro.joint.stream import joint_stream_screen
 
-                sc = joint_stream_screen(
-                    spec.Xs, req.lam1, req.lam2, penalty=spec.penalty,
-                    config=spec.stream,
+                    sc = joint_stream_screen(
+                        spec.Xs, req.lam1, req.lam2, penalty=spec.penalty,
+                        config=spec.stream,
+                    )
+                    req.Ss, req.labels, req.stats = sc.S, sc.labels, sc.stats
+                else:
+                    req.Ss = [np.asarray(S) for S in spec.Ss]
+                    req.labels, req.stats = engine.screen(
+                        req.Ss, req.lam1, req.lam2, penalty=spec.penalty
+                    )
+                req.plan = engine.plan(
+                    req.Ss, req.lam1, req.lam2, req.labels,
+                    penalty=spec.penalty,
                 )
-                req.Ss, req.labels, req.stats = sc.S, sc.labels, sc.stats
-            else:
-                req.Ss = [np.asarray(S) for S in spec.Ss]
-                req.labels, req.stats = engine.screen(
-                    req.Ss, req.lam1, req.lam2, penalty=spec.penalty
-                )
-            req.plan = engine.plan(
-                req.Ss, req.lam1, req.lam2, req.labels, penalty=spec.penalty
-            )
         except Exception as e:
             req.future.set_exception(e)
             return req.future
@@ -753,7 +785,7 @@ class GlassoServer:
                     return req.future
         return self._enqueue(req)
 
-    def _admit_path(self, spec: PathSpec, meta, out: str, key) -> Future:
+    def _admit_path(self, spec: PathSpec, meta, out: str, key, tr) -> Future:
         """Model-selection admission: validation already ran in the spec's
         ``__post_init__``; the homotopy grid + criterion run entirely on the
         batcher thread (``_solve_path_request``), so admission just queues.
@@ -762,7 +794,7 @@ class GlassoServer:
         bump("serve.path_requests")
         req = PathRequest(
             spec=spec, output=out, tenant=meta.tenant, slo=meta.slo,
-            deadline_at=deadline_instant(meta),
+            deadline_at=deadline_instant(meta), trace=tr,
         )
         self._attach_cache_fill(req.future, key)
         return self._enqueue(req)
@@ -777,8 +809,10 @@ class GlassoServer:
 
         try:
             spec = req.spec
-            req.future.set_result(
-                select_path(
+            with _req_scope(req):
+                # select_path's trace_request degrades to a child span under
+                # the request trace — serving owns the root
+                selection = select_path(
                     spec.S,
                     X=spec.X,
                     grid=spec.grid,
@@ -790,7 +824,7 @@ class GlassoServer:
                     output=req.output,
                     criterion_opts=spec.criterion_opts,
                 )
-            )
+            req.future.set_result(selection)
         except Exception as e:
             if not req.future.done():
                 req.future.set_exception(e)
@@ -803,21 +837,33 @@ class GlassoServer:
 
         try:
             engine = self._joint_engine()
-            t0 = time.perf_counter()
-            Theta, fallbacks = engine.solve_plan(
-                req.plan, req.Ss, output=req.output
-            )
-            seconds = time.perf_counter() - t0
-            req.future.set_result(
-                _joint_result(
-                    req.plan, req.labels, req.stats, Theta, seconds,
-                    "joint_admm", routed=self.route, fallbacks=fallbacks,
-                    assemble_seconds=engine.last_assemble_seconds,
+            with _req_scope(req):
+                t0 = time.perf_counter()
+                Theta, fallbacks = engine.solve_plan(
+                    req.plan, req.Ss, output=req.output
                 )
-            )
+                seconds = time.perf_counter() - t0
+                req.future.set_result(
+                    _joint_result(
+                        req.plan, req.labels, req.stats, Theta, seconds,
+                        "joint_admm", routed=self.route, fallbacks=fallbacks,
+                        assemble_seconds=engine.last_assemble_seconds,
+                    )
+                )
         except Exception as e:
             if not req.future.done():
                 req.future.set_exception(e)
+
+    def metrics(self) -> str:
+        """The serving /metrics surface: Prometheus text exposition of the
+        process-global ``repro.obs`` registry — every flat counter
+        ``serve_stats()`` reports (dots sanitized to underscores) plus the
+        labeled ``serve.request_seconds`` histogram, whose ``_bucket`` /
+        ``_sum`` / ``_count`` series give any scraper (or
+        ``REGISTRY.quantile``) per-tenant/SLO/kind p50/p99 server-side."""
+        from repro.obs.metrics import render_prometheus
+
+        return render_prometheus()
 
     def append_rows(self, session: str, Y: np.ndarray) -> Future:
         """Absorb k new data rows into a named session and re-solve.
@@ -842,8 +888,21 @@ class GlassoServer:
                 "submit(DataSpec(X, lam, session=...))"
             )
         bump("serve.session_updates")
+        tr = (
+            Trace(
+                "serve.request", tenant="default", slo="interactive",
+                kind="session", session=session,
+            )
+            if self.options.trace
+            else None
+        )
+        t_admit = time.perf_counter()
         fut: Future = Future()
-        with entry.lock:  # appends on one session are a serial history
+        if tr is not None:
+            fut.trace = tr
+        scope = activate((tr, tr.root_id)) if tr is not None else nullcontext()
+        # appends on one session are a serial history
+        with entry.lock, scope:
             try:
                 prev = None
                 if (
@@ -904,6 +963,13 @@ class GlassoServer:
             except Exception as e:
                 fut.set_exception(e)
             entry.last = fut
+        if tr is not None:
+            tr.finish()
+        REGISTRY.observe(
+            "serve.request_seconds",
+            time.perf_counter() - t_admit,
+            tenant="default", slo="interactive", kind="session",
+        )
         return fut
 
     def _try_fast_path(self, req: GlassoRequest) -> bool:
@@ -922,12 +988,13 @@ class GlassoServer:
         from repro.engine.planner import build_plan_incremental
 
         try:
-            labels, stats = thresholded_components(
-                req.S, req.lam, backend=self.cc_backend
-            )
-            plan, _ = build_plan_incremental(
-                req.S, req.lam, labels, oversize=self.oversize
-            )
+            with span("serve.plan"):
+                labels, stats = thresholded_components(
+                    req.S, req.lam, backend=self.cc_backend
+                )
+                plan, _ = build_plan_incremental(
+                    req.S, req.lam, labels, oversize=self.oversize
+                )
             req.labels, req.stats, req.plan = labels, stats, plan
             return self._solve_if_fastpath(req)
         except Exception as e:  # pragma: no cover - defensive
@@ -1082,13 +1149,14 @@ class GlassoServer:
             if req.plan is not None:  # planned at fast-path admission
                 labels, stats, plan = req.labels, req.stats, req.plan
             else:
-                labels, stats = thresholded_components(
-                    req.S, req.lam, backend=self.cc_backend
-                )
-                plan, _ = build_plan_incremental(
-                    req.S, req.lam, labels, classify_structures=self.route,
-                    oversize=self.oversize,
-                )
+                with _req_scope(req), span("serve.plan"):
+                    labels, stats = thresholded_components(
+                        req.S, req.lam, backend=self.cc_backend
+                    )
+                    plan, _ = build_plan_incremental(
+                        req.S, req.lam, labels, classify_structures=self.route,
+                        oversize=self.oversize,
+                    )
             per_req.append((req, labels, stats, plan))
             for bucket in plan.buckets:
                 route = route_for(bucket.structure) if self.route else "iterative"
@@ -1253,30 +1321,39 @@ class GlassoServer:
         }
         total_cost = sum(costs.values())
         for req, labels, stats, plan in per_req:
-            bucket_sols = [sols_by_bucket[id(b)] for b in plan.buckets]
-            ta = time.perf_counter()
-            if req.output == "sparse":
-                Theta = blocks_mod.assemble_sparse(plan, bucket_sols, req.S)
-            else:
-                Theta = blocks_mod.assemble_dense(plan, bucket_sols, req.S)
-            assemble_seconds = time.perf_counter() - ta
-            bump("engine.assemble_us", int(assemble_seconds * 1e6))
-            share = costs[id(req)] / total_cost if total_cost > 0 else 1.0 / len(per_req)
-            req.future.set_result(
-                _result(
-                    plan, labels, stats, Theta,
-                    seconds * share + assemble_seconds, self.solver,
-                    req.lam, routed=self.route,
-                    oversize=oversize_by_req.get(id(req)),
-                    assemble_seconds=assemble_seconds,
+            # per-request trace scope: the coalesced dispatches above served
+            # MANY requests and stay unattributed (module docstring); only
+            # this request's own assembly lands in its span tree, and
+            # _result's current_trace() attaches the trace to the result
+            with _req_scope(req), span("serve.assemble", output=req.output):
+                bucket_sols = [sols_by_bucket[id(b)] for b in plan.buckets]
+                ta = time.perf_counter()
+                if req.output == "sparse":
+                    Theta = blocks_mod.assemble_sparse(plan, bucket_sols, req.S)
+                else:
+                    Theta = blocks_mod.assemble_dense(plan, bucket_sols, req.S)
+                assemble_seconds = time.perf_counter() - ta
+                bump("engine.assemble_us", int(assemble_seconds * 1e6))
+                share = (
+                    costs[id(req)] / total_cost
+                    if total_cost > 0
+                    else 1.0 / len(per_req)
                 )
-            )
+                req.future.set_result(
+                    _result(
+                        plan, labels, stats, Theta,
+                        seconds * share + assemble_seconds, self.solver,
+                        req.lam, routed=self.route,
+                        oversize=oversize_by_req.get(id(req)),
+                        assemble_seconds=assemble_seconds,
+                    )
+                )
 
 
 def serve_stats() -> dict[str, int | float]:
     """Every counter namespace behind the serving surface, in one view —
-    the complete table (sum vs peak semantics included) lives in the module
-    docstring.  Typed ``int | float``: watermark/derived entries record
+    the complete table (sum vs peak semantics included) lives in DESIGN.md
+    Section 17.  Typed ``int | float``: watermark/derived entries record
     maxima or ratios rather than event sums and are not guaranteed
     integral, so consumers must not assume ``int``."""
     return {
@@ -1336,6 +1413,23 @@ def main():
     print(f"{len(results)} requests in {dt:.2f}s ({len(results)/dt:.1f} req/s)")
     print("serve counters:", serve_stats())
     print("compiled cache:", compiled_cache_stats())
+    # the /metrics surface: show the labeled latency histogram summary lines
+    # (full exposition = GlassoServer.metrics(); registry is process-global,
+    # so reading it after stop() is fine)
+    hist = [
+        ln
+        for ln in server.metrics().splitlines()
+        if ln.startswith("serve_request_seconds_")
+        and ("_sum{" in ln or "_count{" in ln)
+    ]
+    print("metrics (serve_request_seconds):")
+    for ln in hist:
+        print(" ", ln)
+    if results and results[0].trace is not None:
+        print(
+            "trace (req 0):",
+            {k: round(v, 6) for k, v in results[0].trace.stage_seconds().items()},
+        )
 
 
 if __name__ == "__main__":

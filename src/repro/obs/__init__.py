@@ -1,0 +1,41 @@
+"""Observability layer: request-scoped tracing + labeled metrics.
+
+``repro.obs.trace`` — span tracer with explicit cross-thread context
+propagation; produces per-request :class:`Trace` trees exportable to
+Chrome trace-event JSON (Perfetto) and compact dicts.
+
+``repro.obs.metrics`` — process-global :class:`MetricsRegistry` with
+counter/gauge/histogram families (labels: tenant/slo/route/kind),
+log-spaced latency buckets, and Prometheus text exposition.  The legacy
+``core/instrument.py`` counter namespace is a shim over this registry.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    LATENCY_BUCKETS_S,
+    REGISTRY,
+    MetricsRegistry,
+    render_prometheus,
+)
+from repro.obs.trace import (  # noqa: F401
+    Span,
+    Trace,
+    activate,
+    context_token,
+    current_trace,
+    span,
+    trace_request,
+)
+
+__all__ = [
+    "Span",
+    "Trace",
+    "trace_request",
+    "span",
+    "current_trace",
+    "context_token",
+    "activate",
+    "MetricsRegistry",
+    "REGISTRY",
+    "LATENCY_BUCKETS_S",
+    "render_prometheus",
+]

@@ -32,6 +32,7 @@ import numpy as np
 from repro.core.instrument import tail_counts
 from repro.engine.api import GlassoResult
 from repro.engine.options import EngineOptions
+from repro.obs.trace import span, trace_request
 from repro.select.criteria import CovSource, ebic_score
 from repro.select.grid import lambda_grid, normalize_lambda_grid
 from repro.select.homotopy import homotopy_path
@@ -121,49 +122,73 @@ def select_path(
         raise ValueError(
             f"criterion must be one of {CRITERIA}, got {criterion!r}"
         )
+    from contextlib import nullcontext
+
     copts = dict(criterion_opts or {})
-    lams = _resolve_grid(grid, S, X, stream)
-
-    warm_before = tail_counts("select.warm.")
-    results = homotopy_path(
-        S, X=X, lambdas=lams, options=options, stream=stream, output=output
+    trace_ctx = (
+        trace_request("select.path", criterion=criterion)
+        if (options is None or options.trace)
+        else nullcontext()
     )
-    warm = {
-        k: v - warm_before.get(k, 0)
-        for k, v in tail_counts("select.warm.").items()
-        if v - warm_before.get(k, 0)
-    }
+    with trace_ctx:
+        with span("select.grid"):
+            lams = _resolve_grid(grid, S, X, stream)
 
-    detail: dict = {}
-    if criterion == "ebic":
-        n_obs = int(np.asarray(X).shape[0]) if X is not None else n
-        if n_obs is None:
-            raise ValueError(
-                "EBIC needs the sample count: pass n= with a covariance input"
-            )
-        g = float(copts.pop("gamma", gamma))
-        if copts:
-            raise TypeError(f"unknown EBIC criterion_opts: {sorted(copts)}")
-        src = CovSource(S=S) if S is not None else CovSource(X=X)
-        scores = [ebic_score(r, src, n_obs, gamma=g) for r in results]
-        selected = int(np.argmin(scores))
-        detail = {"gamma": g, "n": int(n_obs)}
-    elif criterion == "cv":
-        if X is None:
-            raise ValueError("criterion 'cv' resamples rows and needs X=")
-        from repro.select.cv import kfold_cv
+        warm_before = tail_counts("select.warm.")
+        results = homotopy_path(
+            S, X=X, lambdas=lams, options=options, stream=stream,
+            output=output,
+        )
+        warm = {
+            k: v - warm_before.get(k, 0)
+            for k, v in tail_counts("select.warm.").items()
+            if v - warm_before.get(k, 0)
+        }
 
-        out = kfold_cv(X, lams, options=options, stream=stream, **copts)
-        scores, selected = out["scores"], out["selected_index"]
-        detail = {k: v for k, v in out.items() if k not in ("scores", "selected_index")}
-    else:  # stars
-        if X is None:
-            raise ValueError("criterion 'stars' resamples rows and needs X=")
-        from repro.select.stability import stars
+        detail: dict = {}
+        with span("select.score", criterion=criterion):
+            if criterion == "ebic":
+                n_obs = int(np.asarray(X).shape[0]) if X is not None else n
+                if n_obs is None:
+                    raise ValueError(
+                        "EBIC needs the sample count: pass n= with a "
+                        "covariance input"
+                    )
+                g = float(copts.pop("gamma", gamma))
+                if copts:
+                    raise TypeError(
+                        f"unknown EBIC criterion_opts: {sorted(copts)}"
+                    )
+                src = CovSource(S=S) if S is not None else CovSource(X=X)
+                scores = [ebic_score(r, src, n_obs, gamma=g) for r in results]
+                selected = int(np.argmin(scores))
+                detail = {"gamma": g, "n": int(n_obs)}
+            elif criterion == "cv":
+                if X is None:
+                    raise ValueError(
+                        "criterion 'cv' resamples rows and needs X="
+                    )
+                from repro.select.cv import kfold_cv
 
-        out = stars(X, lams, options=options, stream=stream, **copts)
-        scores, selected = out["scores"], out["selected_index"]
-        detail = {k: v for k, v in out.items() if k not in ("scores", "selected_index")}
+                out = kfold_cv(X, lams, options=options, stream=stream, **copts)
+                scores, selected = out["scores"], out["selected_index"]
+                detail = {
+                    k: v for k, v in out.items()
+                    if k not in ("scores", "selected_index")
+                }
+            else:  # stars
+                if X is None:
+                    raise ValueError(
+                        "criterion 'stars' resamples rows and needs X="
+                    )
+                from repro.select.stability import stars
+
+                out = stars(X, lams, options=options, stream=stream, **copts)
+                scores, selected = out["scores"], out["selected_index"]
+                detail = {
+                    k: v for k, v in out.items()
+                    if k not in ("scores", "selected_index")
+                }
 
     report = SelectionReport(
         criterion=criterion,

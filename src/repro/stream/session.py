@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.instrument import bump
 from repro.core.screening import ScreenStats
+from repro.obs.trace import span
 from repro.kernels.covgram_screen import (
     compact_edges,
     covgram_screen_tiles,
@@ -125,7 +126,9 @@ class DataSession:
         """Absorb k new data rows; re-screen only the tiles whose
         certificate the perturbation bound cannot clear.  Thread-safe:
         concurrent appends serialize on the session lock."""
-        with self._lock:
+        with self._lock, span(
+            "session.append_rows", k=int(np.atleast_2d(np.asarray(Y)).shape[0])
+        ):
             return self._append_rows_locked(Y)
 
     def _append_rows_locked(self, Y: np.ndarray) -> SessionUpdate:
